@@ -1,0 +1,47 @@
+"""Roofline benchmark: reads the dry-run artifacts (artifacts/dryrun/)
+and reports the three roofline terms + bottleneck per (arch × shape).
+Run ``python -m repro.launch.dryrun --all [--unroll]`` first; this bench
+prefers unrolled artifacts (cost fidelity) and falls back to scan ones.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+ART = os.path.join(os.path.dirname(__file__), "..", "artifacts", "dryrun")
+
+
+def load_artifacts():
+    recs = {}
+    for path in sorted(glob.glob(os.path.join(ART, "*.json"))):
+        r = json.load(open(path))
+        if not r.get("ok"):
+            continue
+        key = (r["arch"], r["shape"])
+        unrolled = r["mesh"].endswith("-unrolled")
+        multi = r["mesh"].startswith("2x")
+        if multi:
+            continue   # roofline table is single-pod
+        # prefer unrolled artifacts for cost fidelity
+        if key not in recs or unrolled:
+            recs[key] = r
+    return recs
+
+
+def run(report):
+    recs = load_artifacts()
+    if not recs:
+        report("roofline_artifacts_found", 0.0,
+               "run `python -m repro.launch.dryrun --all --unroll` first")
+        return
+    for (arch, shape), r in sorted(recs.items()):
+        t = r["roofline"]
+        dom = {"compute": t["compute_s"], "memory": t["memory_s"],
+               "collective": t["collective_s"]}
+        report(f"{arch}.{shape}.bottleneck_s", max(dom.values()),
+               f"{t['bottleneck']} "
+               f"(c={t['compute_s']:.2e} m={t['memory_s']:.2e} "
+               f"n={t['collective_s']:.2e}) useful={t['useful_ratio']:.2f} "
+               f"[{r['mesh']}]")
+    report("roofline_artifacts_found", float(len(recs)), "single-pod pairs")

@@ -1,0 +1,34 @@
+"""Experiment 2 (paper Fig. 3): computation time of DP / greedy / random
+vs number of candidate clients (budget proportional to n, as in the
+paper)."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import (linear_cost, overall_score, select_dp, select_greedy,
+                        select_random)
+
+
+def _time(fn, reps=5):
+    ts = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        fn()
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts)) * 1e6   # us
+
+
+def run(report):
+    rng = np.random.default_rng(0)
+    for n in (50, 100, 200, 400, 800):
+        scores = overall_score(rng.uniform(0, 1, (n, 11)))
+        costs = linear_cost(scores, 2, 5, integer=True)
+        B = 10.0 * n                      # proportional budget (paper)
+        t_dp = _time(lambda: select_dp(scores, costs, B), reps=3)
+        t_gr = _time(lambda: select_greedy(scores, costs, B))
+        t_rnd = _time(lambda: select_random(scores, costs, B, rng))
+        report(f"time_us_dp_n{n}", t_dp, "O(nB)")
+        report(f"time_us_greedy_n{n}", t_gr, "O(n log n)")
+        report(f"time_us_random_n{n}", t_rnd, "O(n)")

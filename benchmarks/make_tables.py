@@ -1,0 +1,84 @@
+"""Render EXPERIMENTS.md §Dry-run / §Roofline tables from the dry-run
+artifacts. Usage: PYTHONPATH=src:. python -m benchmarks.make_tables"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+ART = os.path.join(os.path.dirname(__file__), "..", "artifacts", "dryrun")
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def load(mesh_filter=None, opt=None):
+    recs = {}
+    for path in sorted(glob.glob(os.path.join(ART, "*.json"))):
+        r = json.load(open(path))
+        mesh = r["mesh"]
+        is_opt = "-opt" in mesh
+        base = mesh.split("-")[0]
+        if mesh_filter and base != mesh_filter:
+            continue
+        if opt is not None and is_opt != opt:
+            continue
+        recs[(r["arch"], r["shape"])] = r
+    return recs
+
+
+def gib(b):
+    return b / 2 ** 30
+
+
+def fmt_mem(r):
+    m = r.get("memory", {})
+    tot = m.get("argument_size_in_bytes", 0) + m.get("temp_size_in_bytes", 0) \
+        - m.get("alias_size_in_bytes", 0)
+    return f"{gib(tot):.1f}"
+
+
+def roofline_table(recs):
+    lines = ["| arch | shape | bytes/dev GiB | FLOPs/dev | compute s | memory s | collective s | bottleneck | useful |",
+             "|---|---|---|---|---|---|---|---|---|"]
+    for (arch, shape) in sorted(recs, key=lambda k: (k[0], SHAPE_ORDER.index(k[1]))):
+        r = recs[(arch, shape)]
+        if not r["ok"]:
+            lines.append(f"| {arch} | {shape} | FAIL | {r.get('error','')[:40]} | | | | | |")
+            continue
+        t = r["roofline"]
+        lines.append(
+            f"| {arch} | {shape} | {fmt_mem(r)} | {t['flops']:.2e} | "
+            f"{t['compute_s']:.2e} | {t['memory_s']:.2e} | "
+            f"{t['collective_s']:.2e} | **{t['bottleneck']}** | "
+            f"{t['useful_ratio']:.2f} |")
+    return "\n".join(lines)
+
+
+def dryrun_table(recs):
+    lines = ["| arch | shape | mesh | compile s | bytes/dev GiB | collective bytes/dev | dominant collective |",
+             "|---|---|---|---|---|---|---|"]
+    for (arch, shape) in sorted(recs, key=lambda k: (k[0], SHAPE_ORDER.index(k[1]))):
+        r = recs[(arch, shape)]
+        if not r["ok"]:
+            lines.append(f"| {arch} | {shape} | {r['mesh']} | FAIL | | | {r.get('error','')[:60]} |")
+            continue
+        cb = r["collectives"]["bytes"]
+        dom = max(cb, key=cb.get) if any(cb.values()) else "-"
+        lines.append(
+            f"| {arch} | {shape} | {r['mesh']} | {r.get('compile_s','')} | "
+            f"{fmt_mem(r)} | {r['roofline']['coll_bytes']:.2e} | {dom} |")
+    return "\n".join(lines)
+
+
+def main():
+    single = load("16x16", opt=False)
+    multi = load("2x16x16", opt=False)
+    print("## Single-pod (16x16) roofline baseline\n")
+    print(roofline_table(single))
+    print(f"\n{sum(r['ok'] for r in single.values())}/{len(single)} ok\n")
+    print("## Multi-pod (2x16x16) dry-run\n")
+    print(dryrun_table(multi))
+    print(f"\n{sum(r['ok'] for r in multi.values())}/{len(multi)} ok")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,10 @@
+"""Serving example: batched prefill + decode across several assigned
+architectures (reduced variants), including a recurrent-state arch —
+the CPU-scale version of what decode_32k / long_500k lower at scale.
+
+Run:  PYTHONPATH=src python examples/serve_decode.py
+"""
+from repro.launch.serve import serve
+
+for arch in ("smollm-360m", "hymba-1.5b", "xlstm-125m", "whisper-large-v3"):
+    serve(arch, batch=2, prompt_len=24, new_tokens=8)

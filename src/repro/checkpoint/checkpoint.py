@@ -1,0 +1,106 @@
+"""Pytree checkpointing: msgpack + zstd, with step rotation.
+
+Layout: <dir>/step_<n>.ckpt, each file a zstd-compressed msgpack map
+{treedef_json, leaves: [{dtype, shape, data}]}. Arrays round-trip
+exactly (raw little-endian bytes); bfloat16 is stored via uint16 view.
+Restore targets an example pytree (for structure) or the stored
+structure alone.
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+
+import jax
+import jax.numpy as jnp
+import msgpack
+import numpy as np
+import zstandard
+
+
+def _leaf_to_record(x) -> dict:
+    arr = np.asarray(x)
+    if arr.dtype == jnp.bfloat16:
+        return {"dtype": "bfloat16", "shape": list(arr.shape),
+                "data": arr.view(np.uint16).tobytes()}
+    return {"dtype": str(arr.dtype), "shape": list(arr.shape),
+            "data": arr.tobytes()}
+
+
+def _record_to_leaf(rec: dict):
+    shape = tuple(rec["shape"])
+    if rec["dtype"] == "bfloat16":
+        raw = np.frombuffer(rec["data"], np.uint16).reshape(shape)
+        return jnp.asarray(raw).view(jnp.bfloat16)
+    return jnp.asarray(np.frombuffer(rec["data"],
+                                     np.dtype(rec["dtype"])).reshape(shape))
+
+
+def _paths(tree):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    keys = ["/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                     for k in path) for path, _ in flat]
+    return keys, [leaf for _, leaf in flat], treedef
+
+
+def save(path: str, tree) -> None:
+    keys, leaves, _ = _paths(tree)
+    payload = {"keys": keys, "leaves": [_leaf_to_record(x) for x in leaves]}
+    packed = msgpack.packb(payload, use_bin_type=True)
+    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    tmp = path + ".tmp"
+    with open(tmp, "wb") as f:
+        f.write(zstandard.ZstdCompressor(level=3).compress(packed))
+    os.replace(tmp, path)  # atomic
+
+
+def restore(path: str, like):
+    """Restore into the structure of ``like`` (keys must match)."""
+    with open(path, "rb") as f:
+        packed = zstandard.ZstdDecompressor().decompress(f.read())
+    payload = msgpack.unpackb(packed, raw=False)
+    keys, like_leaves, treedef = _paths(like)
+    stored = dict(zip(payload["keys"], payload["leaves"]))
+    missing = [k for k in keys if k not in stored]
+    if missing:
+        raise KeyError(f"checkpoint missing keys: {missing[:5]}...")
+    leaves = [_record_to_leaf(stored[k]) for k in keys]
+    for k, new, old in zip(keys, leaves, like_leaves):
+        if tuple(new.shape) != tuple(np.shape(old)):
+            raise ValueError(f"shape mismatch at {k}: "
+                             f"{new.shape} vs {np.shape(old)}")
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+class CheckpointManager:
+    """step-numbered checkpoints with rotation."""
+
+    def __init__(self, directory: str, keep: int = 3):
+        self.directory = directory
+        self.keep = keep
+        os.makedirs(directory, exist_ok=True)
+
+    def _step_path(self, step: int) -> str:
+        return os.path.join(self.directory, f"step_{step:08d}.ckpt")
+
+    def steps(self) -> list[int]:
+        out = []
+        for f in os.listdir(self.directory):
+            m = re.fullmatch(r"step_(\d+)\.ckpt", f)
+            if m:
+                out.append(int(m.group(1)))
+        return sorted(out)
+
+    def save(self, step: int, tree) -> str:
+        p = self._step_path(step)
+        save(p, tree)
+        for old in self.steps()[:-self.keep]:
+            os.remove(self._step_path(old))
+        return p
+
+    def restore_latest(self, like):
+        steps = self.steps()
+        if not steps:
+            raise FileNotFoundError(f"no checkpoints in {self.directory}")
+        return steps[-1], restore(self._step_path(steps[-1]), like)

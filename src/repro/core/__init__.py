@@ -1,0 +1,30 @@
+"""Core library: the paper's client selection + scheduling contribution."""
+from .criteria import (CRITERIA, NUM_CRITERIA, ClientProfile, build_profiles,
+                       cosine_similarity, data_dist_score, linear_cost, nid,
+                       nid_hellinger, nid_kl, nid_l2, overall_score,
+                       random_profiles, resource_scores)
+from .fairness import (bounded_participation, coverage, fairness_report,
+                       jain_index, over_selection_fraction)
+from .mkp import MKPResult, solve_mkp, solve_mkp_bnb, solve_mkp_greedy
+from .reputation import ReputationRecord, ReputationTracker, model_quality_batch
+from .scheduling import (ScheduleResult, default_capacities, generate_subsets,
+                         participation_weights, random_subsets, subset_nid)
+from .selection import (SelectionResult, budget_floor, select_dp,
+                        select_greedy, select_initial_pool, select_random,
+                        threshold_filter)
+from .service import FLServiceProvider, RoundLog, ServiceRunResult, TaskRequest
+
+__all__ = [
+    "CRITERIA", "NUM_CRITERIA", "ClientProfile", "build_profiles",
+    "cosine_similarity", "data_dist_score", "linear_cost", "nid",
+    "nid_hellinger", "nid_kl", "nid_l2", "overall_score", "random_profiles",
+    "resource_scores", "bounded_participation", "coverage", "fairness_report",
+    "jain_index", "over_selection_fraction", "MKPResult", "solve_mkp",
+    "solve_mkp_bnb", "solve_mkp_greedy", "ReputationRecord",
+    "ReputationTracker", "model_quality_batch", "ScheduleResult",
+    "default_capacities", "generate_subsets", "participation_weights",
+    "random_subsets", "subset_nid", "SelectionResult", "budget_floor",
+    "select_dp", "select_greedy", "select_initial_pool", "select_random",
+    "threshold_filter", "FLServiceProvider", "RoundLog", "ServiceRunResult",
+    "TaskRequest",
+]

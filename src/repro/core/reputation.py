@@ -1,0 +1,110 @@
+"""Reputation tracking and pool maintenance (paper §V-B steps 2-4).
+
+Per-round model quality q_t = sim(w_l, w_g) (Eq. in §IV-C) and behavior
+b_t ∈ {0,1} (Eq. 4) are recorded for each participating client; per-task
+values are the averages over participated rounds (Eqs. 3/5); the
+reputation score is s_rep = q_task + b_task.
+
+``update_pool`` implements step 4 of the scheduling period:
+  - remove clients unavailable in the next period;
+  - remove clients with bad reputation in the current period (suspend);
+  - re-add clients whose suspension has expired.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Mapping
+
+import numpy as np
+
+from .criteria import cosine_similarity, per_task_average
+
+
+@dataclasses.dataclass
+class ReputationRecord:
+    q_rounds: list = dataclasses.field(default_factory=list)   # per-round q_t
+    b_rounds: list = dataclasses.field(default_factory=list)   # per-round b_t
+    suspended_until: int = -1    # period index until which the client is out
+
+    @property
+    def q_task(self) -> float:
+        return per_task_average(self.q_rounds)
+
+    @property
+    def b_task(self) -> float:
+        return per_task_average(self.b_rounds)
+
+    @property
+    def s_rep(self) -> float:
+        """s_rep = q_task + b_task (paper §V-B)."""
+        return self.q_task + self.b_task
+
+
+class ReputationTracker:
+    """Tracks per-round scores within one FL task and maintains the pool."""
+
+    def __init__(self, client_ids, suspension_periods: int = 1,
+                 rep_threshold: float = 0.5):
+        self.records: dict[int, ReputationRecord] = {
+            int(k): ReputationRecord() for k in client_ids}
+        self.suspension_periods = int(suspension_periods)
+        self.rep_threshold = float(rep_threshold)
+        self.period = 0
+
+    # -- step 2: per-round updates -----------------------------------------
+    def record_round(self, client_id: int, returned: bool,
+                     local_update=None, global_update=None,
+                     q_value: float | None = None) -> None:
+        """Record one round's participation for one client.
+
+        q_t is the cosine similarity between the client's local update and
+        the aggregated global update (computed by the caller or here from
+        the raw vectors); on a dropped round (returned=False) q_t
+        contributes 0 and b_t = 0 per Eq. (4).
+        """
+        rec = self.records[int(client_id)]
+        rec.b_rounds.append(1.0 if returned else 0.0)
+        if not returned:
+            rec.q_rounds.append(0.0)
+            return
+        if q_value is None:
+            if local_update is None or global_update is None:
+                raise ValueError("need q_value or (local_update, global_update)")
+            q_value = cosine_similarity(local_update, global_update)
+        rec.q_rounds.append(float(q_value))
+
+    # -- steps 3-4: period rollover -----------------------------------------
+    def update_pool(self, pool: set[int],
+                    availability: Mapping[int, bool] | None = None) -> set[int]:
+        """End-of-period pool update. Returns the new active pool."""
+        availability = availability or {}
+        self.period += 1
+        new_pool = set()
+        for cid, rec in self.records.items():
+            if rec.suspended_until >= self.period:
+                continue  # still suspended
+            if not availability.get(cid, True):
+                continue  # unavailable next period (comes back when available)
+            participated = cid in pool and len(rec.b_rounds) > 0
+            if participated and rec.s_rep < self.rep_threshold:
+                rec.suspended_until = self.period + self.suspension_periods - 1
+                continue  # bad reputation: suspend
+            new_pool.add(cid)
+        return new_pool
+
+    def scores(self) -> dict[int, float]:
+        return {cid: rec.s_rep for cid, rec in self.records.items()}
+
+
+def model_quality_batch(local_updates: np.ndarray,
+                        global_update: np.ndarray) -> np.ndarray:
+    """Vectorized q_t for a round: cosine(local_k, global) for each k.
+
+    local_updates: (K, P) flattened client updates; global_update: (P,).
+    """
+    L = np.asarray(local_updates, dtype=np.float64)
+    g = np.asarray(global_update, dtype=np.float64).ravel()
+    ln = np.linalg.norm(L, axis=1)
+    gn = np.linalg.norm(g)
+    denom = np.maximum(ln * gn, 1e-12)
+    return (L @ g) / denom

@@ -1,0 +1,201 @@
+"""Stage 2: per-round client scheduling (paper §V-B, §VI-B, Algorithm 1).
+
+``generate_subsets`` implements Algorithm 1 *Generate Subsets*: the pool
+is partitioned into subsets — one per round of a scheduling period — by
+solving a sequence of MKPs (one knapsack per class label, client
+histograms as weights), with the paper's two heuristics:
+
+- **Nid improvement**: if a subset's integrated Nid exceeds a threshold,
+  previously-selected clients that still have selection budget (< x*)
+  and data in the under-filled classes are added back as *compensation*
+  candidates and the subset is re-selected.
+- **Complementary knapsacks**: to enforce a minimum subset size (or to
+  absorb a too-small tail pool), the already-chosen clients become
+  *mandatory*; a second MKP is solved over the other eligible clients
+  with capacities reduced by the mandatory fill (Fig. 2).
+
+Guarantees (paper §VII, checked by tests/test_fairness.py):
+  every pooled client appears in >= 1 subset; no client appears in more
+  than x* subsets; subset sizes lie in [min(n-δ, pool tail), n+δ].
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import numpy as np
+
+from .criteria import nid
+from .mkp import solve_mkp, MKPResult
+
+
+@dataclasses.dataclass
+class ScheduleResult:
+    subsets: list[list[int]]            # client ids per round
+    nids: list[float]                   # integrated Nid per subset
+    counts: dict[int, int]              # participation count per client id
+    capacities: np.ndarray              # knapsack capacities used
+
+    @property
+    def num_rounds(self) -> int:
+        return len(self.subsets)
+
+    def max_nid(self) -> float:
+        return max(self.nids) if self.nids else 0.0
+
+
+def subset_nid(histograms: dict[int, np.ndarray], subset: Sequence[int]) -> float:
+    """Nid of the 'integrated' dataset: Nid(sum of member histograms)."""
+    if not subset:
+        return 1.0
+    h = np.sum([histograms[k] for k in subset], axis=0)
+    return float(nid(h))
+
+
+def default_capacities(histograms: dict[int, np.ndarray], n: int) -> np.ndarray:
+    """Paper §VIII-C: one capacity for all knapsacks, set so that across
+    the T = |S|/n expected rounds the knapsacks can accommodate the data
+    of the maximum (most abundant) class in the pool."""
+    total = np.sum(list(histograms.values()), axis=0)
+    T = max(1, int(np.ceil(len(histograms) / max(n, 1))))
+    cap = float(np.ceil(total.max() / T))
+    return np.full(total.shape, cap)
+
+
+def _solve_subset(pool_ids: list[int], histograms, capacities, max_size) -> list[int]:
+    """One MKP (Eq. 13): value = |h_k|_1 (client data size), weights = h_k."""
+    if not pool_ids:
+        return []
+    W = np.stack([histograms[k] for k in pool_ids])
+    v = W.sum(axis=1)
+    res: MKPResult = solve_mkp(v, W, capacities, max_size=max_size)
+    return [pool_ids[j] for j in res.selected]
+
+
+def _underfilled(histograms, subset, capacities, frac: float) -> np.ndarray:
+    fill = np.sum([histograms[k] for k in subset], axis=0) if subset else \
+        np.zeros_like(capacities)
+    return fill < frac * capacities
+
+
+def _complementary(mandatory: list[int], candidates: list[int], histograms,
+                   capacities, max_extra: int) -> list[int]:
+    """Complementary-knapsacks trick (Fig. 2): capacities minus the
+    mandatory fill become the new knapsack capacities; select from
+    ``candidates`` to fill the available space."""
+    fill = np.sum([histograms[k] for k in mandatory], axis=0) if mandatory else \
+        np.zeros_like(capacities)
+    residual = np.maximum(capacities - fill, 0.0)
+    extra = _solve_subset(candidates, histograms, residual, max_extra)
+    return mandatory + extra
+
+
+def generate_subsets(
+    histograms: dict[int, np.ndarray],
+    n: int,
+    delta: int,
+    x_star: int = 3,
+    nid_threshold: float = 0.35,
+    fill_frac: float = 0.6,
+    capacities: np.ndarray | None = None,
+) -> ScheduleResult:
+    """Algorithm 1 *Generate Subsets*.
+
+    Args:
+      histograms: client_id -> (c,) label histogram (the client pool S).
+      n, delta: desired subset size and tolerance (sizes in [n-δ, n+δ]).
+      x_star: max times a client may be selected per scheduling period.
+      nid_threshold: trigger for the Nid-improvement pass.
+      fill_frac: a knapsack is 'under-filled' when below this fraction.
+      capacities: optional explicit knapsack capacities (else §VIII-C rule).
+    """
+    ids = sorted(histograms.keys())
+    if not ids:
+        return ScheduleResult([], [], {}, np.zeros(0))
+    histograms = {k: np.asarray(histograms[k], dtype=np.float64) for k in ids}
+    caps = default_capacities(histograms, n) if capacities is None \
+        else np.asarray(capacities, dtype=np.float64)
+
+    counts = {k: 0 for k in ids}
+    remaining = set(ids)
+    subsets: list[list[int]] = []
+    min_size, max_size = max(1, n - delta), n + delta
+
+    def eligible_compensation(exclude: set[int]) -> list[int]:
+        # previously-selected clients with selection budget left
+        return [k for k in ids
+                if k not in remaining and k not in exclude and counts[k] < x_star]
+
+    while remaining:
+        rem_list = sorted(remaining)
+        if len(rem_list) >= min_size:
+            subset = _solve_subset(rem_list, histograms, caps, max_size)
+            if not subset:
+                # no single client fits the capacities: force the smallest
+                # remaining client so the algorithm always progresses.
+                smallest = min(rem_list, key=lambda k: histograms[k].sum())
+                subset = [smallest]
+            # -- Nid improvement (compensation clients) --
+            if subset_nid(histograms, subset) > nid_threshold:
+                under = _underfilled(histograms, subset, caps, fill_frac)
+                if np.any(under):
+                    comp = [k for k in eligible_compensation(set(subset))
+                            if histograms[k][under].sum() > 0]
+                    if comp:
+                        resel = _solve_subset(sorted(set(rem_list) | set(comp)),
+                                              histograms, caps, max_size)
+                        # keep the re-selection only if it covers >=1 remaining
+                        # client (progress) and improves Nid
+                        if (set(resel) & remaining
+                                and subset_nid(histograms, resel)
+                                < subset_nid(histograms, subset)):
+                            subset = resel
+            # -- enforce minimum size via mandatory clients + complementary --
+            if len(subset) < min_size:
+                pool2 = [k for k in rem_list if k not in subset]
+                comp = eligible_compensation(set(subset))
+                candidates = pool2 + comp
+                subset = _complementary(subset, candidates, histograms, caps,
+                                        max_extra=max_size - len(subset))
+                # if still short, pad greedily with smallest remaining clients
+                # (size constraint beats Nid, per the paper's relaxation)
+                for k in sorted(pool2, key=lambda k: histograms[k].sum()):
+                    if len(subset) >= min_size:
+                        break
+                    if k not in subset:
+                        subset.append(k)
+        else:
+            # too few clients left: select all + complementary knapsacks
+            subset = list(rem_list)
+            comp = eligible_compensation(set(subset))
+            if len(subset) < max_size and comp:
+                subset = _complementary(subset, comp, histograms, caps,
+                                        max_extra=max_size - len(subset))
+
+        subsets.append(sorted(subset))
+        for k in subset:
+            counts[k] += 1
+        remaining -= set(subset)
+
+    nids = [subset_nid(histograms, s) for s in subsets]
+    return ScheduleResult(subsets, nids, counts, caps)
+
+
+def random_subsets(histograms: dict[int, np.ndarray], n: int,
+                   rng: np.random.Generator) -> ScheduleResult:
+    """Baseline: random partition into subsets of size n (paper Fig. 4
+    right half / 'random selection' learning curves)."""
+    ids = list(histograms.keys())
+    rng.shuffle(ids)
+    subsets = [sorted(ids[i:i + n]) for i in range(0, len(ids), n)]
+    nids = [subset_nid({k: np.asarray(histograms[k], dtype=np.float64)
+                        for k in histograms}, s) for s in subsets]
+    counts = {k: 1 for k in histograms}
+    return ScheduleResult(subsets, nids, counts, np.zeros(0))
+
+
+def participation_weights(histograms: dict[int, np.ndarray],
+                          subset: Sequence[int]) -> np.ndarray:
+    """FedAvg p_k = n_k / sum n_k over the round's subset (paper §III)."""
+    sizes = np.array([np.sum(histograms[k]) for k in subset], dtype=np.float64)
+    return sizes / np.maximum(sizes.sum(), 1e-12)

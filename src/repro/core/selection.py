@@ -1,0 +1,190 @@
+"""Stage 1: initial client pool selection (paper §V-A, §VI-A).
+
+After threshold filtering (Eq. 8d) and the budget-floor check (Eq. 11),
+the problem is a 0-1 knapsack (Eq. 12): maximize total Score subject to
+total Cost <= B. We provide:
+
+- ``select_greedy``  — the paper's O(n log n) score/cost-ratio greedy;
+- ``select_dp``      — exact dynamic programming, O(n·B) (integer costs);
+- ``select_random``  — the paper's random baseline;
+
+plus the full Stage-1 wrapper ``select_initial_pool`` implementing the
+threshold filter and minimum-pool-size feasibility check.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import numpy as np
+
+from .criteria import THRESHOLDED, ClientProfile
+
+
+@dataclasses.dataclass
+class SelectionResult:
+    selected: list[int]          # client ids, in selection order
+    total_score: float
+    total_cost: float
+    feasible: bool = True
+    note: str = ""
+
+    def approx_ratio(self, optimal_score: float) -> float:
+        """Paper's 'approximation ratio': relative gap to the optimum."""
+        if optimal_score <= 0:
+            return 0.0
+        return (optimal_score - self.total_score) / optimal_score
+
+
+def _totals(ids: Sequence[int], scores, costs) -> tuple[float, float]:
+    idx = list(ids)
+    return float(np.sum(scores[idx])) if idx else 0.0, \
+        float(np.sum(costs[idx])) if idx else 0.0
+
+
+# ---------------------------------------------------------------------------
+# Knapsack solvers
+# ---------------------------------------------------------------------------
+
+def select_greedy(scores: np.ndarray, costs: np.ndarray, budget: float,
+                  ids: Sequence[int] | None = None,
+                  skip_unaffordable: bool = False) -> SelectionResult:
+    """Greedy by non-increasing score/cost ratio (§VI-A).
+
+    With ``skip_unaffordable=False`` (paper-faithful, reproduces Table III:
+    5 clients / 32.78) the scan stops at the first client whose cost
+    exceeds the remaining budget. ``skip_unaffordable=True`` is the
+    beyond-paper variant that keeps scanning for cheaper clients further
+    down the ratio order — it dominates the paper's variant pointwise
+    (recorded in EXPERIMENTS.md §Perf/control-plane).
+    """
+    scores = np.asarray(scores, dtype=np.float64)
+    costs = np.asarray(costs, dtype=np.float64)
+    ids = list(range(len(scores))) if ids is None else list(ids)
+    ratio = scores / np.maximum(costs, 1e-12)
+    order = np.argsort(-ratio, kind="stable")
+    chosen: list[int] = []
+    remaining = float(budget)
+    for j in order:
+        c = float(costs[j])
+        if c <= remaining:
+            chosen.append(j)
+            remaining -= c
+        elif not skip_unaffordable:
+            break
+    ts, tc = _totals(chosen, scores, costs)
+    return SelectionResult([ids[j] for j in chosen], ts, tc)
+
+
+def select_dp(scores: np.ndarray, costs: np.ndarray, budget: float,
+              ids: Sequence[int] | None = None) -> SelectionResult:
+    """Exact 0-1 knapsack DP, O(n·B). Costs are rounded to integers
+    (the paper rounds costs to the nearest integer for convenience)."""
+    scores = np.asarray(scores, dtype=np.float64)
+    icosts = np.rint(np.asarray(costs, dtype=np.float64)).astype(np.int64)
+    if np.any(icosts < 0):
+        raise ValueError("negative costs")
+    ids = list(range(len(scores))) if ids is None else list(ids)
+    B = int(np.floor(budget))
+    n = len(scores)
+    # dp[b] = best score with capacity b; keep[i] = bitset over capacities
+    dp = np.zeros(B + 1, dtype=np.float64)
+    keep = np.zeros((n, B + 1), dtype=bool)
+    for i in range(n):
+        c, s = int(icosts[i]), float(scores[i])
+        if c > B:
+            continue
+        cand = dp[: B - c + 1] + s
+        upd = cand > dp[c:]
+        keep[i, c:][upd] = True
+        dp[c:][upd] = cand[upd]
+    # backtrack
+    b = int(np.argmax(dp))
+    chosen: list[int] = []
+    for i in range(n - 1, -1, -1):
+        if keep[i, b]:
+            chosen.append(i)
+            b -= int(icosts[i])
+    chosen.reverse()
+    ts, tc = _totals(chosen, scores, np.asarray(costs, dtype=np.float64))
+    return SelectionResult([ids[j] for j in chosen], ts, tc)
+
+
+def select_random(scores: np.ndarray, costs: np.ndarray, budget: float,
+                  rng: np.random.Generator,
+                  ids: Sequence[int] | None = None) -> SelectionResult:
+    """Random baseline: add random clients until the budget is short.
+
+    Matches the paper: "randomly selects clients until the budget is
+    short" — i.e. stops at the first client that does not fit.
+    """
+    scores = np.asarray(scores, dtype=np.float64)
+    costs = np.asarray(costs, dtype=np.float64)
+    ids = list(range(len(scores))) if ids is None else list(ids)
+    order = rng.permutation(len(scores))
+    chosen: list[int] = []
+    remaining = float(budget)
+    for j in order:
+        if costs[j] > remaining:
+            break
+        chosen.append(int(j))
+        remaining -= float(costs[j])
+    ts, tc = _totals(chosen, scores, costs)
+    return SelectionResult([ids[j] for j in chosen], ts, tc)
+
+
+# ---------------------------------------------------------------------------
+# Full Stage-1 pipeline
+# ---------------------------------------------------------------------------
+
+def threshold_filter(profiles: Sequence[ClientProfile],
+                     thresholds: np.ndarray | None) -> list[ClientProfile]:
+    """Eq. (8d): keep clients whose thresholded criterion scores all meet
+    the per-criterion minimums s_th (the paper thresholds s_1..s_9)."""
+    if thresholds is None:
+        return list(profiles)
+    th = np.asarray(thresholds, dtype=np.float64)
+    kept = []
+    for p in profiles:
+        if np.all(p.scores[list(THRESHOLDED)] >= th[: len(THRESHOLDED)]):
+            kept.append(p)
+    return kept
+
+
+def budget_floor(profiles: Sequence[ClientProfile], n_star: int) -> float:
+    """Eq. (11): minimal budget = sum of the top-n* costs among filtered
+    clients, guaranteeing the |S| >= n* constraint is satisfiable."""
+    costs = sorted((p.cost for p in profiles), reverse=True)
+    return float(sum(costs[:n_star]))
+
+
+def select_initial_pool(
+    profiles: Sequence[ClientProfile],
+    budget: float,
+    n_star: int = 1,
+    thresholds: np.ndarray | None = None,
+    method: str = "greedy",
+    rng: np.random.Generator | None = None,
+) -> SelectionResult:
+    """Stage 1 end-to-end: filter -> feasibility -> knapsack (Eq. 12)."""
+    filtered = threshold_filter(profiles, thresholds)
+    if len(filtered) < n_star:
+        return SelectionResult([], 0.0, 0.0, feasible=False,
+                               note=f"only {len(filtered)} clients pass thresholds, need {n_star}")
+    scores = np.array([p.score for p in filtered])
+    costs = np.array([p.cost for p in filtered])
+    ids = [p.client_id for p in filtered]
+    if method == "greedy":
+        res = select_greedy(scores, costs, budget, ids)
+    elif method == "dp":
+        res = select_dp(scores, costs, budget, ids)
+    elif method == "random":
+        res = select_random(scores, costs, budget,
+                            rng or np.random.default_rng(0), ids)
+    else:
+        raise ValueError(f"unknown method {method!r}")
+    if len(res.selected) < n_star:
+        res.feasible = False
+        res.note = (f"budget {budget} selects only {len(res.selected)} < n*={n_star} "
+                    f"clients; Eq.(11) floor is {budget_floor(filtered, n_star):.1f}")
+    return res

@@ -1,0 +1,139 @@
+"""FL service provider orchestration (paper §III Fig. 1).
+
+Ties the two stages together the way the deployed service would run
+them: task intake -> stage-1 pool selection -> repeated scheduling
+periods (stage-2 subset generation + reputation-driven pool updates)
+until the training driver reports convergence or the round budget is
+exhausted.
+
+The actual model training is injected as a callback so the same
+orchestration drives the paper's CNN experiments, the LM federated runs
+and unit tests with stub trainers.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Mapping, Sequence
+
+import numpy as np
+
+from .criteria import ClientProfile
+from .reputation import ReputationTracker
+from .scheduling import (ScheduleResult, generate_subsets,
+                         participation_weights, random_subsets)
+from .selection import SelectionResult, select_initial_pool
+
+
+@dataclasses.dataclass
+class TaskRequest:
+    """An FL task as submitted by a task requester."""
+    budget: float
+    n_star: int = 1                       # minimum pool size (Eq. 8c)
+    thresholds: np.ndarray | None = None  # per-criterion minimums (Eq. 8d)
+    subset_size: int = 10                 # n
+    subset_delta: int = 3                 # δ
+    x_star: int = 3                       # max selections per period
+    max_periods: int = 20
+    rep_threshold: float = 0.5
+    suspension_periods: int = 1
+    scheduler: str = "mkp"                # "mkp" (ours) | "random" (baseline)
+    nid_threshold: float = 0.35
+    seed: int = 0
+
+
+@dataclasses.dataclass
+class RoundLog:
+    period: int
+    round_index: int
+    subset: list[int]
+    weights: np.ndarray
+    nid: float
+    metrics: dict
+
+
+@dataclasses.dataclass
+class ServiceRunResult:
+    pool: SelectionResult
+    rounds: list[RoundLog]
+    schedules: list[ScheduleResult]
+    reputation: dict[int, float]
+
+    @property
+    def num_rounds(self) -> int:
+        return len(self.rounds)
+
+
+# A trainer callback runs one FL round for the given subset and returns
+# (per-client returned flags, per-client q_t values, metrics dict).
+TrainerFn = Callable[[int, Sequence[int], np.ndarray], tuple[np.ndarray, np.ndarray, dict]]
+
+
+class FLServiceProvider:
+    """Client registry + the two-stage selection/scheduling pipeline."""
+
+    def __init__(self, profiles: Sequence[ClientProfile]):
+        self.registry: dict[int, ClientProfile] = {p.client_id: p for p in profiles}
+
+    # -- Stage 1 -------------------------------------------------------------
+    def select_pool(self, task: TaskRequest, method: str = "greedy",
+                    rng: np.random.Generator | None = None) -> SelectionResult:
+        return select_initial_pool(
+            list(self.registry.values()), budget=task.budget, n_star=task.n_star,
+            thresholds=task.thresholds, method=method, rng=rng)
+
+    # -- Stage 2 (one period) --------------------------------------------------
+    def schedule_period(self, pool_ids: Sequence[int], task: TaskRequest,
+                        rng: np.random.Generator) -> ScheduleResult:
+        hists = {k: self.registry[k].histogram for k in pool_ids}
+        if task.scheduler == "random":
+            return random_subsets(hists, task.subset_size, rng)
+        return generate_subsets(hists, n=task.subset_size, delta=task.subset_delta,
+                                x_star=task.x_star, nid_threshold=task.nid_threshold)
+
+    # -- Full service loop -----------------------------------------------------
+    def run_task(self, task: TaskRequest, trainer: TrainerFn,
+                 availability_fn: Callable[[int, int], bool] | None = None,
+                 stop_fn: Callable[[dict], bool] | None = None,
+                 method: str = "greedy") -> ServiceRunResult:
+        """Run stage 1 then scheduling periods until stop/max_periods.
+
+        availability_fn(client_id, period) -> bool models clients going
+        offline (paper: conflicting schedules / battery / network).
+        """
+        rng = np.random.default_rng(task.seed)
+        pool_sel = self.select_pool(task, method=method, rng=rng)
+        if not pool_sel.feasible:
+            return ServiceRunResult(pool_sel, [], [], {})
+        pool = set(pool_sel.selected)
+        tracker = ReputationTracker(pool_sel.selected,
+                                    suspension_periods=task.suspension_periods,
+                                    rep_threshold=task.rep_threshold)
+        rounds: list[RoundLog] = []
+        schedules: list[ScheduleResult] = []
+        global_round = 0
+        for period in range(task.max_periods):
+            if not pool:
+                break
+            sched = self.schedule_period(sorted(pool), task, rng)
+            schedules.append(sched)
+            hists = {k: self.registry[k].histogram for k in pool}
+            stop = False
+            for t, subset in enumerate(sched.subsets):
+                w = participation_weights(hists, subset)
+                returned, q_vals, metrics = trainer(global_round, subset, w)
+                for i, cid in enumerate(subset):
+                    tracker.record_round(cid, bool(returned[i]),
+                                         q_value=float(q_vals[i]))
+                rounds.append(RoundLog(period, global_round, list(subset), w,
+                                       sched.nids[t], metrics))
+                global_round += 1
+                if stop_fn is not None and stop_fn(metrics):
+                    stop = True
+                    break
+            avail = {cid: (availability_fn(cid, period + 1)
+                           if availability_fn else True)
+                     for cid in tracker.records}
+            pool = tracker.update_pool(pool, avail) & set(pool_sel.selected)
+            if stop:
+                break
+        return ServiceRunResult(pool_sel, rounds, schedules, tracker.scores())

@@ -1,0 +1,2 @@
+from .synthetic import (ClassificationData, LMData, histogram,
+                        make_classification_data, make_lm_data)

@@ -1,0 +1,5 @@
+from .partition import (client_histograms, dirichlet_partition,
+                        partition_labels)
+from .round import make_fedsgd_step, make_fl_round, tree_weighted_sum
+from .simulation import (FLClassificationSim, SimConfig,
+                         profiles_from_partition, run_fl_experiment)

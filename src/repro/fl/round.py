@@ -1,0 +1,161 @@
+"""Federated rounds in JAX — two scales (DESIGN.md §4):
+
+- ``make_fl_round``: true FedAvg semantics at simulation scale — every
+  scheduled client gets its own parameter copy (vmap over the client
+  axis), runs E local SGD steps, and the server aggregates weighted
+  deltas (Pallas ``fedavg_agg`` on TPU) and applies the server LR
+  (paper §III: w_{t+1} = w_t − η Δ_t).
+
+- ``make_fedsgd_step``: datacenter-scale one-local-step equivalent —
+  per-client weights fold into the loss so a single data-parallel
+  backward implements the paper's weighted aggregation exactly; this is
+  the ``train_step`` that the multi-pod dry-run lowers.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops as kops
+from repro.optim import apply_updates, sgd
+
+
+def tree_sub(a, b):
+    return jax.tree_util.tree_map(lambda x, y: x - y, a, b)
+
+
+def tree_weighted_sum(trees_stacked, weights, use_kernel: bool = False):
+    """Σ_k w_k · leaf[k] for every leaf with leading client axis K."""
+    if use_kernel:
+        return kops.fedavg_agg_tree(trees_stacked, weights)
+    return jax.tree_util.tree_map(
+        lambda leaf: jnp.tensordot(weights.astype(jnp.float32),
+                                   leaf.astype(jnp.float32), axes=1
+                                   ).astype(leaf.dtype),
+        trees_stacked)
+
+
+def make_fl_round(loss_fn: Callable, local_lr: float = 0.05,
+                  local_steps: int = 1, server_lr: float = 1.0,
+                  use_agg_kernel: bool = False):
+    """Build a jit'd FedAvg round.
+
+    loss_fn(params, batch) -> (loss, metrics). Client batches arrive
+    stacked: every leaf (K, local_steps, ...). Returns
+    round_fn(params, client_batches, weights, mask) -> (params, info)
+    where ``mask`` (K,) zeroes out dropped clients (behavior b_t = 0) and
+    info carries per-client deltas' cosine-to-global q_t (paper §IV-C).
+    """
+    opt = sgd(local_lr)
+
+    def client_update(params, batches):
+        """E local steps; returns (delta, mean_loss)."""
+        state = opt.init(params)
+
+        def step(carry, batch):
+            p, s = carry
+            (loss, _), grads = jax.value_and_grad(loss_fn, has_aux=True)(p, batch)
+            upd, s = opt.update(grads, s, p)
+            return (apply_updates(p, upd), s), loss
+
+        (new_params, _), losses = jax.lax.scan(step, (params, state), batches)
+        return tree_sub(params, new_params), losses.mean()
+
+    @jax.jit
+    def round_fn(params, client_batches, weights, mask):
+        deltas, losses = jax.vmap(client_update, in_axes=(None, 0))(
+            params, client_batches)
+        w = weights * mask
+        w = w / jnp.maximum(w.sum(), 1e-9)
+        agg = tree_weighted_sum(deltas, w, use_agg_kernel)
+        new_params = jax.tree_util.tree_map(
+            lambda p, d: (p - server_lr * d).astype(p.dtype), params, agg)
+
+        # per-client model quality q_t = cos(delta_k, agg) (paper §IV-C)
+        def dot(a, b):
+            return sum(jnp.vdot(x.astype(jnp.float32), y.astype(jnp.float32))
+                       for x, y in zip(jax.tree_util.tree_leaves(a),
+                                       jax.tree_util.tree_leaves(b)))
+
+        def cos_one(k):
+            dk = jax.tree_util.tree_map(lambda leaf: leaf[k], deltas)
+            num = dot(dk, agg)
+            na = jnp.sqrt(dot(dk, dk))
+            nb = jnp.sqrt(dot(agg, agg))
+            return num / jnp.maximum(na * nb, 1e-12)
+        q = jax.vmap(cos_one)(jnp.arange(mask.shape[0]))
+        info = {"client_losses": losses, "q_values": q * mask,
+                "mean_loss": jnp.sum(losses * w)}
+        return new_params, info
+
+    return round_fn
+
+
+def make_fedsgd_step(loss_fn: Callable, optimizer, microbatches: int = 1,
+                     unroll_microbatches: bool = False):
+    """Datacenter-scale train_step (the dry-run target).
+
+    batch carries per-example ``weights`` = p_{k(example)} / examples_of_k,
+    so the weighted CE gradient equals the paper's Δ_t = Σ_k p_k Δ_t^(k)
+    for one local step. Sharding in/out specs come from sharding/specs.py.
+
+    ``microbatches > 1`` (§Perf): gradient accumulation — the global batch
+    splits along dim0 into M microbatches scanned sequentially; live
+    activation memory shrinks ~M× at the cost of f32 grad-accumulator
+    state. Weighted-loss semantics are preserved by accumulating
+    (Σ w·loss, Σ w)-weighted grads. ``unroll_microbatches`` uses a Python
+    loop instead of lax.scan (dry-run cost fidelity).
+    """
+
+    def grads_of(params, batch):
+        (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+            params, batch)
+        return loss, metrics, grads
+
+    def train_step(params, opt_state, batch):
+        if microbatches <= 1:
+            loss, metrics, grads = grads_of(params, batch)
+        else:
+            split = jax.tree_util.tree_map(
+                lambda x: x.reshape(microbatches, x.shape[0] // microbatches,
+                                    *x.shape[1:]), batch)
+            w_tot = jnp.maximum(batch.get(
+                "weights", jnp.ones(())).sum(), 1e-9)
+
+            def one(mb):
+                loss, metrics, grads = grads_of(params, mb)
+                # per-microbatch loss is weight-normalized inside loss_fn;
+                # re-scale so the accumulated grad matches the full batch.
+                scale = (mb["weights"].sum() / w_tot) if "weights" in mb \
+                    else 1.0 / microbatches
+                grads = jax.tree_util.tree_map(
+                    lambda g: g.astype(jnp.float32) * scale, grads)
+                return loss * scale, grads
+
+            if unroll_microbatches:
+                loss = 0.0
+                grads = None
+                for i in range(microbatches):
+                    mb = jax.tree_util.tree_map(lambda x: x[i], split)
+                    l, g = one(mb)
+                    loss = loss + l
+                    grads = g if grads is None else jax.tree_util.tree_map(
+                        jnp.add, grads, g)
+            else:
+                def body(acc, mb):
+                    l, g = one(mb)
+                    return (acc[0] + l,
+                            jax.tree_util.tree_map(jnp.add, acc[1], g)), None
+                zero = (jnp.zeros((), jnp.float32),
+                        jax.tree_util.tree_map(
+                            lambda p: jnp.zeros(p.shape, jnp.float32), params))
+                (loss, grads), _ = jax.lax.scan(body, zero, split)
+            metrics = {"loss": loss}
+        updates, opt_state = optimizer.update(grads, opt_state, params)
+        params = apply_updates(params, updates)
+        return params, opt_state, metrics
+
+    return train_step

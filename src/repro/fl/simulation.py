@@ -1,0 +1,139 @@
+"""End-to-end FL simulation: glues core.service (selection/scheduling)
+to real JAX training (fl.round) over partitioned synthetic data —
+the machinery behind the paper's Figs. 5/6 experiments.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (ClientProfile, FLServiceProvider, TaskRequest,
+                        build_profiles)
+from repro.core.criteria import NUM_CRITERIA, data_dist_score, overall_score, linear_cost
+from repro.data.synthetic import ClassificationData
+from repro.fl.partition import client_histograms
+from repro.fl.round import make_fl_round
+from repro.models import cnn
+
+
+@dataclasses.dataclass
+class SimConfig:
+    batch_size: int = 16
+    local_steps: int = 2
+    local_lr: float = 0.1
+    server_lr: float = 1.0
+    dropout_rate: float = 0.05        # paper: 5% of clients drop per period
+    eval_every: int = 5
+    seed: int = 0
+
+
+def profiles_from_partition(labels, parts, num_classes,
+                            seed: int = 0) -> list[ClientProfile]:
+    """Client profiles whose data criteria come from the real partition
+    and whose resource criteria are random (paper §VIII-A)."""
+    rng = np.random.default_rng(seed)
+    hists = client_histograms(labels, parts, num_classes)
+    n = len(parts)
+    scores = rng.uniform(0.3, 1.0, size=(n, NUM_CRITERIA))
+    H = np.stack([hists[i] for i in range(n)])
+    sizes = H.sum(axis=1)
+    scores[:, 7] = sizes / max(sizes.max(), 1)
+    scores[:, 8] = data_dist_score(H)
+    costs = linear_cost(overall_score(scores), 2.0, 5.0, integer=True)
+    return build_profiles(scores, H, costs)
+
+
+class FLClassificationSim:
+    """Federated CNN training over a partitioned synthetic dataset."""
+
+    def __init__(self, model_cfg: cnn.CNNConfig, data: ClassificationData,
+                 parts: list[np.ndarray], test: ClassificationData,
+                 sim: SimConfig = SimConfig()):
+        self.cfg = model_cfg
+        self.data = data
+        self.parts = parts
+        self.test = test
+        self.sim = sim
+        self.rng = np.random.default_rng(sim.seed)
+        self.params = cnn.init_params(model_cfg, jax.random.PRNGKey(sim.seed))
+        self.round_fn = make_fl_round(
+            lambda p, b: cnn.loss_fn(model_cfg, p, b),
+            local_lr=sim.local_lr, local_steps=sim.local_steps,
+            server_lr=sim.server_lr)
+        self._eval_fn = jax.jit(
+            lambda p, images, labels: (cnn.forward(model_cfg, p, images)
+                                       .argmax(-1) == labels).mean())
+        self.history: list[dict] = []
+        self.dropped_this_round: set[int] = set()
+
+    # -- batching -----------------------------------------------------------
+    def _client_batches(self, subset):
+        E, b = self.sim.local_steps, self.sim.batch_size
+        imgs, labs = [], []
+        for cid in subset:
+            idx = self.parts[cid]
+            take = self.rng.choice(idx, size=E * b, replace=len(idx) < E * b)
+            imgs.append(self.data.images[take].reshape(E, b, *self.data.images.shape[1:]))
+            labs.append(self.data.labels[take].reshape(E, b))
+        return {"images": jnp.asarray(np.stack(imgs)),
+                "labels": jnp.asarray(np.stack(labs))}
+
+    def evaluate(self, n: int = 1024) -> float:
+        idx = self.rng.choice(len(self.test.labels), size=min(n, len(self.test.labels)),
+                              replace=False)
+        return float(self._eval_fn(self.params,
+                                   jnp.asarray(self.test.images[idx]),
+                                   jnp.asarray(self.test.labels[idx])))
+
+    # -- TrainerFn for core.service.FLServiceProvider -----------------------
+    def trainer(self, rnd: int, subset, weights) -> tuple:
+        K = len(subset)
+        drop = self.rng.uniform(size=K) < self.sim.dropout_rate
+        if drop.all():
+            drop[self.rng.integers(K)] = False
+        batches = self._client_batches(subset)
+        mask = jnp.asarray((~drop).astype(np.float32))
+        self.params, info = self.round_fn(self.params, batches,
+                                          jnp.asarray(weights), mask)
+        metrics = {"round": rnd, "loss": float(info["mean_loss"])}
+        if rnd % self.sim.eval_every == 0:
+            metrics["accuracy"] = self.evaluate()
+        self.history.append(metrics)
+        q = np.asarray(info["q_values"])
+        return (~drop), q, metrics
+
+
+def run_fl_experiment(kind: str, noniid: str, n_clients: int = 100,
+                      rounds: int = 30, scheduler: str = "mkp",
+                      n_train: int = 6000, n_test: int = 1500,
+                      subset_size: int = 10, sim: SimConfig = SimConfig(),
+                      seed: int = 0) -> dict:
+    """One learning-curve run (paper Figs. 5/6): returns history + config."""
+    from repro.data.synthetic import make_classification_data
+    from repro.fl.partition import partition_labels
+
+    # one generation pass -> shared class prototypes; split train/test
+    full = make_classification_data(kind, n_train + n_test, seed=seed)
+    data = full.subset(np.arange(n_train))
+    test = full.subset(np.arange(n_train, n_train + n_test))
+    parts = partition_labels(data.labels, n_clients, noniid,
+                             data.num_classes, seed=seed)
+    profiles = profiles_from_partition(data.labels, parts, data.num_classes,
+                                       seed=seed)
+    provider = FLServiceProvider(profiles)
+    model_cfg = cnn.MNIST_CNN if kind == "mnist" else cnn.CIFAR_CNN
+    simul = FLClassificationSim(model_cfg, data, parts, test, sim)
+
+    task = TaskRequest(budget=1e9, n_star=n_clients, subset_size=subset_size,
+                       subset_delta=3, x_star=3, max_periods=10_000,
+                       scheduler=scheduler, seed=seed)
+    result = provider.run_task(
+        task, simul.trainer,
+        stop_fn=lambda m: m["round"] + 1 >= rounds)
+    return {"history": simul.history, "service": result,
+            "final_accuracy": simul.evaluate(), "scheduler": scheduler,
+            "noniid": noniid, "kind": kind}

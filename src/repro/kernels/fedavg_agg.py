@@ -1,0 +1,57 @@
+"""Fused FedAvg aggregation Pallas kernel.
+
+The paper's server-side aggregation Δ_t = Σ_k p_k · Δ_t^(k) is a
+bandwidth-bound weighted reduction over K client updates. The kernel
+tiles the flattened parameter axis into VMEM-sized blocks; the client
+axis is the in-register reduction dimension, weights live in SMEM-like
+a (1,K) block, accumulation in f32 regardless of the update dtype.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _agg_kernel(w_ref, u_ref, o_ref):
+    u = u_ref[...].astype(jnp.float32)                 # (K, bp)
+    w = w_ref[...].astype(jnp.float32)                 # (1, K)
+    acc = jax.lax.dot(w, u, preferred_element_type=jnp.float32)  # (1, bp)
+    o_ref[...] = acc[0].astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_p", "interpret"))
+def fedavg_agg(updates, weights, *, block_p: int = 16_384,
+               interpret: bool = False):
+    """updates: (K, P) flattened client updates; weights: (K,) p_k.
+
+    Returns (P,) = Σ_k p_k updates_k (dtype of updates, f32 accumulate).
+    """
+    K, P = updates.shape
+    bp = min(block_p, P)
+    w2 = weights.reshape(1, K)
+    return pl.pallas_call(
+        _agg_kernel,
+        grid=(pl.cdiv(P, bp),),
+        in_specs=[pl.BlockSpec((1, K), lambda i: (0, 0)),
+                  pl.BlockSpec((K, bp), lambda i: (0, i))],
+        out_specs=pl.BlockSpec((bp,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((P,), updates.dtype),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel",)),
+        interpret=interpret,
+    )(w2, updates)
+
+
+def fedavg_agg_tree(updates_tree, weights, *, interpret: bool = False):
+    """Tree version: aggregates a pytree whose leaves have a leading
+    client axis K. Flattens, runs the kernel per leaf, restores shapes."""
+    def agg_leaf(leaf):
+        K = leaf.shape[0]
+        flat = leaf.reshape(K, -1)
+        return fedavg_agg(flat, weights, interpret=interpret).reshape(
+            leaf.shape[1:])
+    return jax.tree_util.tree_map(agg_leaf, updates_tree)

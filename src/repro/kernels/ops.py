@@ -1,0 +1,74 @@
+"""Jit'd public wrappers for the Pallas kernels.
+
+Each op dispatches: Pallas kernel on TPU (or in interpret mode when
+``interpret=True``), pure-jnp oracle (ref.py) otherwise — so models can
+call these unconditionally and stay runnable on CPU.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import ref
+from .fedavg_agg import fedavg_agg as _fedavg_pallas
+from .fedavg_agg import fedavg_agg_tree
+from .flash_attention import flash_attention as _flash_pallas
+from .mlstm_scan import mlstm_scan as _mlstm_pallas
+from .rmsnorm import rmsnorm as _rmsnorm_pallas
+from .swiglu import swiglu as _swiglu_pallas
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def flash_attention(q, k, v, *, causal=True, window=0, interpret=None):
+    """q: (B,H,Sq,hd); k/v: (B,G,Sk,hd)."""
+    use_pallas = _on_tpu() if interpret is None else True
+    if use_pallas:
+        return _flash_pallas(q, k, v, causal=causal, window=window,
+                             interpret=bool(interpret))
+    return ref.flash_attention_ref(q, k, v, causal=causal, window=window)
+
+
+def flash_attention_bshd(q, k, v, *, causal=True, window=0, interpret=None):
+    """Adapter for models.layers (B,S,H,hd) layout."""
+    t = lambda x: jnp.swapaxes(x, 1, 2)
+    o = flash_attention(t(q), t(k), t(v), causal=causal, window=window,
+                        interpret=interpret)
+    return jnp.swapaxes(o, 1, 2)
+
+
+def rmsnorm(x, scale, *, eps=1e-6, interpret=None):
+    use_pallas = _on_tpu() if interpret is None else True
+    if use_pallas:
+        return _rmsnorm_pallas(x, scale, eps=eps, interpret=bool(interpret))
+    return ref.rmsnorm_ref(x, scale, eps=eps)
+
+
+def swiglu(x, w_gate, w_up, *, interpret=None):
+    use_pallas = _on_tpu() if interpret is None else True
+    if use_pallas:
+        return _swiglu_pallas(x, w_gate, w_up, interpret=bool(interpret))
+    return ref.swiglu_ref(x, w_gate, w_up)
+
+
+def fedavg_agg(updates, weights, *, interpret=None):
+    use_pallas = _on_tpu() if interpret is None else True
+    if use_pallas:
+        return _fedavg_pallas(updates, weights, interpret=bool(interpret))
+    return ref.fedavg_agg_ref(updates, weights)
+
+
+def mlstm_scan(q, k, v, log_f, log_i=None, *, chunk=64, normalize=True,
+               interpret=None):
+    use_pallas = _on_tpu() if interpret is None else True
+    if use_pallas:
+        return _mlstm_pallas(q, k, v, log_f, log_i, chunk=chunk,
+                             normalize=normalize, interpret=bool(interpret))
+    return ref.mlstm_scan_ref(q, k, v, log_f, log_i, chunk=chunk,
+                              normalize=normalize)
+
+
+__all__ = ["flash_attention", "flash_attention_bshd", "rmsnorm", "swiglu",
+           "fedavg_agg", "fedavg_agg_tree", "mlstm_scan"]

@@ -1,0 +1,79 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Each ``*_ref`` matches the corresponding kernel's semantics exactly and
+is used (a) by tests/test_kernels_*.py for allclose sweeps across
+shapes/dtypes and (b) as the CPU fallback path in ops.py.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+_NEG_INF = -2.0 ** 30
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True, window: int = 0,
+                        scale: float | None = None):
+    """q: (B,H,Sq,hd), k/v: (B,G,Sk,hd) with H % G == 0.
+
+    Returns (B,H,Sq,hd). Softmax in f32, output cast back to q.dtype.
+    """
+    B, H, Sq, hd = q.shape
+    G, Sk = k.shape[1], k.shape[2]
+    rep = H // G
+    scale = hd ** -0.5 if scale is None else scale
+    qf = q.astype(jnp.float32).reshape(B, G, rep, Sq, hd) * scale
+    s = jnp.einsum("bgrqh,bgkh->bgrqk", qf, k.astype(jnp.float32))
+    qpos = jnp.arange(Sq)[:, None]
+    kpos = jnp.arange(Sk)[None, :]
+    mask = jnp.ones((Sq, Sk), bool)
+    if causal:
+        mask &= kpos <= qpos + (Sk - Sq)   # right-aligned when Sq < Sk
+    if window > 0:
+        mask &= kpos > qpos + (Sk - Sq) - window
+    s = jnp.where(mask, s, _NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bgrqk,bgkh->bgrqh", p, v.astype(jnp.float32))
+    return o.reshape(B, H, Sq, hd).astype(q.dtype)
+
+
+def rmsnorm_ref(x, scale, eps: float = 1e-6):
+    """x: (..., D), scale: (D,)."""
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    return (x.astype(jnp.float32) * jax.lax.rsqrt(var + eps)
+            ).astype(x.dtype) * scale
+
+
+def swiglu_ref(x, w_gate, w_up):
+    """x: (M, D), w_gate/w_up: (D, F) -> (M, F): silu(x@Wg) * (x@Wu)."""
+    g = x.astype(jnp.float32) @ w_gate.astype(jnp.float32)
+    u = x.astype(jnp.float32) @ w_up.astype(jnp.float32)
+    return (jax.nn.silu(g) * u).astype(x.dtype)
+
+
+def fedavg_agg_ref(updates, weights):
+    """updates: (K, P) per-client updates, weights: (K,) p_k.
+
+    The paper's aggregation Δ_t = Σ_k p_k Δ_t^(k), f32 accumulation.
+    """
+    acc = jnp.einsum("kp,k->p", updates.astype(jnp.float32),
+                     weights.astype(jnp.float32))
+    return acc.astype(updates.dtype)
+
+
+def mlstm_scan_ref(q, k, v, log_f, log_i, *, chunk: int = 64,
+                   normalize: bool = True):
+    """Chunkwise gated linear attention oracle.
+
+    q,k: (B,H,S,dk), v: (B,H,S,dv), gates: (B,H,S). Returns (B,H,S,dv).
+    Delegates to models.ssm.gated_linear_attention (itself validated
+    against the step recurrence in tests/test_models_core.py).
+    """
+    from repro.models.ssm import gated_linear_attention
+    to_bshd = lambda x: jnp.moveaxis(x, 1, 2)
+    out, _ = gated_linear_attention(
+        to_bshd(q), to_bshd(k), to_bshd(v),
+        jnp.moveaxis(log_f, 1, 2),
+        None if log_i is None else jnp.moveaxis(log_i, 1, 2),
+        chunk=chunk, normalize=normalize)
+    return jnp.moveaxis(out, 1, 2).astype(v.dtype)

@@ -1,0 +1,146 @@
+"""Input specifications for every (architecture × input shape) pair.
+
+``input_specs`` returns weak-type-correct ShapeDtypeStruct stand-ins for
+every model input — shardable, no device allocation — the dry-run's raw
+material. ``make_step`` builds the step function each shape lowers:
+train_4k -> train_step (FedSGD round), prefill_32k -> prefill_step,
+decode_32k / long_500k -> serve_step (one token against a seq_len cache).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.fl.round import make_fedsgd_step
+from repro.models import transformer as T
+from repro.models.common import ModelConfig, model_flops_per_token
+from repro.optim import adam
+
+SHAPES = {
+    #               seq_len  global_batch  kind
+    "train_4k":    (4_096,   256,          "train"),
+    "prefill_32k": (32_768,  32,           "prefill"),
+    "decode_32k":  (32_768,  128,          "decode"),
+    "long_500k":   (524_288, 1,            "decode"),
+}
+
+LONG_WINDOW = 8_192   # generic sliding-window variant for long_500k
+
+
+def shape_config(cfg: ModelConfig, shape: str, *, remat: bool = True) -> ModelConfig:
+    """Per-shape config adjustments (window for long-context, remat for
+    training)."""
+    kind = SHAPES[shape][2]
+    upd = {}
+    if shape == "long_500k" and cfg.family not in ("ssm",):
+        # sub-quadratic rule: windowed attention unless natively recurrent.
+        if not cfg.sliding_window or cfg.sliding_window > LONG_WINDOW:
+            upd["sliding_window"] = LONG_WINDOW
+    if kind == "train" and remat:
+        upd["remat"] = True
+    return dataclasses.replace(cfg, **upd) if upd else cfg
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def batch_specs(cfg: ModelConfig, shape: str) -> dict:
+    """Train-batch ShapeDtypeStructs. For VLM archs the vision prefix
+    occupies part of the sequence budget so total length == seq_len."""
+    S, B, kind = SHAPES[shape]
+    assert kind == "train"
+    S_text = S
+    batch = {}
+    if cfg.family == "vlm" and cfg.frontend_seq:
+        S_text = S - cfg.frontend_seq
+        batch["patch_embeds"] = _sds((B, cfg.frontend_seq, cfg.frontend_dim),
+                                     jnp.float32)
+    if cfg.is_enc_dec:
+        batch["frames"] = _sds((B, cfg.frontend_seq, cfg.frontend_dim),
+                               jnp.float32)
+    batch["tokens"] = _sds((B, S_text), jnp.int32)
+    batch["targets"] = _sds((B, S_text), jnp.int32)
+    batch["weights"] = _sds((B,), jnp.float32)   # federated p_k per example
+    return batch
+
+
+def prefill_specs(cfg: ModelConfig, shape: str) -> dict:
+    S, B, _ = SHAPES[shape]
+    batch = {"tokens": _sds((B, S if cfg.family != "vlm"
+                             else S - cfg.frontend_seq), jnp.int32)}
+    if cfg.family == "vlm" and cfg.frontend_seq:
+        batch["patch_embeds"] = _sds((B, cfg.frontend_seq, cfg.frontend_dim),
+                                     jnp.float32)
+    if cfg.is_enc_dec:
+        batch["frames"] = _sds((B, cfg.frontend_seq, cfg.frontend_dim),
+                               jnp.float32)
+    return batch
+
+
+def decode_specs(cfg: ModelConfig, shape: str) -> tuple:
+    """Returns (batch_specs, cache_specs): one new token against a KV
+    cache of seq_len (ring-buffer of `window` for windowed archs)."""
+    S, B, _ = SHAPES[shape]
+    batch = {"tokens": _sds((B, 1), jnp.int32),
+             "index": _sds((), jnp.int32)}
+    if cfg.is_enc_dec:
+        batch["memory"] = _sds((B, cfg.frontend_seq, cfg.d_model),
+                               cfg.param_dtype)
+    cache = jax.eval_shape(
+        functools.partial(T.init_decode_cache, cfg, B, S))
+    return batch, cache
+
+
+def input_specs(cfg: ModelConfig, shape: str):
+    kind = SHAPES[shape][2]
+    if kind == "train":
+        return {"batch": batch_specs(cfg, shape)}
+    if kind == "prefill":
+        return {"batch": prefill_specs(cfg, shape)}
+    batch, cache = decode_specs(cfg, shape)
+    return {"batch": batch, "cache": cache}
+
+
+# ---------------------------------------------------------------------------
+# Step functions
+# ---------------------------------------------------------------------------
+
+def make_train_step(cfg: ModelConfig, lr: float = 1e-4,
+                    microbatches: int = 1):
+    optimizer = adam(lr, grad_clip=1.0)
+    loss = functools.partial(T.loss_fn, cfg)
+    step = make_fedsgd_step(loss, optimizer, microbatches=microbatches,
+                            unroll_microbatches=cfg.unroll_layers)
+    return step, optimizer
+
+
+def make_prefill_step(cfg: ModelConfig):
+    def prefill_step(params, batch):
+        extras = {k: batch[k] for k in ("patch_embeds", "frames") if k in batch}
+        logits, cache, memory = T.prefill(cfg, params, batch["tokens"], extras)
+        return logits, cache
+    return prefill_step
+
+
+def make_serve_step(cfg: ModelConfig):
+    def serve_step(params, batch, cache):
+        logits, new_cache = T.decode_step(
+            cfg, params, batch["tokens"], cache, batch["index"],
+            memory=batch.get("memory"))
+        return logits, new_cache
+    return serve_step
+
+
+def model_flops_for(cfg: ModelConfig, shape: str) -> float:
+    """MODEL_FLOPS = 6·N·D for training (fwd+bwd), 2·N·D inference."""
+    S, B, kind = SHAPES[shape]
+    per_tok = model_flops_per_token(cfg)       # already includes the 6x
+    if kind == "train":
+        return per_tok * B * S
+    if kind == "prefill":
+        return per_tok / 3.0 * B * S           # forward only: 2·N·D
+    return per_tok / 3.0 * B * 1               # one token per sequence

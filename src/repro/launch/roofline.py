@@ -1,0 +1,108 @@
+"""Roofline-term derivation from compiled dry-run artifacts.
+
+Terms (per device, seconds) on the TPU v5e target:
+  compute    = HLO_FLOPs / peak_FLOPs        (197 TFLOP/s bf16)
+  memory     = HLO_bytes / HBM_bw            (819 GB/s)
+  collective = collective_bytes / link_bw    (~50 GB/s/link ICI)
+
+FLOPs/bytes come from ``compiled.cost_analysis()`` (per-device after
+SPMD). Collective bytes are NOT in cost_analysis: we parse the
+post-partitioning HLO and sum the output shapes of every all-reduce /
+all-gather / reduce-scatter / all-to-all / collective-permute.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+
+PEAK_FLOPS = 197e12        # bf16 per chip
+HBM_BW = 819e9             # bytes/s per chip
+ICI_BW = 50e9              # bytes/s per link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "token": 0, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+COLLECTIVE_KINDS = ("all-reduce", "all-gather", "reduce-scatter",
+                    "all-to-all", "collective-permute")
+
+# e.g.  %all-gather.3 = bf16[16,4096,384]{2,1,0} all-gather(...)
+_OP_RE = re.compile(
+    r"=\s*(?:\(([^)]*)\)|([a-z0-9_]+\[[0-9,]*\](?:\{[^}]*\})?))\s+"
+    r"([a-z-]+)\(", re.I)
+_SHAPE_RE = re.compile(r"([a-z0-9_]+)\[([0-9,]*)\]")
+
+
+def shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(shape_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Sum output bytes per collective kind (incl. -start/-done fusion
+    variants; '-start' counted, '-done' skipped to avoid double counts)."""
+    out = {k: 0 for k in COLLECTIVE_KINDS}
+    counts = {k: 0 for k in COLLECTIVE_KINDS}
+    for line in hlo_text.splitlines():
+        m = _OP_RE.search(line)
+        if not m:
+            continue
+        tuple_shapes, single_shape, opname = m.groups()
+        op = opname.lower()
+        if op.endswith("-start"):
+            op = op[:-6]
+        elif op.endswith("-done"):
+            continue
+        if op not in out:
+            continue
+        shape_str = tuple_shapes if tuple_shapes is not None else single_shape
+        out[op] += shape_bytes(shape_str)
+        counts[op] += 1
+    return {"bytes": out, "counts": counts,
+            "total_bytes": sum(out.values())}
+
+
+@dataclasses.dataclass
+class RooflineTerms:
+    flops: float               # per device
+    hbm_bytes: float           # per device
+    coll_bytes: float          # per device
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    bottleneck: str
+    model_flops_global: float  # 6·N·D (or 2·N·D inference)
+    useful_ratio: float        # model_flops / (hlo_flops × chips)
+
+    def as_dict(self):
+        return dataclasses.asdict(self)
+
+
+def derive_terms(cost: dict, coll: dict, chips: int,
+                 model_flops_global: float) -> RooflineTerms:
+    flops = float(cost.get("flops", 0.0) or 0.0)
+    hbm = float(cost.get("bytes accessed", 0.0) or 0.0)
+    cb = float(coll["total_bytes"])
+    terms = {
+        "compute": flops / PEAK_FLOPS,
+        "memory": hbm / HBM_BW,
+        "collective": cb / ICI_BW,
+    }
+    bottleneck = max(terms, key=terms.get)
+    total_hlo = flops * chips
+    return RooflineTerms(
+        flops=flops, hbm_bytes=hbm, coll_bytes=cb,
+        compute_s=terms["compute"], memory_s=terms["memory"],
+        collective_s=terms["collective"], bottleneck=bottleneck,
+        model_flops_global=model_flops_global,
+        useful_ratio=(model_flops_global / total_hlo) if total_hlo else 0.0)

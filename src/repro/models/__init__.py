@@ -1,0 +1,3 @@
+"""Model zoo: generic transformer stack + paper CNN."""
+from .common import ModelConfig, count_params, model_flops_per_token
+from . import transformer, cnn, layers, moe, ssm

@@ -1,0 +1,82 @@
+"""The paper's experiment model: a small CNN classifier for MNIST-like
+(1x28x28) and CIFAR-like (3x32x32) data (paper §VIII), in pure JAX.
+
+Mirrors the reference repo the paper builds on [14] (two conv blocks +
+two dense layers).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class CNNConfig:
+    name: str = "cnn-mnist"
+    height: int = 28
+    width: int = 28
+    channels: int = 1
+    num_classes: int = 10
+    conv1: int = 16
+    conv2: int = 32
+    hidden: int = 128
+    dtype: str = "float32"
+
+
+MNIST_CNN = CNNConfig()
+CIFAR_CNN = CNNConfig(name="cnn-cifar", height=32, width=32, channels=3,
+                      conv1=32, conv2=64, hidden=256)
+
+
+def init_params(cfg: CNNConfig, key):
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    dt = jnp.dtype(cfg.dtype)
+    h2, w2 = cfg.height // 4, cfg.width // 4         # two 2x2 maxpools
+    flat = h2 * w2 * cfg.conv2
+
+    def conv_init(k, shape):  # HWIO
+        fan_in = shape[0] * shape[1] * shape[2]
+        return (jax.random.normal(k, shape) * (2.0 / fan_in) ** 0.5).astype(dt)
+
+    return {
+        "conv1": {"w": conv_init(k1, (3, 3, cfg.channels, cfg.conv1)),
+                  "b": jnp.zeros(cfg.conv1, dt)},
+        "conv2": {"w": conv_init(k2, (3, 3, cfg.conv1, cfg.conv2)),
+                  "b": jnp.zeros(cfg.conv2, dt)},
+        "fc1": {"w": (jax.random.normal(k3, (flat, cfg.hidden)) * flat ** -0.5).astype(dt),
+                "b": jnp.zeros(cfg.hidden, dt)},
+        "fc2": {"w": (jax.random.normal(k4, (cfg.hidden, cfg.num_classes))
+                      * cfg.hidden ** -0.5).astype(dt),
+                "b": jnp.zeros(cfg.num_classes, dt)},
+    }
+
+
+def _conv_block(x, p):
+    y = jax.lax.conv_general_dilated(
+        x, p["w"], window_strides=(1, 1), padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    y = jax.nn.relu(y + p["b"])
+    return jax.lax.reduce_window(y, -jnp.inf, jax.lax.max, (1, 2, 2, 1),
+                                 (1, 2, 2, 1), "VALID")
+
+
+def forward(cfg: CNNConfig, params, images):
+    """images: (B, H, W, C) -> logits (B, num_classes)."""
+    x = _conv_block(images, params["conv1"])
+    x = _conv_block(x, params["conv2"])
+    x = x.reshape(x.shape[0], -1)
+    x = jax.nn.relu(x @ params["fc1"]["w"] + params["fc1"]["b"])
+    return x @ params["fc2"]["w"] + params["fc2"]["b"]
+
+
+def loss_fn(cfg: CNNConfig, params, batch):
+    """batch: images (B,H,W,C), labels (B,), weights optional (B,)."""
+    logits = forward(cfg, params, batch["images"])
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32))
+    nll = -jnp.take_along_axis(logp, batch["labels"][:, None], axis=1)[:, 0]
+    w = batch.get("weights")
+    loss = nll.mean() if w is None else jnp.sum(nll * w) / jnp.maximum(w.sum(), 1e-9)
+    acc = (logits.argmax(-1) == batch["labels"]).mean()
+    return loss, {"loss": loss, "accuracy": acc}

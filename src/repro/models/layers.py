@@ -1,0 +1,293 @@
+"""Shared neural layers: norms, RoPE, GQA attention (causal / sliding
+window / cross), MLPs. Pure functional JAX; params are plain dicts.
+
+Weight layout conventions (chosen for clean tensor-parallel sharding,
+see sharding/specs.py):
+  wq: (d_model, H, hd)    wk/wv: (d_model, G, hd)    wo: (H, hd, d_model)
+  w_gate/w_up: (d_model, d_ff)    w_down: (d_ff, d_model)
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+_NEG_INF = -2.0 ** 30  # large finite negative (bf16-safe masking)
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def rmsnorm(x, scale, eps: float = 1e-6):
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    return (x * jax.lax.rsqrt(var + eps).astype(x.dtype)) * scale
+
+
+def layernorm(x, scale, bias, eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return y.astype(x.dtype) * scale + bias
+
+
+def apply_norm(cfg, p, x):
+    if cfg.norm == "rmsnorm":
+        return rmsnorm(x, p["scale"])
+    return layernorm(x, p["scale"], p["bias"])
+
+
+# ---------------------------------------------------------------------------
+# Positional encodings
+# ---------------------------------------------------------------------------
+
+def rope_frequencies(head_dim: int, theta: float):
+    return theta ** (-jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim)
+
+
+def apply_rope(x, positions, theta: float):
+    """x: (B, S, H, hd); positions: (B, S) int32."""
+    hd = x.shape[-1]
+    freqs = rope_frequencies(hd, theta)                      # (hd/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (B, S, hd/2)
+    cos = jnp.cos(angles)[:, :, None, :]
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_embedding(seq_len: int, d_model: int, dtype=jnp.float32):
+    pos = jnp.arange(seq_len, dtype=jnp.float32)[:, None]
+    dim = jnp.arange(0, d_model, 2, dtype=jnp.float32)[None, :]
+    angle = pos / jnp.power(10_000.0, dim / d_model)
+    emb = jnp.concatenate([jnp.sin(angle), jnp.cos(angle)], axis=-1)
+    return emb[:, :d_model].astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention
+# ---------------------------------------------------------------------------
+
+def attention_mask(q_positions, k_positions, causal: bool, window: int):
+    """(..., Sq, Sk) boolean mask: True = attend."""
+    qp = q_positions[..., :, None]
+    kp = k_positions[..., None, :]
+    mask = jnp.ones(jnp.broadcast_shapes(qp.shape, kp.shape), dtype=bool)
+    if causal:
+        mask &= kp <= qp
+    if window > 0:
+        mask &= kp > qp - window
+    return mask
+
+
+def dot_product_attention(q, k, v, mask=None, soft_cap: float = 0.0):
+    """q: (B,Sq,H,hd), k/v: (B,Sk,G,hd) with H = G*rep (GQA).
+
+    ``mask`` is boolean, broadcastable to (B, 1, Sq, Sk); True = attend.
+    """
+    B, Sq, H, hd = q.shape
+    G = k.shape[2]
+    rep = H // G
+    qf = q.astype(jnp.float32) * (hd ** -0.5)
+    qf = qf.reshape(B, Sq, G, rep, hd)
+    scores = jnp.einsum("bqgrh,bkgh->bgrqk", qf, k.astype(jnp.float32))
+    if soft_cap > 0:
+        scores = soft_cap * jnp.tanh(scores / soft_cap)
+    if mask is not None:
+        scores = jnp.where(mask[:, :, None], scores, _NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bgrqk,bkgh->bqgrh", probs, v.astype(jnp.float32))
+    return out.reshape(B, Sq, H, hd).astype(q.dtype)
+
+
+def chunked_attention(q, k, v, positions, *, causal: bool, window: int,
+                      soft_cap: float = 0.0, q_chunk: int = 1024):
+    """Q-chunked attention: identical math to dot_product_attention but
+    scores materialize one (B,H,q_chunk,Sk) block at a time (lax.scan over
+    query blocks, jax.checkpoint'd so backward re-materializes per block).
+
+    This is the XLA-level flash-attention fallback used on long sequences
+    when the Pallas kernel isn't available (CPU dry-run / non-TPU), keeping
+    the memory roofline term honest at 32k+ contexts.
+    """
+    B, Sq, H, hd = q.shape
+    C = min(q_chunk, Sq)
+    if Sq % C:
+        pad = C - Sq % C
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        positions = jnp.pad(positions, ((0, 0), (0, pad)),
+                            constant_values=-1)   # padded queries mask all
+    nq = q.shape[1] // C
+    qc = q.reshape(B, nq, C, H, hd).swapaxes(0, 1)            # (nq,B,C,H,hd)
+    pc = positions.reshape(B, nq, C).swapaxes(0, 1)           # (nq,B,C)
+    k_pos = positions[:, :k.shape[1]]
+
+    def block(carry, xs):
+        qb, pb = xs
+        mask = attention_mask(pb, k_pos, causal, window)[:, None]
+        mask &= (pb >= 0)[:, None, :, None]
+        o = dot_product_attention(qb, k, v, mask, soft_cap)
+        return carry, o
+
+    _, outs = jax.lax.scan(jax.checkpoint(block), None, (qc, pc))
+    out = outs.swapaxes(0, 1).reshape(B, nq * C, H, hd)
+    return out[:, :Sq]
+
+
+def qkv_project(p, x):
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dgk->bsgk", x, p["wk"])
+    v = jnp.einsum("bsd,dgk->bsgk", x, p["wv"])
+    return q, k, v
+
+
+def out_project(p, o):
+    return jnp.einsum("bshk,hkd->bsd", o, p["wo"])
+
+
+def build_kv_cache(k, v, positions, window: int = 0):
+    """Build a (ring-buffer) KV cache from prefill K/V.
+
+    k/v: (B, S, G, hd); positions: (B, S). With a sliding ``window`` the
+    cache keeps only the last min(S, window) entries at slot
+    ``pos % window`` (ring layout); otherwise capacity == S at slot = pos.
+    ``pos`` records each slot's absolute position (-1 = empty).
+    """
+    B, S = k.shape[:2]
+    if window <= 0 or window >= S:
+        cap = S if window <= 0 else window
+        pad = cap - S
+        if pad:
+            zeros = lambda x: jnp.pad(x, ((0, 0), (0, pad)) + ((0, 0),) * (x.ndim - 2))
+            k, v = zeros(k), zeros(v)
+            cpos = jnp.concatenate([positions[0],
+                                    jnp.full((pad,), -1, jnp.int32)])
+        else:
+            cpos = positions[0]
+        return {"k": k, "v": v, "pos": cpos}
+    # ring layout: the last `window` tokens, slot = pos % window (unique)
+    kw, vw = k[:, -window:], v[:, -window:]
+    pos = positions[0, -window:]
+    slots = pos % window
+    ck = jnp.zeros((B, window) + k.shape[2:], k.dtype).at[:, slots].set(kw)
+    cv = jnp.zeros((B, window) + v.shape[2:], v.dtype).at[:, slots].set(vw)
+    cpos = jnp.full((window,), -1, jnp.int32).at[slots].set(pos)
+    return {"k": ck, "v": cv, "pos": cpos}
+
+
+def cache_attend(cfg, q, kv_cache, q_positions, window: int,
+                 new_k=None, new_v=None):
+    """Attend queries against a KV cache, optionally inserting this step's
+    K/V first (decode). q: (B,Sq,H,hd); q_positions: (B,Sq)."""
+    ck, cv, cpos = kv_cache["k"], kv_cache["v"], kv_cache["pos"]
+    cap = ck.shape[1]
+    if new_k is not None:
+        wpos = q_positions[0]                       # (Sq,) new absolute pos
+        slots = wpos % cap
+        ck = ck.at[:, slots].set(new_k.astype(ck.dtype))
+        cv = cv.at[:, slots].set(new_v.astype(cv.dtype))
+        cpos = cpos.at[slots].set(wpos)
+    valid = (cpos[None, None, :] >= 0) \
+        & (cpos[None, None, :] <= q_positions[:, :, None])
+    if window > 0:
+        valid &= cpos[None, None, :] > q_positions[:, :, None] - window
+    o = dot_product_attention(q, ck, cv, valid[:, None], cfg.logit_soft_cap)
+    return o, {"k": ck, "v": cv, "pos": cpos}
+
+
+def self_attention(cfg, p, x, positions, *, causal=True, window=None,
+                   kv_cache=None, build_cache=False, flash_fn=None):
+    """Self-attention sublayer.
+
+    Returns (out, cache): cache is None in plain training mode, a fresh
+    cache dict when ``build_cache`` (prefill), or the updated cache when
+    ``kv_cache`` is given (decode).
+    """
+    window = cfg.sliding_window if window is None else window
+    q, k, v = qkv_project(p, x)
+    if cfg.positional == "rope":
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+
+    if kv_cache is not None:   # decode: insert new K/V, attend to cache
+        o, new_cache = cache_attend(cfg, q, kv_cache, positions, window,
+                                    new_k=k, new_v=v)
+        return out_project(p, o), new_cache
+
+    if flash_fn is not None:
+        o = flash_fn(q, k, v, causal=causal, window=window)
+    elif x.shape[1] >= 4096:
+        # long sequences: q-chunked attention (no (S,S) materialization)
+        o = chunked_attention(q, k, v, positions, causal=causal,
+                              window=window, soft_cap=cfg.logit_soft_cap)
+    else:
+        mask = attention_mask(positions, positions, causal, window)[:, None]
+        o = dot_product_attention(q, k, v, mask, cfg.logit_soft_cap)
+    cache = build_kv_cache(k, v, positions, window) if build_cache else None
+    return out_project(p, o), cache
+
+
+def cross_attention(cfg, p, x, memory):
+    """Decoder->encoder attention (whisper). memory: (B, S_enc, D)."""
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dgk->bsgk", memory, p["wk"])
+    v = jnp.einsum("bsd,dgk->bsgk", memory, p["wv"])
+    o = dot_product_attention(q, k, v, mask=None, soft_cap=cfg.logit_soft_cap)
+    return out_project(p, o)
+
+
+# ---------------------------------------------------------------------------
+# MLP
+# ---------------------------------------------------------------------------
+
+def mlp(cfg, p, x, swiglu_fn=None):
+    if cfg.act == "swiglu":
+        if swiglu_fn is not None:
+            h = swiglu_fn(x, p["w_gate"], p["w_up"])
+        else:
+            h = jax.nn.silu(x @ p["w_gate"]) * (x @ p["w_up"])
+    else:  # gelu
+        h = jax.nn.gelu(x @ p["w_up"], approximate=True)
+    return h @ p["w_down"]
+
+
+# ---------------------------------------------------------------------------
+# Init helpers
+# ---------------------------------------------------------------------------
+
+def dense_init(key, shape, dtype, scale=None):
+    fan_in = shape[0] if len(shape) <= 2 else shape[0]
+    scale = scale if scale is not None else fan_in ** -0.5
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+
+def norm_params(cfg):
+    p = {"scale": jnp.ones(cfg.d_model, cfg.param_dtype)}
+    if cfg.norm == "layernorm":
+        p["bias"] = jnp.zeros(cfg.d_model, cfg.param_dtype)
+    return p
+
+
+def attn_params(cfg, key):
+    d, H, G, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    ks = jax.random.split(key, 4)
+    dt = cfg.param_dtype
+    return {
+        "wq": dense_init(ks[0], (d, H, hd), dt),
+        "wk": dense_init(ks[1], (d, G, hd), dt),
+        "wv": dense_init(ks[2], (d, G, hd), dt),
+        "wo": dense_init(ks[3], (H, hd, d), dt, scale=(H * hd) ** -0.5),
+    }
+
+
+def mlp_params(cfg, key, d_ff=None):
+    d = cfg.d_model
+    d_ff = d_ff or cfg.d_ff
+    ks = jax.random.split(key, 3)
+    dt = cfg.param_dtype
+    p = {"w_up": dense_init(ks[1], (d, d_ff), dt),
+         "w_down": dense_init(ks[2], (d_ff, d), dt)}
+    if cfg.act == "swiglu":
+        p["w_gate"] = dense_init(ks[0], (d, d_ff), dt)
+    return p

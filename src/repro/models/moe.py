@@ -1,0 +1,127 @@
+"""Mixture-of-Experts FFN (qwen2-moe: 60e top-4 + 4 shared; llama4-scout:
+16e top-1 + 1 shared).
+
+Token-choice top-k routing with capacity-bounded scatter dispatch — the
+TPU-friendly formulation (DESIGN.md §4): tokens are scattered into a
+dense per-expert buffer (E, C, d) so the expert matmuls are plain
+batched GEMMs that shard cleanly with experts over the "model" mesh
+axis (expert parallelism); overflow tokens are dropped, recovered by the
+residual connection, exactly as in MaxText/Switch. An auxiliary
+load-balance loss (Switch-style) is returned for training.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .layers import dense_init
+
+
+def padded_experts(cfg) -> int:
+    return max(cfg.pad_experts_to, cfg.num_experts)
+
+
+def moe_params(cfg, key):
+    d, E = cfg.d_model, padded_experts(cfg)
+    ff = cfg.moe_d_ff
+    ks = jax.random.split(key, 5)
+    dt = cfg.param_dtype
+    p = {
+        "router": dense_init(ks[0], (d, E), jnp.float32, scale=0.02),
+        "w_gate": dense_init(ks[1], (E, d, ff), dt),
+        "w_up": dense_init(ks[2], (E, d, ff), dt),
+        "w_down": dense_init(ks[3], (E, ff, d), dt),
+    }
+    if cfg.num_shared_experts:
+        sff = cfg.num_shared_experts * ff
+        k1, k2, k3 = jax.random.split(ks[4], 3)
+        p["shared"] = {
+            "w_gate": dense_init(k1, (d, sff), dt),
+            "w_up": dense_init(k2, (d, sff), dt),
+            "w_down": dense_init(k3, (sff, d), dt),
+        }
+    return p
+
+
+def _capacity(tokens: int, num_experts: int, top_k: int, factor: float) -> int:
+    cap = int(tokens * top_k * factor / num_experts)
+    return max(cap, top_k)
+
+
+def moe_ffn(cfg, p, x):
+    """x: (B, S, d). Returns (out, aux_loss)."""
+    B, S, d = x.shape
+    E, K = padded_experts(cfg), cfg.top_k
+    T = B * S
+    xt = x.reshape(T, d)
+
+    logits = (xt.astype(jnp.float32) @ p["router"])         # (T, E)
+    if E > cfg.num_experts:   # padded experts never receive probability
+        pad_mask = jnp.arange(E) >= cfg.num_experts
+        logits = jnp.where(pad_mask, -1e30, logits)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_idx = jax.lax.top_k(probs, K)         # (T, K)
+    gate_vals = gate_vals / jnp.maximum(
+        gate_vals.sum(-1, keepdims=True), 1e-9)             # renormalize top-k
+
+    # Switch-style load-balance auxiliary loss.
+    me = probs.mean(axis=0)                                  # (E,)
+    ce = jnp.zeros(E).at[expert_idx.reshape(-1)].add(1.0) / (T * K)
+    aux = E * jnp.sum(me * ce) * cfg.router_aux_weight
+
+    C = _capacity(T, E, K, cfg.capacity_factor)
+
+    # position of each (token, k) within its expert, via cumsum of one-hot
+    flat_e = expert_idx.reshape(T * K)                       # route-major order
+    onehot = jax.nn.one_hot(flat_e, E, dtype=jnp.int32)      # (TK, E)
+    pos = (jnp.cumsum(onehot, axis=0) - 1)                   # 0-based
+    pos_in_e = jnp.take_along_axis(pos, flat_e[:, None], axis=1)[:, 0]
+    keep = pos_in_e < C
+
+    # scatter tokens into (E, C, d)
+    safe_pos = jnp.where(keep, pos_in_e, C - 1)
+    buf = jnp.zeros((E, C, d), x.dtype)
+    src = jnp.repeat(xt, K, axis=0)                          # (TK, d)
+    src = jnp.where(keep[:, None], src, 0)
+    buf = buf.at[flat_e, safe_pos].add(src, mode="drop")
+
+    # expert FFN: batched GEMMs (E, C, ff)
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", buf, p["w_gate"])) \
+        * jnp.einsum("ecd,edf->ecf", buf, p["w_up"])
+    out_buf = jnp.einsum("ecf,efd->ecd", h, p["w_down"])     # (E, C, d)
+
+    # gather back and combine with gates
+    y = out_buf[flat_e, safe_pos]                            # (TK, d)
+    w = (gate_vals.reshape(T * K) * keep).astype(x.dtype)
+    y = (y * w[:, None]).reshape(T, K, d).sum(axis=1)
+
+    if cfg.num_shared_experts:
+        sp = p["shared"]
+        hs = jax.nn.silu(xt @ sp["w_gate"]) * (xt @ sp["w_up"])
+        y = y + hs @ sp["w_down"]
+
+    return y.reshape(B, S, d), aux
+
+
+def moe_ffn_dense(cfg, p, x):
+    """Oracle: every token through every expert, weighted by its top-k
+    gates (no capacity drops). O(E·T·ff) — tests only."""
+    B, S, d = x.shape
+    E, K = cfg.num_experts, cfg.top_k
+    xt = x.reshape(-1, d)
+    logits = xt.astype(jnp.float32) @ p["router"]
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_idx = jax.lax.top_k(probs, K)
+    gate_vals = gate_vals / jnp.maximum(gate_vals.sum(-1, keepdims=True), 1e-9)
+    full = jnp.zeros((xt.shape[0], E), jnp.float32)
+    for k in range(K):
+        full = full.at[jnp.arange(xt.shape[0]), expert_idx[:, k]].add(gate_vals[:, k])
+    h = jax.nn.silu(jnp.einsum("td,edf->tef", xt, p["w_gate"])) \
+        * jnp.einsum("td,edf->tef", xt, p["w_up"])
+    per_expert = jnp.einsum("tef,efd->ted", h, p["w_down"])
+    y = jnp.einsum("ted,te->td", per_expert, full.astype(x.dtype))
+    if cfg.num_shared_experts:
+        sp = p["shared"]
+        hs = jax.nn.silu(xt @ sp["w_gate"]) * (xt @ sp["w_up"])
+        y = y + hs @ sp["w_down"]
+    return y.reshape(B, S, d)

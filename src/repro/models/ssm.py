@@ -1,0 +1,357 @@
+"""Sequence-state models: chunkwise gated linear attention (mLSTM / SSD),
+sLSTM, and the xLSTM / Hymba block definitions.
+
+TPU adaptation (DESIGN.md §4): GPU selective-scan kernels don't port to
+the MXU; instead we use the *chunkwise-parallel* form — intra-chunk work
+is a small causal attention (MXU-friendly matmuls), inter-chunk state is
+a short ``lax.scan`` over chunk boundaries. Hymba's mamba heads use the
+Mamba-2/SSD simplification (scalar per-head decay), which is exactly the
+same primitive as mLSTM without the input-gate/normalizer machinery.
+
+``gated_linear_attention`` is the pure-jnp oracle mirrored by
+``kernels/mlstm_scan.py``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .layers import dense_init, rmsnorm
+
+
+# ---------------------------------------------------------------------------
+# Chunkwise gated linear attention
+#   S_t = f_t · S_{t-1} + i_t · k_t v_tᵀ         (state  (dk, dv))
+#   n_t = f_t · n_{t-1} + i_t · k_t              (normalizer, mLSTM only)
+#   h_t = (q_tᵀ S_t) / max(|q_tᵀ n_t|, 1)        (mLSTM) or q_tᵀ S_t (SSD)
+# computed with exp-gate stabilization in log space (xLSTM appendix).
+# ---------------------------------------------------------------------------
+
+def gated_linear_attention(q, k, v, log_f, log_i=None, *, chunk: int = 64,
+                           normalize: bool = True, initial_state=None):
+    """q,k: (B,S,H,dk) v: (B,S,H,dv); log_f/log_i: (B,S,H).
+
+    Returns (out (B,S,H,dv), final_state dict{S,n,m}).
+    """
+    B, S, H, dk = q.shape
+    dv = v.shape[-1]
+    if S % chunk:
+        pad = chunk - S % chunk
+        zf = lambda x: jnp.pad(x, [(0, 0), (0, pad)] + [(0, 0)] * (x.ndim - 2))
+        q, k, v, log_f = map(zf, (q, k, v, log_f))
+        if log_i is not None:
+            log_i = zf(log_i)
+        # padded steps must not change state: force f=1 (log 0), i=0 (-inf)
+        mask_t = jnp.arange(q.shape[1])[None, :, None] < S
+        log_f = jnp.where(mask_t, log_f, 0.0)
+        if log_i is None:
+            log_i = jnp.where(mask_t, 0.0, -jnp.inf)
+            log_i = jnp.broadcast_to(log_i, log_f.shape)
+        else:
+            log_i = jnp.where(mask_t, log_i, -jnp.inf)
+    elif log_i is None:
+        log_i = jnp.zeros_like(log_f)
+    Sp = q.shape[1]
+    NC = Sp // chunk
+
+    # (B, NC, C, H, d) -> transpose to (NC, B, H, C, d) for the scan
+    def chunked(x, d_last):
+        x = x.reshape(B, NC, chunk, H, -1) if d_last else x.reshape(B, NC, chunk, H)
+        return jnp.moveaxis(jnp.moveaxis(x, 3, 2), 0, 1)  # (NC,B,H,C,[d])
+
+    qc, kc, vc = chunked(q, True), chunked(k, True), chunked(v, True)
+    fc, ic = chunked(log_f, False), chunked(log_i, False)
+
+    f32 = jnp.float32
+    if initial_state is None:
+        S0 = jnp.zeros((B, H, dk, dv), f32)
+        n0 = jnp.zeros((B, H, dk), f32)
+        m0 = jnp.zeros((B, H), f32)
+    else:
+        S0, n0, m0 = (initial_state["S"].astype(f32),
+                      initial_state["n"].astype(f32),
+                      initial_state["m"].astype(f32))
+
+    causal = jnp.tril(jnp.ones((chunk, chunk), bool))
+
+    def step(carry, xs):
+        Sm, nm, m_prev = carry
+        qj, kj, vj, fj, ij = xs            # (B,H,C,d)/(B,H,C)
+        qj, kj, vj = qj.astype(f32), kj.astype(f32), vj.astype(f32)
+        g = jnp.cumsum(fj, axis=-1)        # inclusive cumulative log-decay
+        G = g[..., -1]                     # (B,H)
+        # log-weights
+        inter = g + m_prev[..., None]                           # (B,H,C)
+        intra = g[..., :, None] - g[..., None, :] + ij[..., None, :]  # (B,H,C,C)
+        intra = jnp.where(causal, intra, -jnp.inf)
+        M = jnp.maximum(inter, intra.max(axis=-1))              # (B,H,C)
+        M = jnp.where(jnp.isfinite(M), M, 0.0)
+        if not normalize:
+            # no denominator to cancel the stabilizer -> must emit true
+            # values. Decays are <= 0 in the SSD case, so exp() is safe.
+            M = jnp.zeros_like(M)
+        w_inter = jnp.exp(inter - M)                            # (B,H,C)
+        w_intra = jnp.exp(intra - M[..., None])                 # (B,H,C,C)
+        qk = jnp.einsum("bhcd,bhed->bhce", qj, kj)
+        scores = qk * w_intra
+        y = jnp.einsum("bhce,bhed->bhcd", scores, vj) \
+            + w_inter[..., None] * jnp.einsum("bhcd,bhde->bhce", qj, Sm)
+        if normalize:
+            nrm = scores.sum(axis=-1) \
+                + w_inter * jnp.einsum("bhcd,bhd->bhc", qj, nm)
+            denom = jnp.maximum(jnp.abs(nrm), jnp.exp(-M))
+            out = y / denom[..., None]
+        else:
+            out = y
+        # state update
+        m_new = jnp.maximum(G + m_prev, (G[..., None] - g + ij).max(axis=-1))
+        m_new = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+        decay_state = jnp.exp(G + m_prev - m_new)               # (B,H)
+        w_k = jnp.exp(G[..., None] - g + ij - m_new[..., None])  # (B,H,C)
+        S_new = decay_state[..., None, None] * Sm \
+            + jnp.einsum("bhc,bhcd,bhce->bhde", w_k, kj, vj)
+        n_new = decay_state[..., None] * nm \
+            + jnp.einsum("bhc,bhcd->bhd", w_k, kj)
+        return (S_new, n_new, m_new), out
+
+    (Sf, nf, mf), outs = jax.lax.scan(step, (S0, n0, m0), (qc, kc, vc, fc, ic))
+    # outs: (NC,B,H,C,dv) -> (B,H,NC*C,dv) -> (B,S,H,dv)
+    out = jnp.transpose(outs, (1, 2, 0, 3, 4)).reshape(B, H, Sp, dv)
+    out = jnp.moveaxis(out, 1, 2)[:, :S]
+    return out.astype(v.dtype), {"S": Sf, "n": nf, "m": mf}
+
+
+def gla_decode_step(q, k, v, log_f, log_i, state, *, normalize: bool = True):
+    """Single-token recurrent update. q,k: (B,H,dk), v: (B,H,dv),
+    log_f/log_i: (B,H); state dict{S,n,m}. Returns (out (B,H,dv), state)."""
+    f32 = jnp.float32
+    out_dtype = v.dtype
+    q, k, v = q.astype(f32), k.astype(f32), v.astype(f32)
+    Sm, nm, m_prev = state["S"], state["n"], state["m"]
+    if log_i is None:
+        log_i = jnp.zeros_like(log_f)
+    m_new = jnp.maximum(log_f + m_prev, log_i)
+    f_s = jnp.exp(log_f + m_prev - m_new)
+    i_s = jnp.exp(log_i - m_new)
+    S_new = f_s[..., None, None] * Sm + i_s[..., None, None] * (
+        k[..., :, None] * v[..., None, :])
+    n_new = f_s[..., None] * nm + i_s[..., None] * k
+    y = jnp.einsum("bhd,bhde->bhe", q, S_new)
+    if normalize:
+        denom = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", q, n_new)),
+                            jnp.exp(-m_new))
+        y = y / denom[..., None]
+    else:
+        # state is stored stabilized (S_true = e^m S); undo for raw output
+        y = y * jnp.exp(m_new)[..., None]
+    return y.astype(out_dtype), {"S": S_new, "n": n_new, "m": m_new}
+
+
+# ---------------------------------------------------------------------------
+# Causal depthwise conv (pre-QK conv used by mamba/xLSTM blocks)
+# ---------------------------------------------------------------------------
+
+def causal_conv1d(x, w, cache=None):
+    """x: (B,S,D), w: (K,D) depthwise. Returns (y, new_cache).
+
+    cache (decode): (B, K-1, D) last inputs."""
+    K = w.shape[0]
+    if cache is not None:
+        window = jnp.concatenate([cache, x], axis=1)      # (B, K-1+S, D)
+        y = jnp.einsum("bkd,kd->bd", window[:, -K:], w)[:, None]
+        return jax.nn.silu(y), window[:, -(K - 1):]
+    xp = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    y = sum(xp[:, i:i + x.shape[1]] * w[i] for i in range(K))
+    return jax.nn.silu(y), None
+
+
+def conv_cache_from(x, K: int):
+    """The last K-1 inputs, left-padded — a fresh decode cache after
+    prefill over x (B,S,D)."""
+    B, S, D = x.shape
+    if S >= K - 1:
+        return x[:, S - (K - 1):]
+    return jnp.pad(x, ((0, 0), (K - 1 - S, 0), (0, 0)))
+
+
+# ---------------------------------------------------------------------------
+# sLSTM (scalar-memory recurrent, xLSTM §2.1) — sequential scan over time
+# ---------------------------------------------------------------------------
+
+def slstm_apply(p, x, H, state=None):
+    """x: (B,S,D). Gates from input + block-diagonal recurrent R per head.
+    Returns (out (B,S,D), state)."""
+    B, S, D = x.shape
+    dh = D // H
+    gates_x = jnp.einsum("bsd,dg->bsg", x, p["w_gates"]) + p["b_gates"]  # (B,S,4D)
+    gates_x = gates_x.reshape(B, S, 4, H, dh)
+    if state is None:
+        zeros = jnp.zeros((B, H, dh), jnp.float32)
+        state = {"c": zeros, "n": zeros, "h": zeros,
+                 "m": jnp.zeros((B, H, dh), jnp.float32)}
+
+    R = p["r_gates"]  # (H, dh, 4, dh) block-diagonal recurrent weights
+
+    def step(carry, g_t):
+        c, n, h, m = carry["c"], carry["n"], carry["h"], carry["m"]
+        g = g_t + jnp.einsum("bhd,hdge->bghe", h.astype(x.dtype), R).astype(jnp.float32)
+        i_t, f_t, z_t, o_t = g[:, 0], g[:, 1], g[:, 2], g[:, 3]
+        logf = jax.nn.log_sigmoid(f_t)
+        m_new = jnp.maximum(logf + m, i_t)
+        i_s = jnp.exp(i_t - m_new)
+        f_s = jnp.exp(logf + m - m_new)
+        c_new = f_s * c + i_s * jnp.tanh(z_t)
+        n_new = jnp.maximum(f_s * n + i_s, 1.0)
+        h_new = jax.nn.sigmoid(o_t) * c_new / n_new
+        new = {"c": c_new, "n": n_new, "h": h_new, "m": m_new}
+        return new, h_new
+
+    gx = jnp.moveaxis(gates_x.astype(jnp.float32), 1, 0)  # (S,B,4,H,dh)
+    state, hs = jax.lax.scan(step, state, gx)
+    out = jnp.moveaxis(hs, 0, 1).reshape(B, S, D).astype(x.dtype)
+    return out, state
+
+
+# ---------------------------------------------------------------------------
+# Blocks
+# ---------------------------------------------------------------------------
+
+def mlstm_block_params(cfg, key):
+    d = cfg.d_model
+    inner = cfg.ssm_expand * d
+    H = cfg.num_heads
+    ks = jax.random.split(key, 8)
+    dt = cfg.param_dtype
+    return {
+        "norm": {"scale": jnp.ones(d, dt)},
+        "w_up": dense_init(ks[0], (d, inner), dt),
+        "w_gate": dense_init(ks[1], (d, inner), dt),
+        "conv_w": dense_init(ks[2], (cfg.conv_kernel, inner), dt, scale=0.5),
+        "wq": dense_init(ks[3], (inner, inner), dt),
+        "wk": dense_init(ks[4], (inner, inner), dt),
+        "wv": dense_init(ks[5], (inner, inner), dt),
+        "w_if": dense_init(ks[6], (inner, 2 * H), dt, scale=0.01),
+        "b_if": jnp.concatenate([jnp.zeros(H), jnp.linspace(3.0, 6.0, H)]).astype(dt),
+        "head_norm": jnp.ones((H, inner // H), dt),
+        "w_down": dense_init(ks[7], (inner, d), dt),
+    }
+
+
+def mlstm_block_apply(cfg, p, x, state=None, conv_cache=None, decode=False,
+                      build_cache=False):
+    """xLSTM mLSTM block. Returns (out, (state, conv_cache))."""
+    B, S, d = x.shape
+    H = cfg.num_heads
+    inner = cfg.ssm_expand * d
+    dh = inner // H
+    h = rmsnorm(x, p["norm"]["scale"])
+    u = h @ p["w_up"]
+    z = h @ p["w_gate"]
+    c, conv_cache = causal_conv1d(u, p["conv_w"], conv_cache)
+    q = (c @ p["wq"]).reshape(B, S, H, dh)
+    k = (c @ p["wk"]).reshape(B, S, H, dh) * (dh ** -0.5)
+    v = (u @ p["wv"]).reshape(B, S, H, dh)
+    gates = (u @ p["w_if"] + p["b_if"]).astype(jnp.float32)    # (B,S,2H)
+    log_i = gates[..., :H]
+    log_f = jax.nn.log_sigmoid(gates[..., H:])
+    if decode:
+        y, state = gla_decode_step(q[:, 0], k[:, 0], v[:, 0],
+                                   log_f[:, 0], log_i[:, 0], state)
+        y = y[:, None]
+    else:
+        y, state = gated_linear_attention(q, k, v, log_f, log_i,
+                                          chunk=cfg.chunk_size,
+                                          initial_state=state)
+        if build_cache:
+            conv_cache = conv_cache_from(u, cfg.conv_kernel)
+    y = rmsnorm(y, p["head_norm"]).reshape(B, S, inner)
+    out = (y * jax.nn.silu(z)) @ p["w_down"]
+    return x + out, (state, conv_cache)
+
+
+def slstm_block_params(cfg, key):
+    d = cfg.d_model
+    H = cfg.num_heads
+    dh = d // H
+    ks = jax.random.split(key, 5)
+    dt = cfg.param_dtype
+    ff = max(1, int(d * 4 / 3) // 8 * 8)
+    return {
+        "norm": {"scale": jnp.ones(d, dt)},
+        "w_gates": dense_init(ks[0], (d, 4 * d), dt),
+        "b_gates": jnp.tile(jnp.concatenate(
+            [jnp.zeros(d), jnp.ones(d) * 3.0, jnp.zeros(2 * d)]), (1,)).astype(dt).reshape(4 * d),
+        "r_gates": dense_init(ks[1], (H, dh, 4, dh), dt, scale=dh ** -0.5),
+        "head_norm": jnp.ones((H, dh), dt),
+        "ffn_norm": {"scale": jnp.ones(d, dt)},
+        "w_ff_gate": dense_init(ks[2], (d, ff), dt),
+        "w_ff_up": dense_init(ks[3], (d, ff), dt),
+        "w_ff_down": dense_init(ks[4], (ff, d), dt),
+    }
+
+
+def slstm_block_apply(cfg, p, x, state=None):
+    B, S, d = x.shape
+    H = cfg.num_heads
+    h = rmsnorm(x, p["norm"]["scale"])
+    y, state = slstm_apply({k: p[k] for k in ("w_gates", "b_gates", "r_gates")},
+                           h, H, state)
+    y = rmsnorm(y.reshape(B, S, H, d // H), p["head_norm"]).reshape(B, S, d)
+    x = x + y
+    h = rmsnorm(x, p["ffn_norm"]["scale"])
+    ff = jax.nn.silu(h @ p["w_ff_gate"]) * (h @ p["w_ff_up"])
+    return x + ff @ p["w_ff_down"], state
+
+
+def mamba_head_params(cfg, key):
+    """Hymba's mamba heads (Mamba-2/SSD form, scalar per-head decay)."""
+    d = cfg.d_model
+    H = cfg.num_heads
+    N = cfg.ssm_state
+    ks = jax.random.split(key, 6)
+    dt = cfg.param_dtype
+    return {
+        "w_in": dense_init(ks[0], (d, d), dt),
+        "w_gate": dense_init(ks[1], (d, d), dt),
+        "conv_w": dense_init(ks[2], (cfg.conv_kernel, d), dt, scale=0.5),
+        "w_bc": dense_init(ks[3], (d, 2 * H * N), dt),
+        "w_dt": dense_init(ks[4], (d, H), dt, scale=0.01),
+        "b_dt": jnp.log(jnp.expm1(jnp.linspace(0.001, 0.1, H))).astype(dt),
+        "a_log": jnp.log(jnp.linspace(1.0, 16.0, H)).astype(dt),
+        "d_skip": jnp.ones(H, dt),
+        "head_norm": jnp.ones((H, d // H), dt),
+        "w_out": dense_init(ks[5], (d, d), dt),
+    }
+
+
+def mamba_head_apply(cfg, p, x, state=None, conv_cache=None, decode=False,
+                     build_cache=False):
+    """x: (B,S,D) (already normed by the caller). Returns (out, state)."""
+    B, S, d = x.shape
+    H, N = cfg.num_heads, cfg.ssm_state
+    dh = d // H
+    u = x @ p["w_in"]
+    g = x @ p["w_gate"]
+    c, conv_cache = causal_conv1d(u, p["conv_w"], conv_cache)
+    bc = (c @ p["w_bc"]).reshape(B, S, 2, H, N)
+    Bt, Ct = bc[:, :, 0], bc[:, :, 1]                     # (B,S,H,N)
+    dt_ = jax.nn.softplus((u @ p["w_dt"]).astype(jnp.float32)
+                          + p["b_dt"].astype(jnp.float32))  # (B,S,H)
+    A = -jnp.exp(p["a_log"].astype(jnp.float32))          # (H,) negative
+    log_decay = dt_ * A                                    # (B,S,H) <= 0
+    v = u.reshape(B, S, H, dh) * dt_[..., None].astype(u.dtype)
+    if decode:
+        y, state = gla_decode_step(Ct[:, 0], Bt[:, 0], v[:, 0],
+                                   log_decay[:, 0], None, state,
+                                   normalize=False)
+        y = y[:, None]
+    else:
+        y, state = gated_linear_attention(Ct, Bt, v, log_decay, None,
+                                          chunk=cfg.chunk_size,
+                                          normalize=False,
+                                          initial_state=state)
+        if build_cache:
+            conv_cache = conv_cache_from(u, cfg.conv_kernel)
+    y = y + u.reshape(B, S, H, dh) * p["d_skip"][:, None]
+    y = rmsnorm(y, p["head_norm"]).reshape(B, S, d)
+    return (y * jax.nn.silu(g)) @ p["w_out"], (state, conv_cache)

@@ -1,0 +1,434 @@
+"""Generic decoder / encoder-decoder stack covering all assigned
+architectures (dense GQA, MoE, hybrid attn+mamba, xLSTM, VLM and audio
+backbones).
+
+Homogeneous stacks are scanned over layers (stacked params, small HLO);
+heterogeneous stacks (xLSTM's sLSTM/mLSTM pattern) unroll a Python loop
+over per-layer param dicts.
+
+Public API (used by fl/, launch/ and the examples):
+  init_params(cfg, key)
+  loss_fn(cfg, params, batch)                  -> (loss, metrics)
+  forward(cfg, params, tokens, extras)         -> (logits, aux)
+  prefill(cfg, params, tokens, extras)         -> (logits, cache, memory)
+  init_decode_cache(cfg, B, cache_len)         -> cache (zeros)
+  decode_step(cfg, params, tokens, cache, index) -> (logits, cache)
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import moe as moe_lib
+from . import ssm as ssm_lib
+from .common import ModelConfig
+from .layers import (apply_norm, attn_params, cross_attention, dense_init,
+                     mlp, mlp_params, norm_params, self_attention,
+                     sinusoidal_embedding)
+
+SCANNABLE = {"attn", "moe", "hymba", "xattn", "mlstm"}
+
+
+# ---------------------------------------------------------------------------
+# Per-layer params
+# ---------------------------------------------------------------------------
+
+def layer_params(cfg: ModelConfig, ltype: str, key):
+    ks = jax.random.split(key, 6)
+    if ltype == "mlstm":
+        return ssm_lib.mlstm_block_params(cfg, key)
+    if ltype == "slstm":
+        return ssm_lib.slstm_block_params(cfg, key)
+    p = {"norm1": norm_params(cfg), "attn": attn_params(cfg, ks[0]),
+         "norm2": norm_params(cfg)}
+    if ltype == "attn":
+        p["mlp"] = mlp_params(cfg, ks[1])
+    elif ltype == "moe":
+        p["moe"] = moe_lib.moe_params(cfg, ks[1])
+    elif ltype == "hymba":
+        p["mamba"] = ssm_lib.mamba_head_params(cfg, ks[1])
+        p["mlp"] = mlp_params(cfg, ks[2])
+    elif ltype == "xattn":
+        p["norm_x"] = norm_params(cfg)
+        p["xattn"] = attn_params(cfg, ks[3])
+        p["mlp"] = mlp_params(cfg, ks[1])
+    else:
+        raise ValueError(f"unknown layer type {ltype}")
+    return p
+
+
+# ---------------------------------------------------------------------------
+# Per-layer apply. All types share the signature
+#   (p, x, positions, cache, memory) -> (x, new_cache, aux)
+# cache=None in train mode; build_cache=True => prefill returns fresh cache;
+# decode=True => Sq==1 update against the given cache.
+# ---------------------------------------------------------------------------
+
+def layer_apply(cfg: ModelConfig, ltype: str, p, x, positions, cache=None,
+                memory=None, *, decode=False, build_cache=False,
+                flash_fn=None, swiglu_fn=None):
+    aux = jnp.zeros((), jnp.float32)
+    if ltype == "mlstm":
+        state = conv = None
+        if cache is not None:
+            state, conv = cache["state"], cache["conv"]
+        x, (state, conv) = ssm_lib.mlstm_block_apply(
+            cfg, p, x, state, conv, decode=decode, build_cache=build_cache)
+        newc = {"state": state, "conv": conv} if (cache is not None or
+                                                  build_cache) else None
+        return x, newc, aux
+
+    if ltype == "slstm":
+        state = cache["state"] if cache is not None else None
+        x, state = ssm_lib.slstm_block_apply(cfg, p, x, state)
+        newc = {"state": state} if (cache is not None or build_cache) else None
+        return x, newc, aux
+
+    if ltype == "hymba":
+        h = apply_norm(cfg, p["norm1"], x)
+        kv = cache["kv"] if cache is not None else None
+        attn_o, new_kv = self_attention(cfg, p["attn"], h, positions,
+                                        causal=True, kv_cache=kv,
+                                        build_cache=build_cache,
+                                        flash_fn=flash_fn)
+        state = conv = None
+        if cache is not None:
+            state, conv = cache["state"], cache["conv"]
+        mamba_o, (state, conv) = ssm_lib.mamba_head_apply(
+            cfg, p["mamba"], h, state, conv, decode=decode,
+            build_cache=build_cache)
+        x = x + 0.5 * (attn_o + mamba_o)          # parallel-head fusion
+        h = apply_norm(cfg, p["norm2"], x)
+        x = x + mlp(cfg, p["mlp"], h, swiglu_fn)
+        newc = ({"kv": new_kv, "state": state, "conv": conv}
+                if (cache is not None or build_cache) else None)
+        return x, newc, aux
+
+    # attention-based layers (attn / moe / xattn)
+    kv = cache["kv"] if cache is not None else None
+    h = apply_norm(cfg, p["norm1"], x)
+    o, new_kv = self_attention(cfg, p["attn"], h, positions, causal=True,
+                               kv_cache=kv, build_cache=build_cache,
+                               flash_fn=flash_fn)
+    x = x + o
+    if ltype == "xattn":
+        h = apply_norm(cfg, p["norm_x"], x)
+        x = x + cross_attention(cfg, p["xattn"], h, memory)
+    h = apply_norm(cfg, p["norm2"], x)
+    if ltype == "moe":
+        y, aux = moe_lib.moe_ffn(cfg, p["moe"], h)
+        x = x + y
+    else:
+        x = x + mlp(cfg, p["mlp"], h, swiglu_fn)
+    newc = {"kv": new_kv} if (cache is not None or build_cache) else None
+    return x, newc, aux
+
+
+# ---------------------------------------------------------------------------
+# Stacks
+# ---------------------------------------------------------------------------
+
+def _is_homogeneous(cfg) -> bool:
+    if cfg.unroll_layers:
+        return False
+    types = set(cfg.layer_types)
+    return len(types) == 1 and next(iter(types)) in SCANNABLE
+
+
+def stack_params(cfg: ModelConfig, key, num_layers=None, ltype=None):
+    """Stacked (scan) params for homogeneous stacks, list otherwise."""
+    L = num_layers or cfg.num_layers
+    types = [ltype] * L if ltype else list(cfg.layer_types)
+    keys = jax.random.split(key, L)
+    if (len(set(types)) == 1 and types[0] in SCANNABLE
+            and not cfg.unroll_layers):
+        return jax.vmap(lambda k: layer_params(cfg, types[0], k))(keys)
+    return [layer_params(cfg, t, k) for t, k in zip(types, keys)]
+
+
+def stack_apply(cfg, params, x, positions, cache=None, memory=None, *,
+                decode=False, build_cache=False, flash_fn=None,
+                swiglu_fn=None):
+    """Apply the layer stack. Returns (x, new_cache, aux)."""
+    types = list(cfg.layer_types)
+    zero = jnp.zeros((), jnp.float32)
+
+    if isinstance(params, list):  # heterogeneous: unrolled loop
+        new_cache, aux = [], zero
+        for i, (t, p) in enumerate(zip(types, params)):
+            c = cache[i] if cache is not None else None
+            fn = functools.partial(layer_apply, cfg, t, decode=decode,
+                                   build_cache=build_cache,
+                                   flash_fn=flash_fn, swiglu_fn=swiglu_fn)
+            if cfg.remat and not decode:
+                fn = jax.checkpoint(fn)
+            x, nc, a = fn(p, x, positions, c, memory)
+            new_cache.append(nc)
+            aux = aux + a
+        has_cache = cache is not None or build_cache
+        return x, (new_cache if has_cache else None), aux
+
+    t = types[0]
+    if cache is None:
+        # train / prefill: scan over stacked params; the (optional) fresh
+        # cache comes out as scan outputs.
+        def body(carry, p):
+            x, aux = carry
+            x, nc, a = layer_apply(cfg, t, p, x, positions, None, memory,
+                                   decode=False, build_cache=build_cache,
+                                   flash_fn=flash_fn, swiglu_fn=swiglu_fn)
+            return (x, aux + a), nc
+        if cfg.remat:
+            body = jax.checkpoint(body)
+        (x, aux), ys = jax.lax.scan(body, (x, zero), params)
+        return x, (ys if build_cache else None), aux
+
+    # decode: scan over (stacked params, stacked cache)
+    def body(carry, xs):
+        x, aux = carry
+        p, c = xs
+        x, nc, a = layer_apply(cfg, t, p, x, positions, c, memory,
+                               decode=decode, flash_fn=flash_fn,
+                               swiglu_fn=swiglu_fn)
+        return (x, aux + a), nc
+
+    (x, aux), ys = jax.lax.scan(body, (x, zero), (params, cache))
+    return x, ys, aux
+
+
+# ---------------------------------------------------------------------------
+# Cache construction (zeros — used for serve_step input specs and tests)
+# ---------------------------------------------------------------------------
+
+def init_layer_cache(cfg: ModelConfig, ltype: str, B: int, cache_len: int,
+                     dtype):
+    G, hd, H = cfg.num_kv_heads, cfg.resolved_head_dim, cfg.num_heads
+    d = cfg.d_model
+
+    def kv_cache(length):
+        W = min(length, cfg.sliding_window) if cfg.sliding_window else length
+        return {"k": jnp.zeros((B, W, G, hd), dtype),
+                "v": jnp.zeros((B, W, G, hd), dtype),
+                "pos": jnp.full((W,), -1, jnp.int32)}
+
+    if ltype in ("attn", "moe", "xattn"):
+        return {"kv": kv_cache(cache_len)}
+    if ltype == "hymba":
+        dh = d // H
+        return {"kv": kv_cache(cache_len),
+                "state": {"S": jnp.zeros((B, H, cfg.ssm_state, dh), jnp.float32),
+                          "n": jnp.zeros((B, H, cfg.ssm_state), jnp.float32),
+                          "m": jnp.zeros((B, H), jnp.float32)},
+                "conv": jnp.zeros((B, cfg.conv_kernel - 1, d), dtype)}
+    if ltype == "mlstm":
+        inner = cfg.ssm_expand * d
+        dh = inner // H
+        return {"state": {"S": jnp.zeros((B, H, dh, dh), jnp.float32),
+                          "n": jnp.zeros((B, H, dh), jnp.float32),
+                          "m": jnp.zeros((B, H), jnp.float32)},
+                "conv": jnp.zeros((B, cfg.conv_kernel - 1, inner), dtype)}
+    if ltype == "slstm":
+        dh = d // H
+        z = jnp.zeros((B, H, dh), jnp.float32)
+        return {"state": {"c": z, "n": z, "h": z, "m": z}}
+    raise ValueError(ltype)
+
+
+def init_decode_cache(cfg: ModelConfig, B: int, cache_len: int, dtype=None):
+    dtype = dtype or cfg.param_dtype
+    types = list(cfg.layer_types)
+    if _is_homogeneous(cfg):
+        per = [init_layer_cache(cfg, types[0], B, cache_len, dtype)
+               for _ in range(cfg.num_layers)]
+        return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *per)
+    return [init_layer_cache(cfg, t, B, cache_len, dtype) for t in types]
+
+
+# ---------------------------------------------------------------------------
+# Model init / top-level forward
+# ---------------------------------------------------------------------------
+
+def init_params(cfg: ModelConfig, key):
+    ks = jax.random.split(key, 6)
+    dt = cfg.param_dtype
+    p = {
+        "embed": dense_init(ks[0], (cfg.vocab_size, cfg.d_model), dt, scale=0.02),
+        "layers": stack_params(cfg, ks[1]),
+        "final_norm": norm_params(cfg),
+    }
+    if not cfg.tie_embeddings:
+        p["lm_head"] = dense_init(ks[2], (cfg.d_model, cfg.vocab_size), dt)
+    if cfg.frontend:  # stub-frontend projector (vlm/audio carve-out)
+        fd = cfg.frontend_dim
+        p["projector"] = {
+            "w1": dense_init(ks[3], (fd, cfg.d_model), dt),
+            "w2": dense_init(ks[4], (cfg.d_model, cfg.d_model), dt),
+        }
+    if cfg.is_enc_dec:
+        ek1, _ = jax.random.split(ks[5])
+        p["encoder"] = {
+            "layers": stack_params(cfg, ek1, cfg.encoder_layers, "attn"),
+            "final_norm": norm_params(cfg),
+        }
+    return p
+
+
+def _project_frontend(params, embeds):
+    h = jax.nn.gelu(embeds @ params["projector"]["w1"], approximate=True)
+    return h @ params["projector"]["w2"]
+
+
+def _encode(cfg, params, frames):
+    """Whisper-style encoder over stub frame embeddings (B, F, fd)."""
+    x = _project_frontend(params, frames)
+    S = x.shape[1]
+    x = x + sinusoidal_embedding(S, cfg.d_model, x.dtype)[None]
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), x.shape[:2])
+
+    def one_layer(x, p):
+        h = apply_norm(cfg, p["norm1"], x)
+        o, _ = self_attention(cfg, p["attn"], h, positions, causal=False,
+                              window=0)
+        x = x + o
+        h = apply_norm(cfg, p["norm2"], x)
+        return x + mlp(cfg, p["mlp"], h)
+
+    enc_layers = params["encoder"]["layers"]
+    if isinstance(enc_layers, list):       # unrolled (dry-run cost fidelity)
+        for p in enc_layers:
+            fn = jax.checkpoint(one_layer) if cfg.remat else one_layer
+            x = fn(x, p)
+    else:
+        def body(carry, p):
+            return one_layer(carry, p), None
+        body = jax.checkpoint(body) if cfg.remat else body
+        x, _ = jax.lax.scan(body, x, enc_layers)
+    return apply_norm(cfg, params["encoder"]["final_norm"], x)
+
+
+def embed_inputs(cfg, params, tokens, extras=None):
+    """Token embedding + optional modality prefix. Returns (x, positions,
+    n_prefix, memory)."""
+    extras = extras or {}
+    x = params["embed"][tokens]
+    memory = None
+    n_prefix = 0
+    if cfg.frontend == "vision" and "patch_embeds" in extras:
+        prefix = _project_frontend(params, extras["patch_embeds"]).astype(x.dtype)
+        x = jnp.concatenate([prefix, x], axis=1)
+        n_prefix = prefix.shape[1]
+    if cfg.is_enc_dec:
+        memory = _encode(cfg, params, extras["frames"])
+    S = x.shape[1]
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (x.shape[0], S))
+    if cfg.positional == "sinusoidal":
+        x = x + sinusoidal_embedding(S, cfg.d_model, x.dtype)[None]
+    return x, positions, n_prefix, memory
+
+
+def unembed(cfg, params, x):
+    if cfg.tie_embeddings:
+        return x @ params["embed"].T
+    return x @ params["lm_head"]
+
+
+def forward(cfg: ModelConfig, params, tokens, extras=None, flash_fn=None,
+            swiglu_fn=None):
+    """Full-sequence logits (train path). Returns (logits, aux)."""
+    x, positions, n_prefix, memory = embed_inputs(cfg, params, tokens, extras)
+    x, _, aux = stack_apply(cfg, params["layers"], x, positions, memory=memory,
+                            flash_fn=flash_fn, swiglu_fn=swiglu_fn)
+    x = apply_norm(cfg, params["final_norm"], x)
+    if n_prefix:
+        x = x[:, n_prefix:]
+    return unembed(cfg, params, x), aux
+
+
+def loss_fn(cfg: ModelConfig, params, batch, flash_fn=None, swiglu_fn=None):
+    """Weighted next-token cross-entropy.
+
+    batch: tokens (B,S) int32, targets (B,S) int32 (-1 = masked), weights
+    (B,) federated per-client weights p_k (optional), plus modality extras.
+    """
+    extras = {k: batch[k] for k in ("patch_embeds", "frames") if k in batch}
+    logits, aux = forward(cfg, params, batch["tokens"], extras,
+                          flash_fn=flash_fn, swiglu_fn=swiglu_fn)
+    targets = batch["targets"]
+    mask = (targets >= 0).astype(jnp.float32)
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    tgt = jnp.maximum(targets, 0)
+    nll = -jnp.take_along_axis(logp, tgt[..., None], axis=-1)[..., 0] * mask
+    per_ex = nll.sum(-1) / jnp.maximum(mask.sum(-1), 1.0)     # (B,)
+    w = batch.get("weights")
+    if w is None:
+        loss = per_ex.mean()
+    else:
+        loss = jnp.sum(per_ex * w) / jnp.maximum(jnp.sum(w), 1e-9)
+    total = loss + aux
+    return total, {"loss": loss, "aux_loss": aux, "tokens": mask.sum()}
+
+
+# ---------------------------------------------------------------------------
+# Serving: prefill + decode
+# ---------------------------------------------------------------------------
+
+def prefill(cfg: ModelConfig, params, tokens, extras=None, flash_fn=None,
+            swiglu_fn=None):
+    """Run the prompt, build the cache. Returns (last logits, cache, memory)."""
+    x, positions, n_prefix, memory = embed_inputs(cfg, params, tokens, extras)
+    x, cache, _ = stack_apply(cfg, params["layers"], x, positions,
+                              memory=memory, build_cache=True,
+                              flash_fn=flash_fn, swiglu_fn=swiglu_fn)
+    x = apply_norm(cfg, params["final_norm"], x)
+    logits = unembed(cfg, params, x[:, -1:])
+    return logits, cache, memory
+
+
+def grow_cache(cfg: ModelConfig, cache, extra: int):
+    """Extend a full (non-ring) KV cache by ``extra`` decode slots."""
+    def grow(leaf_path, leaf):
+        return leaf
+
+    def _grow_kv(c):
+        if isinstance(c, dict) and "kv" in c and (not cfg.sliding_window):
+            kv = c["kv"]
+            pad = lambda a: jnp.pad(a, ((0, 0), (0, extra)) + ((0, 0),) * (a.ndim - 2))
+            c = dict(c)
+            c["kv"] = {"k": pad(kv["k"]), "v": pad(kv["v"]),
+                       "pos": jnp.concatenate([kv["pos"],
+                                               jnp.full((extra,), -1, jnp.int32)])}
+        return c
+
+    if isinstance(cache, list):
+        return [_grow_kv(c) for c in cache]
+    if isinstance(cache, dict) and "kv" in cache and not cfg.sliding_window:
+        kv = cache["kv"]  # stacked (L, B, S, G, hd)
+        pad = lambda a: jnp.pad(a, ((0, 0), (0, 0), (0, extra)) + ((0, 0),) * (a.ndim - 3))
+        cache = dict(cache)
+        cache["kv"] = {"k": pad(kv["k"]), "v": pad(kv["v"]),
+                       "pos": jnp.pad(kv["pos"], ((0, 0), (0, extra)),
+                                      constant_values=-1)}
+    return cache
+
+
+def decode_step(cfg: ModelConfig, params, tokens, cache, index, memory=None,
+                flash_fn=None, swiglu_fn=None):
+    """One decode step. tokens: (B, 1); index: scalar int32 absolute
+    position. Returns (logits, new_cache)."""
+    x = params["embed"][tokens]
+    if cfg.positional == "sinusoidal":
+        x = x + _sin_at(jnp.asarray(index), cfg.d_model, x.dtype)[None, None]
+    positions = jnp.full((x.shape[0], 1), index, jnp.int32)
+    x, cache, _ = stack_apply(cfg, params["layers"], x, positions, cache=cache,
+                              memory=memory, decode=True, flash_fn=flash_fn,
+                              swiglu_fn=swiglu_fn)
+    x = apply_norm(cfg, params["final_norm"], x)
+    return unembed(cfg, params, x), cache
+
+
+def _sin_at(index, d_model, dtype):
+    dim = jnp.arange(0, d_model, 2, dtype=jnp.float32)
+    angle = index.astype(jnp.float32) / jnp.power(10_000.0, dim / d_model)
+    return jnp.concatenate([jnp.sin(angle), jnp.cos(angle)])[:d_model].astype(dtype)

@@ -1,0 +1,3 @@
+from .optimizers import (Optimizer, adam, adamw, apply_updates, global_norm,
+                         make, sgd)
+from .schedules import constant, inverse_sqrt, warmup_cosine

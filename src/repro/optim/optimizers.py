@@ -1,0 +1,112 @@
+"""Optimizers in pure JAX (no optax offline): SGD, momentum, Adam, AdamW.
+
+Interface mirrors optax: ``init(params) -> state``,
+``update(grads, state, params) -> (updates, state)``; apply with
+``apply_updates``. States are pytrees that shard like their params.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class Optimizer(NamedTuple):
+    init: Callable
+    update: Callable
+
+
+def apply_updates(params, updates):
+    return jax.tree_util.tree_map(lambda p, u: (p + u).astype(p.dtype),
+                                  params, updates)
+
+
+def _scalar_lr(lr, count):
+    return lr(count) if callable(lr) else lr
+
+
+def sgd(lr, momentum: float = 0.0, nesterov: bool = False) -> Optimizer:
+    def init(params):
+        state = {"count": jnp.zeros((), jnp.int32)}
+        if momentum:
+            state["mu"] = jax.tree_util.tree_map(
+                lambda p: jnp.zeros_like(p, jnp.float32), params)
+        return state
+
+    def update(grads, state, params=None):
+        count = state["count"] + 1
+        step = _scalar_lr(lr, count)
+        if momentum:
+            mu = jax.tree_util.tree_map(
+                lambda m, g: momentum * m + g.astype(jnp.float32),
+                state["mu"], grads)
+            if nesterov:
+                upd = jax.tree_util.tree_map(
+                    lambda m, g: -(step * (momentum * m + g)), mu, grads)
+            else:
+                upd = jax.tree_util.tree_map(lambda m: -step * m, mu)
+            return upd, {"count": count, "mu": mu}
+        upd = jax.tree_util.tree_map(lambda g: -step * g, grads)
+        return upd, {"count": count}
+
+    return Optimizer(init, update)
+
+
+def adam(lr, b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8,
+         weight_decay: float = 0.0, grad_clip: float = 0.0) -> Optimizer:
+    """Adam/AdamW with optional global-norm clipping."""
+
+    def init(params):
+        zeros = lambda p: jnp.zeros_like(p, jnp.float32)
+        return {"count": jnp.zeros((), jnp.int32),
+                "m": jax.tree_util.tree_map(zeros, params),
+                "v": jax.tree_util.tree_map(zeros, params)}
+
+    def update(grads, state, params=None):
+        count = state["count"] + 1
+        step = _scalar_lr(lr, count)
+        if grad_clip > 0:
+            gnorm = global_norm(grads)
+            scale = jnp.minimum(1.0, grad_clip / jnp.maximum(gnorm, 1e-9))
+            grads = jax.tree_util.tree_map(lambda g: g * scale, grads)
+        m = jax.tree_util.tree_map(
+            lambda m_, g: b1 * m_ + (1 - b1) * g.astype(jnp.float32),
+            state["m"], grads)
+        v = jax.tree_util.tree_map(
+            lambda v_, g: b2 * v_ + (1 - b2) * jnp.square(g.astype(jnp.float32)),
+            state["v"], grads)
+        c1 = 1 - b1 ** count.astype(jnp.float32)
+        c2 = 1 - b2 ** count.astype(jnp.float32)
+
+        def upd(m_, v_, p):
+            u = -step * (m_ / c1) / (jnp.sqrt(v_ / c2) + eps)
+            if weight_decay and p is not None:
+                u = u - step * weight_decay * p.astype(jnp.float32)
+            return u
+
+        if params is None:
+            updates = jax.tree_util.tree_map(lambda m_, v_: upd(m_, v_, None), m, v)
+        else:
+            updates = jax.tree_util.tree_map(upd, m, v, params)
+        return updates, {"count": count, "m": m, "v": v}
+
+    return Optimizer(init, update)
+
+
+def adamw(lr, b1=0.9, b2=0.95, eps=1e-8, weight_decay=0.1, grad_clip=1.0):
+    return adam(lr, b1, b2, eps, weight_decay, grad_clip)
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in leaves))
+
+
+GETTERS = {"sgd": sgd, "adam": adam, "adamw": adamw}
+
+
+def make(name: str, lr, **kw) -> Optimizer:
+    return GETTERS[name](lr, **kw)

@@ -1,0 +1,29 @@
+"""LR schedules as callables of the (1-based) step count."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant(lr: float):
+    return lambda count: lr
+
+
+def warmup_cosine(peak: float, warmup_steps: int, total_steps: int,
+                  floor: float = 0.0):
+    def f(count):
+        c = count.astype(jnp.float32) if hasattr(count, "astype") else float(count)
+        warm = peak * c / max(warmup_steps, 1)
+        t = jnp.clip((c - warmup_steps) / max(total_steps - warmup_steps, 1),
+                     0.0, 1.0)
+        cos = floor + 0.5 * (peak - floor) * (1 + jnp.cos(jnp.pi * t))
+        return jnp.where(c < warmup_steps, warm, cos)
+    return f
+
+
+def inverse_sqrt(peak: float, warmup_steps: int):
+    def f(count):
+        c = count.astype(jnp.float32) if hasattr(count, "astype") else float(count)
+        warm = peak * c / max(warmup_steps, 1)
+        decay = peak * (warmup_steps / jnp.maximum(c, warmup_steps)) ** 0.5
+        return jnp.where(c < warmup_steps, warm, decay)
+    return f

@@ -1,0 +1,3 @@
+from .specs import (batch_shardings, cache_shardings, data_axes,
+                    mesh_axis_size, opt_state_shardings, param_spec,
+                    params_shardings, replicated)

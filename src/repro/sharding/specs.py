@@ -1,0 +1,202 @@
+"""Sharding rules: parameter / optimizer-state / batch / cache
+PartitionSpecs for every architecture on the production mesh.
+
+Axes: "data" (+ optional "pod") = batch/client parallel; "model" =
+tensor/expert parallel. Rules are name+shape based and *divisibility
+guarded*: a dim is only sharded when its size divides the mesh axis —
+e.g. starcoder2's 4 KV heads stay replicated on a 16-way model axis
+while its 48 Q heads shard; qwen2-moe's 60 experts don't divide 16 so
+its expert weights shard on the ff dim instead (tensor-parallel experts)
+whereas llama4's 16 experts shard expert-parallel.
+
+Optimizer state (Adam m/v, f32) is additionally ZeRO-1-sharded over the
+data axis on the largest still-unsharded divisible dim.
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def mesh_axis_size(mesh: Mesh, name) -> int:
+    if isinstance(name, (tuple, list)):
+        return int(np.prod([mesh_axis_size(mesh, n) for n in name]))
+    return dict(zip(mesh.axis_names, mesh.devices.shape)).get(name, 1)
+
+
+def data_axes(mesh: Mesh):
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+def _div(size: int, n: int) -> bool:
+    return n > 0 and size % n == 0
+
+
+def param_spec(path: tuple, shape: tuple, mesh: Mesh,
+               expert_2d: bool = False) -> P:
+    """PartitionSpec for one parameter, identified by its tree path.
+
+    ``expert_2d``: additionally shard expert ff dims over the data axes
+    (FSDP-style weight sharding — §Perf serving iteration for very large
+    MoE; XLA all-gathers one layer's experts at a time)."""
+    tp = mesh_axis_size(mesh, "model")
+    dax = data_axes(mesh)
+    dsize = mesh_axis_size(mesh, dax)
+    daxis = dax if len(dax) > 1 else dax[0]
+    names = [str(getattr(k, "key", getattr(k, "idx", k))) for k in path]
+    name = names[-1] if names else ""
+    parent = names[-2] if len(names) >= 2 else ""
+
+    # scan-stacked layer params have a leading L dim; unrolled (list)
+    # stacks have an integer path element instead.
+    stacked = False
+    if "layers" in names:
+        i = names.index("layers")
+        stacked = not (len(names) > i + 1 and names[i + 1].isdigit())
+
+    off = 1 if stacked else 0
+    rank = len(shape) - off          # logical (per-layer) rank
+
+    def spec(*dims):
+        assert len(dims) == rank, (name, shape, dims)
+        return P(*([None] * off + list(dims)))
+
+    def tp_if(size):
+        return "model" if _div(size, tp) else None
+
+    if name == "embed":
+        return P(tp_if(shape[0]), None)
+    if name == "lm_head":
+        return P(None, tp_if(shape[1]))
+
+    if parent == "moe" and name in ("w_gate", "w_up", "w_down") and rank == 3:
+        E = shape[off]
+        ff_dim = 2 if name in ("w_gate", "w_up") else 1
+        if _div(E, tp):                          # expert parallel
+            dims = ["model", None, None]
+            if expert_2d and _div(shape[off + ff_dim], dsize):
+                dims[ff_dim] = daxis             # + FSDP over data
+            return spec(*dims)
+        dims = [None, None, None]
+        dims[ff_dim] = tp_if(shape[off + ff_dim])  # tensor-parallel experts
+        return spec(*dims)
+    if name == "router":
+        return spec(*([None] * rank))
+
+    if name in ("wq", "wk", "wv"):
+        if rank == 3:    # attention projections (d, H|G, hd): shard heads
+            return spec(None, tp_if(shape[off + 1]), None)
+        if rank == 2:    # mlstm square projections (inner, inner)
+            return spec(None, tp_if(shape[off + 1]))
+    if name == "wo" and rank == 3:
+        return spec(tp_if(shape[off]), None, None)
+
+    if name in ("w_gate", "w_up", "w_ff_gate", "w_ff_up", "w_in", "w1") \
+            and rank == 2:           # column parallel
+        return spec(None, tp_if(shape[off + 1]))
+    if name in ("w_down", "w_ff_down", "w_out", "w2") and rank == 2:
+        return spec(tp_if(shape[off]), None)      # row parallel
+
+    return P(*([None] * len(shape)))   # norms, biases, gates, convs: replicate
+
+
+def params_shardings(params, mesh: Mesh, expert_2d: bool = False):
+    """NamedSharding tree matching a params pytree (works on
+    ShapeDtypeStructs)."""
+    def one(path, leaf):
+        return NamedSharding(mesh, param_spec(path, leaf.shape, mesh,
+                                              expert_2d=expert_2d))
+    return jax.tree_util.tree_map_with_path(one, params)
+
+
+def opt_state_shardings(params, mesh: Mesh):
+    """Adam state: m/v shard like params plus ZeRO-1 over the data axis on
+    the largest remaining divisible dim; count replicated."""
+    dp = mesh_axis_size(mesh, "data")
+    dax = data_axes(mesh)
+    dp_total = mesh_axis_size(mesh, dax)
+
+    def zero1(path, leaf):
+        spec = list(param_spec(path, leaf.shape, mesh))
+        spec += [None] * (len(leaf.shape) - len(spec))
+        # pick the largest unsharded dim divisible by the full data size
+        best, best_size = None, 0
+        for i, (s, dim) in enumerate(zip(spec, leaf.shape)):
+            if s is None and _div(dim, dp_total) and dim > best_size:
+                best, best_size = i, dim
+        if best is not None:
+            spec[best] = dax if len(dax) > 1 else dax[0]
+        return NamedSharding(mesh, P(*spec))
+
+    m = jax.tree_util.tree_map_with_path(zero1, params)
+    return {"count": NamedSharding(mesh, P()), "m": m, "v": m}
+
+
+def batch_shardings(batch, mesh: Mesh, batch_sharded: bool = True):
+    """Batch leaves shard dim0 over (pod, data) when divisible."""
+    dax = data_axes(mesh)
+    n = mesh_axis_size(mesh, dax)
+    axis = dax if len(dax) > 1 else dax[0]
+
+    def one(leaf):
+        shape = leaf.shape
+        if batch_sharded and shape and _div(shape[0], n):
+            return NamedSharding(mesh, P(axis, *([None] * (len(shape) - 1))))
+        return NamedSharding(mesh, P(*([None] * len(shape))))
+    return jax.tree_util.tree_map(one, batch)
+
+
+def cache_shardings(cache, mesh: Mesh, batch: int,
+                    seq_over_model: bool = False):
+    """Decode caches: batch dim over data axes when divisible; otherwise
+    (long_500k, B=1) shard the KV sequence axis over "data" — the
+    flash-decoding layout (partial-softmax combine happens inside XLA's
+    sharded softmax reduction). SSM states follow the batch rule.
+
+    ``seq_over_model=True`` (§Perf iteration 1): additionally shard the
+    cache sequence axis over "model" when KV heads don't divide it —
+    GQA head counts (4-20) never divide a 16-way model axis, so without
+    this the model axis holds a full cache replica per shard.
+    """
+    dax = data_axes(mesh)
+    n = mesh_axis_size(mesh, dax)
+    axis = dax if len(dax) > 1 else dax[0]
+    tp = mesh_axis_size(mesh, "model")
+
+    def one(path, leaf):
+        names = [str(getattr(k, "key", getattr(k, "idx", k))) for k in path]
+        shape = leaf.shape
+        name = names[-1]
+        # kv k/v: (L, B, W, G, hd) or (B, W, G, hd)
+        if name in ("k", "v") and len(shape) >= 4:
+            b_dim = len(shape) - 4
+            w_dim = b_dim + 1
+            g_dim = b_dim + 2
+            spec = [None] * len(shape)
+            if _div(shape[b_dim], n) and shape[b_dim] > 1:
+                spec[b_dim] = axis
+            elif _div(shape[w_dim], mesh_axis_size(mesh, "data")):
+                spec[w_dim] = "data"     # sequence-sharded cache (B too small)
+            if _div(shape[g_dim], tp):
+                spec[g_dim] = "model"
+            elif seq_over_model and spec[w_dim] is None \
+                    and _div(shape[w_dim], tp):
+                spec[w_dim] = "model"    # flash-decoding over the model axis
+            return NamedSharding(mesh, P(*spec))
+        if name == "pos":
+            return NamedSharding(mesh, P(*([None] * len(shape))))
+        # ssm states / conv caches: (L, B, ...) — batch over data if divisible
+        spec = [None] * len(shape)
+        for i, dim in enumerate(shape[:2]):
+            if _div(dim, n) and dim > 1:
+                spec[i] = axis
+                break
+        return NamedSharding(mesh, P(*spec))
+
+    return jax.tree_util.tree_map_with_path(one, cache)
+
+
+def replicated(tree, mesh: Mesh):
+    return jax.tree_util.tree_map(
+        lambda leaf: NamedSharding(mesh, P(*([None] * len(leaf.shape)))), tree)

@@ -1,0 +1,125 @@
+"""Unit tests for core.criteria (paper §IV)."""
+import numpy as np
+import pytest
+
+from repro.core import criteria as C
+
+
+class TestNid:
+    def test_uniform_is_zero(self):
+        assert C.nid(np.full(10, 50.0)) == 0.0
+
+    def test_single_label_is_one(self):
+        h = np.zeros(10)
+        h[3] = 100
+        assert C.nid(h) == pytest.approx(1.0)
+
+    def test_paper_example_direction(self):
+        # two labels 9:1 should be more non-iid than three labels 5:4:1
+        h2 = np.array([90, 10, 0, 0, 0, 0, 0, 0, 0, 0], dtype=float)
+        h3 = np.array([50, 40, 10, 0, 0, 0, 0, 0, 0, 0], dtype=float)
+        # with the range definition both have min 0 over all classes;
+        # restrict to the support (classes owned by client)
+        assert C.nid(h2[:2]) > C.nid(h3[:3])
+
+    def test_batch_shape(self):
+        h = np.random.default_rng(0).integers(0, 10, size=(7, 5)).astype(float)
+        out = C.nid(h)
+        assert out.shape == (7,)
+        assert np.all((out >= 0) & (out <= 1))
+
+    def test_empty_histogram(self):
+        assert C.nid(np.zeros(4)) == 1.0
+
+    def test_data_dist_score_complement(self):
+        h = np.array([10.0, 30.0, 20.0])
+        assert C.data_dist_score(h) == pytest.approx(1.0 - C.nid(h))
+
+
+class TestNidVariants:
+    @pytest.mark.parametrize("fn", [C.nid_l2, C.nid_hellinger, C.nid_kl])
+    def test_uniform_zero_onehot_one(self, fn):
+        c = 8
+        uniform = np.full(c, 10.0)
+        onehot = np.zeros(c); onehot[0] = 80.0
+        assert fn(uniform) == pytest.approx(0.0, abs=1e-9)
+        assert fn(onehot) == pytest.approx(1.0, abs=1e-6)
+
+    @pytest.mark.parametrize("name", list(C.NID_VARIANTS))
+    def test_monotone_in_skew(self, name):
+        fn = C.NID_VARIANTS[name]
+        c = 10
+        vals = []
+        for alpha in [0.0, 0.3, 0.6, 0.9]:
+            h = np.full(c, 10.0)
+            h[0] += alpha * 200
+            vals.append(float(fn(h)))
+        assert vals == sorted(vals)
+
+
+class TestResourceScores:
+    def test_meets_minimums(self):
+        raw = np.array([[2.0, 4.0], [0.5, 8.0]])
+        mins = np.array([1.0, 2.0])
+        np.testing.assert_array_equal(C.meets_minimums(raw, mins), [True, False])
+
+    def test_scores_in_unit_interval(self):
+        rng = np.random.default_rng(1)
+        raw = rng.uniform(0.1, 10, size=(20, 7))
+        mins = rng.uniform(0.1, 2, size=7)
+        s = C.resource_scores(raw, mins)
+        assert np.all(s > 0) and np.all(s <= 1.0)
+
+    def test_requires_positive_minimums(self):
+        with pytest.raises(ValueError):
+            C.resource_scores(np.ones((2, 2)), np.array([0.0, 1.0]))
+
+
+class TestScoreCost:
+    def test_overall_score_weighted(self):
+        s = np.ones(C.NUM_CRITERIA) * 0.5
+        assert C.overall_score(s) == pytest.approx(0.5 * C.NUM_CRITERIA)
+        w = np.zeros(C.NUM_CRITERIA); w[0] = 2.0
+        assert C.overall_score(s, w) == pytest.approx(1.0)
+
+    def test_linear_cost_paper_constants(self):
+        # Experiment 1: Cost = 2*Score + 5 rounded; client 0: 6.92 -> 18.84 -> 19?
+        # Table II says 18 for 6.92: 2*6.92+5 = 18.84 -> rounds to 19. The
+        # paper's table evidently truncates/rounds its displayed scores; we
+        # verify the formula itself on exact values.
+        assert C.linear_cost(6.5, 2, 5, integer=True) == 18
+        assert C.linear_cost(4.5, 2, 5) == pytest.approx(14.0)
+
+    def test_cost_requires_positive_a(self):
+        with pytest.raises(ValueError):
+            C.linear_cost(1.0, a=0.0)
+
+    def test_history_scores(self):
+        assert C.per_task_average([1.0, 0.0, 1.0]) == pytest.approx(2 / 3)
+        assert C.history_score([0.2, 0.4, 0.9], window=2) == pytest.approx(0.65)
+        assert C.per_task_average([]) == 0.0
+
+    def test_cosine_similarity(self):
+        a = np.array([1.0, 0.0]); b = np.array([1.0, 0.0])
+        assert C.cosine_similarity(a, b) == pytest.approx(1.0)
+        assert C.cosine_similarity(a, -b) == pytest.approx(-1.0)
+        assert C.cosine_similarity(a, np.zeros(2)) == 0.0
+
+
+class TestProfiles:
+    def test_random_profiles_consistent(self):
+        rng = np.random.default_rng(7)
+        profs = C.random_profiles(50, 10, rng)
+        assert len(profs) == 50
+        for p in profs:
+            assert p.scores.shape == (C.NUM_CRITERIA,)
+            assert p.data_size > 0
+            assert p.cost >= 5  # b=5 floor
+            # data-driven criteria coherent
+            assert p.criterion("data_dist") == pytest.approx(
+                C.data_dist_score(p.histogram))
+
+    def test_build_profiles_validates(self):
+        with pytest.raises(ValueError):
+            C.build_profiles(np.ones((3, C.NUM_CRITERIA)), np.ones((2, 4)),
+                             np.ones(3))

@@ -1,0 +1,104 @@
+"""MKP solver tests: feasibility always, optimality-gap vs exact B&B."""
+import numpy as np
+import pytest
+
+from repro.core import mkp as M
+
+
+def rand_instance(rng, n, m, tightness=0.5):
+    weights = rng.integers(0, 30, size=(n, m)).astype(float)
+    values = weights.sum(axis=1) + rng.uniform(0, 5, n)  # like paper: value=|h|_1
+    capacities = tightness * weights.sum(axis=0)
+    return values, weights, capacities
+
+
+class TestGreedy:
+    def test_feasible_always(self):
+        rng = np.random.default_rng(0)
+        for _ in range(30):
+            v, w, c = rand_instance(rng, int(rng.integers(3, 60)), int(rng.integers(2, 12)))
+            res = M.solve_mkp_greedy(v, w, c)
+            assert M.is_feasible(w, c, res.selected)
+            assert res.value == pytest.approx(v[res.selected].sum() if res.selected else 0.0)
+
+    def test_max_size_respected(self):
+        rng = np.random.default_rng(1)
+        v, w, c = rand_instance(rng, 40, 5, tightness=2.0)
+        res = M.solve_mkp_greedy(v, w, c, max_size=7)
+        assert len(res.selected) <= 7
+
+    def test_zero_capacity_selects_zero_weight_only(self):
+        v = np.array([5.0, 3.0])
+        w = np.array([[1.0, 0.0], [0.0, 0.0]])
+        c = np.zeros(2)
+        res = M.solve_mkp_greedy(v, w, c)
+        assert res.selected == [1]
+
+    def test_no_duplicates(self):
+        rng = np.random.default_rng(2)
+        v, w, c = rand_instance(rng, 50, 4)
+        res = M.solve_mkp_greedy(v, w, c)
+        assert len(res.selected) == len(set(res.selected))
+
+
+class TestExact:
+    def test_bnb_matches_bruteforce(self):
+        rng = np.random.default_rng(3)
+        for _ in range(10):
+            n, m = 10, 3
+            v, w, c = rand_instance(rng, n, m)
+            best = 0.0
+            for mask in range(1 << n):
+                idx = [i for i in range(n) if mask >> i & 1]
+                if M.is_feasible(w, c, idx):
+                    best = max(best, float(v[idx].sum()))
+            res = M.solve_mkp_bnb(v, w, c)
+            assert res.optimal
+            assert res.value == pytest.approx(best, abs=1e-9)
+
+    def test_bnb_with_max_size(self):
+        rng = np.random.default_rng(4)
+        n, m = 9, 2
+        v, w, c = rand_instance(rng, n, m, tightness=1.5)
+        k = 3
+        best = 0.0
+        for mask in range(1 << n):
+            idx = [i for i in range(n) if mask >> i & 1]
+            if len(idx) <= k and M.is_feasible(w, c, idx):
+                best = max(best, float(v[idx].sum()))
+        res = M.solve_mkp_bnb(v, w, c, max_size=k)
+        assert res.value == pytest.approx(best, abs=1e-9)
+        assert len(res.selected) <= k
+
+
+class TestGap:
+    def test_greedy_gap_small(self):
+        """Greedy+LS should stay within 20% of optimal on paper-like
+        instances (value = data size, weights = histograms)."""
+        rng = np.random.default_rng(5)
+        gaps = []
+        for _ in range(15):
+            v, w, c = rand_instance(rng, 16, int(rng.integers(3, 10)))
+            g = M.solve_mkp_greedy(v, w, c)
+            e = M.solve_mkp_bnb(v, w, c)
+            if e.value > 0:
+                gaps.append((e.value - g.value) / e.value)
+        assert np.mean(gaps) < 0.1
+        assert max(gaps) < 0.25
+
+    def test_dispatch(self):
+        rng = np.random.default_rng(6)
+        v, w, c = rand_instance(rng, 10, 3)
+        assert M.solve_mkp(v, w, c).optimal           # small -> exact
+        v, w, c = rand_instance(rng, 100, 3)
+        assert not M.solve_mkp(v, w, c).optimal       # big -> greedy
+
+
+class TestValidation:
+    def test_bad_shapes(self):
+        with pytest.raises(ValueError):
+            M.solve_mkp_greedy(np.ones(3), np.ones((2, 2)), np.ones(2))
+        with pytest.raises(ValueError):
+            M.solve_mkp_greedy(np.ones(3), np.ones((3, 2)), np.ones(3))
+        with pytest.raises(ValueError):
+            M.solve_mkp_greedy(np.ones(2), -np.ones((2, 2)), np.ones(2))

@@ -1,0 +1,126 @@
+"""Algorithm 1 (Generate Subsets) tests on the paper's three non-iid types."""
+import numpy as np
+import pytest
+
+from repro.core import scheduling as Sch
+from repro.core.criteria import nid
+
+
+def make_pool(kind: str, n_clients=100, n_classes=10, seed=0,
+              samples_per_client=100):
+    """Paper §VIII-A non-iid pool types."""
+    rng = np.random.default_rng(seed)
+    hists = {}
+    for i in range(n_clients):
+        h = np.zeros(n_classes)
+        if kind == "type1":          # one label
+            h[rng.integers(n_classes)] = samples_per_client
+        elif kind == "type2":        # two labels 9:1
+            a, b = rng.choice(n_classes, 2, replace=False)
+            h[a], h[b] = 0.9 * samples_per_client, 0.1 * samples_per_client
+        elif kind == "type3":        # three labels 5:4:1 (a few 5:1/4:1)
+            if rng.uniform() < 0.1:
+                a, b = rng.choice(n_classes, 2, replace=False)
+                r = rng.choice([(5, 1), (4, 1)])
+                tot = r[0] + r[1]
+                h[a] = r[0] / tot * samples_per_client
+                h[b] = r[1] / tot * samples_per_client
+            else:
+                a, b, c = rng.choice(n_classes, 3, replace=False)
+                h[a], h[b], h[c] = 0.5, 0.4, 0.1
+                h *= samples_per_client
+        elif kind == "iid":
+            h[:] = samples_per_client / n_classes
+        else:
+            raise ValueError(kind)
+        hists[i] = h
+    return hists
+
+
+POOL_TYPES = ["type1", "type2", "type3"]
+
+
+class TestGenerateSubsets:
+    @pytest.mark.parametrize("kind", POOL_TYPES)
+    def test_paper_invariants(self, kind):
+        hists = make_pool(kind)
+        res = Sch.generate_subsets(hists, n=10, delta=3, x_star=3)
+        # constraint (9c): every client >= 1, <= x*
+        assert all(res.counts[k] >= 1 for k in hists)
+        assert all(res.counts[k] <= 3 for k in hists)
+        # union covers pool
+        covered = set().union(*map(set, res.subsets))
+        assert covered == set(hists)
+        # paper: with |S|=100, n±δ=10±3, x*=3 -> usually 10..20 subsets
+        assert 8 <= res.num_rounds <= 25
+        # constraint (9b) with the paper's tail relaxation: all but possibly
+        # the last subsets within [n-δ, n+δ]
+        for s in res.subsets[:-1]:
+            assert 7 <= len(s) <= 13
+        assert len(res.subsets[-1]) <= 13
+
+    @pytest.mark.parametrize("kind", POOL_TYPES)
+    def test_beats_random_nid(self, kind):
+        """Fig. 4's qualitative claim: integrated subset histograms are much
+        closer to uniform than random subsets'."""
+        hists = make_pool(kind)
+        ours = Sch.generate_subsets(hists, n=10, delta=3, x_star=3)
+        rnd = Sch.random_subsets(hists, 10, np.random.default_rng(0))
+        # compare mean Nid over subsets, excluding the tail subset
+        ours_mean = np.mean(ours.nids[:-1])
+        rnd_mean = np.mean(rnd.nids[:-1])
+        assert ours_mean < rnd_mean
+
+    def test_type1_near_uniform(self):
+        """With one-label clients and 10 classes, a good schedule gets most
+        subsets to low Nid (pick ~one client per class)."""
+        hists = make_pool("type1")
+        res = Sch.generate_subsets(hists, n=10, delta=3, x_star=3)
+        assert np.median(res.nids) < 0.35
+
+    def test_iid_pool_trivially_uniform(self):
+        hists = make_pool("iid")
+        res = Sch.generate_subsets(hists, n=10, delta=3, x_star=3)
+        assert res.max_nid() < 1e-9
+
+    def test_small_pool(self):
+        hists = make_pool("type1", n_clients=5)
+        res = Sch.generate_subsets(hists, n=10, delta=3, x_star=2)
+        assert set().union(*map(set, res.subsets)) == set(hists)
+
+    def test_single_client(self):
+        hists = {0: np.array([10.0, 0.0])}
+        res = Sch.generate_subsets(hists, n=10, delta=3)
+        assert res.subsets == [[0]]
+
+    def test_empty_pool(self):
+        res = Sch.generate_subsets({}, n=10, delta=3)
+        assert res.subsets == []
+
+    def test_explicit_capacities(self):
+        hists = make_pool("type1", n_clients=20)
+        caps = np.full(10, 200.0)
+        res = Sch.generate_subsets(hists, n=5, delta=2, capacities=caps)
+        np.testing.assert_array_equal(res.capacities, caps)
+
+
+class TestHelpers:
+    def test_subset_nid_matches_direct(self):
+        hists = make_pool("type2", n_clients=10)
+        subset = [0, 3, 7]
+        direct = nid(sum(hists[k] for k in subset))
+        assert Sch.subset_nid(hists, subset) == pytest.approx(float(direct))
+
+    def test_participation_weights_fedavg(self):
+        hists = {0: np.array([10.0, 0]), 1: np.array([0, 30.0])}
+        w = Sch.participation_weights(hists, [0, 1])
+        np.testing.assert_allclose(w, [0.25, 0.75])
+        assert w.sum() == pytest.approx(1.0)
+
+    def test_default_capacities_rule(self):
+        hists = make_pool("type1", n_clients=100)
+        caps = Sch.default_capacities(hists, n=10)
+        total = np.sum(list(hists.values()), axis=0)
+        assert caps.shape == total.shape
+        assert np.all(caps == caps[0])  # one capacity for all knapsacks
+        assert caps[0] == pytest.approx(np.ceil(total.max() / 10))

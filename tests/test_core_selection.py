@@ -1,0 +1,123 @@
+"""Stage-1 selection tests, including the paper's Experiment 1 instance."""
+import numpy as np
+import pytest
+
+from repro.core import selection as S
+from repro.core import criteria as C
+
+# Paper Table II — Experiment 1 input.
+PAPER_SCORES = np.array([6.92, 4.89, 6.8, 6.08, 6.9, 6.08, 3.74, 3.36, 5.26, 3.39])
+PAPER_COSTS = np.array([18, 14, 18, 17, 18, 17, 12, 11, 15, 11], dtype=float)
+BUDGET = 100.0
+
+
+class TestPaperExperiment1:
+    """Reproduces Table III."""
+
+    def test_dp_optimal(self):
+        res = S.select_dp(PAPER_SCORES, PAPER_COSTS, BUDGET)
+        assert res.total_cost <= BUDGET
+        # Paper: DP attains 36.85 with {8,5,4,2,1,0}. The instance has
+        # score ties ({0,1,2,4,5,8} and {0,1,2,3,4,8} both reach 36.85);
+        # we assert the optimum value, not the particular optimizer.
+        assert res.total_score == pytest.approx(36.85, abs=1e-9)
+        assert len(res.selected) == 6
+
+    def test_greedy_matches_paper(self):
+        res = S.select_greedy(PAPER_SCORES, PAPER_COSTS, BUDGET)
+        assert res.total_cost <= BUDGET
+        # Paper: greedy selects {0,4,2,5,3} with total score 32.78
+        assert sorted(res.selected) == [0, 2, 3, 4, 5]
+        assert res.total_score == pytest.approx(32.78, abs=1e-9)
+        opt = S.select_dp(PAPER_SCORES, PAPER_COSTS, BUDGET).total_score
+        assert res.approx_ratio(opt) == pytest.approx(0.11, abs=5e-3)
+
+    def test_random_within_budget(self):
+        res = S.select_random(PAPER_SCORES, PAPER_COSTS, BUDGET,
+                              np.random.default_rng(3))
+        assert res.total_cost <= BUDGET
+        opt = S.select_dp(PAPER_SCORES, PAPER_COSTS, BUDGET).total_score
+        assert res.total_score <= opt
+
+
+class TestSolvers:
+    def test_greedy_never_exceeds_dp(self):
+        rng = np.random.default_rng(0)
+        for _ in range(20):
+            n = int(rng.integers(5, 40))
+            scores = rng.uniform(1, 10, n)
+            costs = np.rint(rng.uniform(5, 25, n))
+            B = float(rng.integers(30, 200))
+            g = S.select_greedy(scores, costs, B)
+            d = S.select_dp(scores, costs, B)
+            assert g.total_cost <= B and d.total_cost <= B
+            assert g.total_score <= d.total_score + 1e-9
+            # known greedy bound is loose; empirically stays close
+            if d.total_score > 0:
+                assert g.total_score >= 0.5 * d.total_score
+
+    def test_dp_exact_against_bruteforce(self):
+        rng = np.random.default_rng(1)
+        for _ in range(10):
+            n = 10
+            scores = rng.uniform(1, 10, n)
+            costs = np.rint(rng.uniform(3, 15, n))
+            B = 40.0
+            best = 0.0
+            for mask in range(1 << n):
+                idx = [i for i in range(n) if mask >> i & 1]
+                if np.sum(costs[idx]) <= B:
+                    best = max(best, float(np.sum(scores[idx])))
+            d = S.select_dp(scores, costs, B)
+            assert d.total_score == pytest.approx(best, abs=1e-9)
+
+    def test_zero_budget(self):
+        res = S.select_greedy(PAPER_SCORES, PAPER_COSTS, 0.0)
+        assert res.selected == [] and res.total_score == 0.0
+
+
+class TestStage1Pipeline:
+    def _profiles(self, n=30, seed=0):
+        return C.random_profiles(n, 10, np.random.default_rng(seed))
+
+    def test_threshold_filter(self):
+        profs = self._profiles()
+        th = np.full(9, 0.3)
+        kept = S.threshold_filter(profs, th)
+        for p in kept:
+            assert np.all(p.scores[:9] >= 0.3)
+        assert len(kept) < len(profs)  # random scores: some fail
+
+    def test_budget_floor_eq11(self):
+        profs = self._profiles()
+        floor = S.budget_floor(profs, 5)
+        top5 = sorted((p.cost for p in profs), reverse=True)[:5]
+        assert floor == pytest.approx(sum(top5))
+
+    def test_select_initial_pool_feasible(self):
+        profs = self._profiles()
+        res = S.select_initial_pool(profs, budget=400.0, n_star=5)
+        assert res.feasible and len(res.selected) >= 5
+        # returned ids must be real client ids
+        ids = {p.client_id for p in profs}
+        assert set(res.selected) <= ids
+
+    def test_select_initial_pool_infeasible_thresholds(self):
+        profs = self._profiles()
+        res = S.select_initial_pool(profs, budget=1e6, n_star=5,
+                                    thresholds=np.full(9, 0.999))
+        assert not res.feasible
+
+    def test_select_initial_pool_infeasible_budget(self):
+        profs = self._profiles()
+        res = S.select_initial_pool(profs, budget=1.0, n_star=5)
+        assert not res.feasible
+        assert "Eq.(11)" in res.note
+
+    @pytest.mark.parametrize("method", ["greedy", "dp", "random"])
+    def test_all_methods_run(self, method):
+        profs = self._profiles()
+        res = S.select_initial_pool(profs, budget=300.0, n_star=2,
+                                    method=method,
+                                    rng=np.random.default_rng(0))
+        assert res.total_cost <= 300.0

@@ -1,0 +1,135 @@
+"""Reputation, fairness guarantees, and end-to-end service orchestration."""
+import numpy as np
+import pytest
+
+from repro.core import (ClientProfile, FLServiceProvider, ReputationTracker,
+                        TaskRequest, fairness_report, jain_index,
+                        model_quality_batch, random_profiles)
+from repro.core import generate_subsets
+from test_core_scheduling import make_pool
+
+
+class TestReputation:
+    def test_record_and_aggregate(self):
+        tr = ReputationTracker([0, 1])
+        tr.record_round(0, True, q_value=0.8)
+        tr.record_round(0, True, q_value=0.6)
+        tr.record_round(0, False)
+        rec = tr.records[0]
+        assert rec.b_task == pytest.approx(2 / 3)
+        assert rec.q_task == pytest.approx((0.8 + 0.6 + 0.0) / 3)
+        assert rec.s_rep == pytest.approx(rec.q_task + rec.b_task)
+
+    def test_q_from_vectors(self):
+        tr = ReputationTracker([0])
+        tr.record_round(0, True, local_update=np.ones(4), global_update=np.ones(4))
+        assert tr.records[0].q_rounds[-1] == pytest.approx(1.0)
+        with pytest.raises(ValueError):
+            tr.record_round(0, True)
+
+    def test_suspension_and_readd(self):
+        tr = ReputationTracker([0, 1], suspension_periods=1, rep_threshold=0.5)
+        tr.record_round(0, False)   # bad behavior -> s_rep = 0
+        tr.record_round(1, True, q_value=0.9)
+        pool = tr.update_pool({0, 1})
+        assert pool == {1}          # 0 suspended
+        pool = tr.update_pool(pool)
+        assert 0 in pool            # re-added after one period (paper step 4)
+
+    def test_unavailable_removed(self):
+        tr = ReputationTracker([0, 1])
+        tr.record_round(0, True, q_value=1.0)
+        tr.record_round(1, True, q_value=1.0)
+        pool = tr.update_pool({0, 1}, availability={0: False, 1: True})
+        assert pool == {1}
+
+    def test_model_quality_batch(self):
+        g = np.array([1.0, 0.0, 0.0])
+        L = np.stack([g, -g, np.array([0.0, 1.0, 0.0])])
+        q = model_quality_batch(L, g)
+        np.testing.assert_allclose(q, [1.0, -1.0, 0.0], atol=1e-12)
+
+
+class TestFairness:
+    def test_report_on_schedule(self):
+        hists = make_pool("type1")
+        res = generate_subsets(hists, n=10, delta=3, x_star=3)
+        rep = fairness_report(res, list(hists), x_star=3)
+        assert rep["coverage"] and rep["bounded"]
+        assert 0.5 < rep["jain_index"] <= 1.0
+        assert rep["max_count"] <= 3
+
+    def test_jain_index(self):
+        assert jain_index(np.ones(10)) == pytest.approx(1.0)
+        assert jain_index(np.array([1, 0, 0, 0])) == pytest.approx(0.25)
+        assert jain_index(np.zeros(0)) == 1.0
+
+
+def _stub_trainer(fail_ids=(), q=0.9):
+    def trainer(rnd, subset, weights):
+        returned = np.array([cid not in fail_ids for cid in subset])
+        q_vals = np.where(returned, q, 0.0)
+        return returned, q_vals, {"round": rnd, "loss": 1.0 / (rnd + 1)}
+    return trainer
+
+
+class TestService:
+    def _provider(self, n=60, seed=0):
+        return FLServiceProvider(random_profiles(n, 10, np.random.default_rng(seed)))
+
+    def test_run_task_end_to_end(self):
+        sp = self._provider()
+        task = TaskRequest(budget=400.0, n_star=10, subset_size=5,
+                           subset_delta=2, max_periods=3)
+        res = sp.run_task(task, _stub_trainer())
+        assert res.pool.feasible
+        assert res.num_rounds > 0
+        # every pool client participated in period 0
+        period0 = {cid for r in res.rounds if r.period == 0 for cid in r.subset}
+        assert period0 == set(res.pool.selected)
+        # weights are FedAvg-normalized per round
+        for r in res.rounds:
+            assert r.weights.sum() == pytest.approx(1.0)
+
+    def test_bad_clients_get_suspended(self):
+        sp = self._provider()
+        task = TaskRequest(budget=400.0, n_star=10, subset_size=5,
+                           subset_delta=2, max_periods=2, rep_threshold=0.5)
+        bad = set(sp.registry)  # fail everyone? no — fail three specific ids
+        bad = set(list(sp.registry)[:3])
+        res = sp.run_task(task, _stub_trainer(fail_ids=bad))
+        p0 = {cid for r in res.rounds if r.period == 0 for cid in r.subset}
+        p1 = {cid for r in res.rounds if r.period == 1 for cid in r.subset}
+        for cid in bad & p0:
+            assert cid not in p1   # suspended in the next period
+
+    def test_availability_respected(self):
+        sp = self._provider()
+        task = TaskRequest(budget=400.0, n_star=10, subset_size=5,
+                           subset_delta=2, max_periods=2)
+        gone = set(list(sp.registry)[:5])
+        res = sp.run_task(task, _stub_trainer(),
+                          availability_fn=lambda cid, period: cid not in gone)
+        p1 = {cid for r in res.rounds if r.period == 1 for cid in r.subset}
+        assert not (gone & p1)
+
+    def test_stop_fn(self):
+        sp = self._provider()
+        task = TaskRequest(budget=400.0, n_star=10, subset_size=5,
+                           subset_delta=2, max_periods=5)
+        res = sp.run_task(task, _stub_trainer(),
+                          stop_fn=lambda m: m["round"] >= 3)
+        assert res.num_rounds == 4
+
+    def test_infeasible_task(self):
+        sp = self._provider()
+        task = TaskRequest(budget=1.0, n_star=50)
+        res = sp.run_task(task, _stub_trainer())
+        assert not res.pool.feasible and res.num_rounds == 0
+
+    def test_random_scheduler_baseline(self):
+        sp = self._provider()
+        task = TaskRequest(budget=400.0, n_star=10, subset_size=5,
+                           subset_delta=2, max_periods=1, scheduler="random")
+        res = sp.run_task(task, _stub_trainer())
+        assert res.num_rounds > 0

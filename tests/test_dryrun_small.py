@@ -1,0 +1,105 @@
+"""Dry-run machinery tests.
+
+The full 512-device dry-run runs via ``python -m repro.launch.dryrun``
+(artifacts under artifacts/dryrun). Here we prove the machinery itself
+in-process-cheap ways: the HLO collective parser on fixture text, the
+roofline arithmetic, and (marked slow) a subprocess dry-run on an 8-device
+4x2 mesh for one arch per family.
+"""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+from repro.launch import roofline as R
+
+HLO_FIXTURE = """
+HloModule test
+fused_computation {
+  ROOT %x = f32[8,128]{1,0} add(f32[8,128]{1,0} %a, f32[8,128]{1,0} %b)
+}
+ENTRY main {
+  %ag = bf16[16,4096,384]{2,1,0} all-gather(bf16[16,4096,24]{2,1,0} %p), dimensions={2}
+  %ar = f32[1024]{0} all-reduce(f32[1024]{0} %q), to_apply=%sum
+  %ars = f32[512]{0} reduce-scatter(f32[1024]{0} %q), dimensions={0}
+  %a2a = (f32[64]{0}, f32[64]{0}) all-to-all(f32[64]{0} %r, f32[64]{0} %s)
+  %cp = u32[2]{0} collective-permute(u32[2]{0} %t), source_target_pairs={{0,1}}
+  %ag2 = bf16[128]{0} all-gather-start(bf16[8]{0} %u), dimensions={0}
+  %agd = bf16[128]{0} all-gather-done(bf16[128]{0} %ag2)
+}
+"""
+
+
+class TestCollectiveParser:
+    def test_counts_and_bytes(self):
+        out = R.collective_bytes(HLO_FIXTURE)
+        assert out["counts"]["all-gather"] == 2     # incl. -start, not -done
+        assert out["counts"]["all-reduce"] == 1
+        assert out["counts"]["reduce-scatter"] == 1
+        assert out["counts"]["all-to-all"] == 1
+        assert out["counts"]["collective-permute"] == 1
+        assert out["bytes"]["all-gather"] == 16 * 4096 * 384 * 2 + 128 * 2
+        assert out["bytes"]["all-reduce"] == 1024 * 4
+        assert out["bytes"]["all-to-all"] == 2 * 64 * 4   # tuple shape
+        assert out["total_bytes"] == sum(out["bytes"].values())
+
+    def test_shape_bytes(self):
+        assert R.shape_bytes("bf16[2,3]") == 12
+        assert R.shape_bytes("f32[10]{0}") == 40
+        assert R.shape_bytes("(f32[4], s32[2])") == 24
+        assert R.shape_bytes("pred[8]") == 8
+
+    def test_derive_terms(self):
+        cost = {"flops": 197e12, "bytes accessed": 819e9}
+        coll = {"total_bytes": 25e9}
+        t = R.derive_terms(cost, coll, chips=4, model_flops_global=4 * 197e12)
+        assert t.compute_s == pytest.approx(1.0)
+        assert t.memory_s == pytest.approx(1.0)
+        assert t.collective_s == pytest.approx(0.5)
+        assert t.bottleneck in ("compute", "memory")
+        assert t.useful_ratio == pytest.approx(1.0)
+
+
+FAMILY_REPS = ["smollm-360m", "qwen2-moe-a2.7b", "hymba-1.5b", "xlstm-125m",
+               "whisper-large-v3"]
+
+
+@pytest.mark.dryrun
+@pytest.mark.slow
+@pytest.mark.parametrize("arch", FAMILY_REPS)
+def test_dryrun_subprocess_small_mesh(arch, tmp_path):
+    """One family representative each: lower+compile train_4k on a 4x2
+    8-host-device mesh in a subprocess (XLA_FLAGS isolation)."""
+    env = dict(os.environ, REPRO_DRYRUN_DEVICES="8", REPRO_MESH="4,2",
+               PYTHONPATH="src")
+    res = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun", "--arch", arch,
+         "--shape", "train_4k", "--out", str(tmp_path)],
+        capture_output=True, text=True, cwd=os.path.dirname(
+            os.path.dirname(os.path.abspath(__file__))), env=env,
+        timeout=900)
+    assert res.returncode == 0, res.stdout[-2000:] + res.stderr[-2000:]
+    art = json.load(open(tmp_path / f"{arch}__train_4k__4x2.json"))
+    assert art["ok"]
+    assert art["roofline"]["flops"] > 0
+    assert art["roofline"]["bottleneck"] in ("compute", "memory", "collective")
+
+
+def test_production_artifacts_if_present():
+    """When the full dry-run has been run, every single-pod artifact must
+    be ok and the multi-pod pass present."""
+    art_dir = os.path.join(os.path.dirname(__file__), "..", "artifacts",
+                           "dryrun")
+    if not os.path.isdir(art_dir):
+        pytest.skip("no artifacts yet")
+    files = [f for f in os.listdir(art_dir) if f.endswith(".json")]
+    if not files:
+        pytest.skip("no artifacts yet")
+    bad = []
+    for f in files:
+        r = json.load(open(os.path.join(art_dir, f)))
+        if not r.get("ok"):
+            bad.append((f, r.get("error", "")[:100]))
+    assert not bad, bad

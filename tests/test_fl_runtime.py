@@ -1,0 +1,202 @@
+"""FL runtime tests: partitions, federated rounds, optimizer, data,
+checkpointing."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import CheckpointManager, restore, save
+from repro.core.criteria import nid
+from repro.data import make_classification_data, make_lm_data
+from repro.fl import (client_histograms, make_fl_round, partition_labels,
+                      tree_weighted_sum)
+from repro.models import cnn
+from repro.optim import adam, apply_updates, global_norm, sgd, warmup_cosine
+
+
+class TestPartition:
+    @pytest.mark.parametrize("kind,max_labels", [("type1", 1), ("type2", 2),
+                                                 ("type3", 3)])
+    def test_label_counts_per_type(self, kind, max_labels):
+        labels = np.random.default_rng(0).integers(0, 10, 5000)
+        parts = partition_labels(labels, 50, kind, 10, seed=1)
+        hists = client_histograms(labels, parts, 10)
+        for h in hists.values():
+            assert np.count_nonzero(h) <= max_labels
+            assert h.sum() > 0
+
+    def test_type2_ratio(self):
+        labels = np.random.default_rng(0).integers(0, 10, 20000)
+        parts = partition_labels(labels, 20, "type2", 10, seed=2,
+                                 samples_per_client=100)
+        hists = client_histograms(labels, parts, 10)
+        for h in hists.values():
+            top = np.sort(h)[::-1]
+            assert top[0] / h.sum() == pytest.approx(0.9, abs=0.05)
+
+    def test_iid_partition_low_nid(self):
+        labels = np.random.default_rng(0).integers(0, 10, 10000)
+        parts = partition_labels(labels, 20, "iid", 10, seed=3)
+        hists = client_histograms(labels, parts, 10)
+        for h in hists.values():
+            assert nid(h) < 0.2
+
+
+class TestSyntheticData:
+    def test_classification_learnable_shapes(self):
+        d = make_classification_data("mnist", 256, seed=0)
+        assert d.images.shape == (256, 28, 28, 1)
+        assert d.images.min() >= 0 and d.images.max() <= 1
+        d2 = make_classification_data("cifar", 64, seed=0)
+        assert d2.images.shape == (64, 32, 32, 3)
+
+    def test_lm_data_predictable(self):
+        d = make_lm_data(16, 32, 64, seed=0)
+        assert d.tokens.shape == (16, 33)
+        assert d.tokens.max() < 64
+
+    def test_cnn_learns_synthetic(self):
+        """Sanity: a few SGD steps reduce loss on the synthetic task."""
+        d = make_classification_data("mnist", 512, seed=0)
+        cfg = cnn.MNIST_CNN
+        params = cnn.init_params(cfg, jax.random.PRNGKey(0))
+        opt = adam(3e-3)
+        state = opt.init(params)
+        batch = {"images": jnp.asarray(d.images[:128]),
+                 "labels": jnp.asarray(d.labels[:128])}
+
+        @jax.jit
+        def step(p, s):
+            (l, m), g = jax.value_and_grad(
+                lambda p_: cnn.loss_fn(cfg, p_, batch), has_aux=True)(p)
+            u, s = opt.update(g, s, p)
+            return apply_updates(p, u), s, l
+
+        losses = []
+        for _ in range(30):
+            params, state, l = step(params, state)
+            losses.append(float(l))
+        assert losses[-1] < losses[0] * 0.5
+
+
+class TestOptim:
+    def test_adam_converges_quadratic(self):
+        params = {"x": jnp.array([3.0, -2.0])}
+        opt = adam(0.1)
+        s = opt.init(params)
+        for _ in range(200):
+            g = jax.grad(lambda p: jnp.sum(p["x"] ** 2))(params)
+            u, s = opt.update(g, s, params)
+            params = apply_updates(params, u)
+        assert float(jnp.abs(params["x"]).max()) < 1e-2
+
+    def test_sgd_momentum_matches_manual(self):
+        opt = sgd(0.1, momentum=0.9)
+        p = {"w": jnp.array(1.0)}
+        s = opt.init(p)
+        g = {"w": jnp.array(2.0)}
+        u1, s = opt.update(g, s, p)
+        assert float(u1["w"]) == pytest.approx(-0.2)
+        u2, s = opt.update(g, s, p)
+        assert float(u2["w"]) == pytest.approx(-0.1 * (0.9 * 2 + 2))
+
+    def test_grad_clip(self):
+        opt = adam(1.0, grad_clip=1.0)
+        p = {"w": jnp.ones(4)}
+        s = opt.init(p)
+        g = {"w": jnp.full(4, 100.0)}
+        u, s = opt.update(g, s, p)
+        assert float(global_norm(g)) > 1.0
+        assert bool(jnp.isfinite(u["w"]).all())
+
+    def test_warmup_cosine(self):
+        f = warmup_cosine(1.0, 10, 100)
+        assert float(f(jnp.asarray(1))) == pytest.approx(0.1)
+        assert float(f(jnp.asarray(10))) == pytest.approx(1.0, abs=0.01)
+        assert float(f(jnp.asarray(100))) == pytest.approx(0.0, abs=1e-6)
+
+
+class TestFLRound:
+    def _setup(self):
+        cfg = cnn.MNIST_CNN
+        params = cnn.init_params(cfg, jax.random.PRNGKey(0))
+        round_fn = make_fl_round(lambda p, b: cnn.loss_fn(cfg, p, b),
+                                 local_lr=0.05, local_steps=2)
+        d = make_classification_data("mnist", 4 * 2 * 8, seed=0)
+        batches = {
+            "images": jnp.asarray(d.images.reshape(4, 2, 8, 28, 28, 1)),
+            "labels": jnp.asarray(d.labels.reshape(4, 2, 8)),
+        }
+        return params, round_fn, batches
+
+    def test_round_updates_params_and_q(self):
+        params, round_fn, batches = self._setup()
+        w = jnp.full(4, 0.25)
+        mask = jnp.ones(4)
+        new_params, info = round_fn(params, batches, w, mask)
+        diff = jax.tree_util.tree_map(lambda a, b: float(jnp.abs(a - b).max()),
+                                      params, new_params)
+        assert max(jax.tree_util.tree_leaves(diff)) > 0
+        q = np.asarray(info["q_values"])
+        assert q.shape == (4,)
+        assert np.all(q > 0.2)  # same-task clients: deltas roughly aligned
+
+    def test_dropped_client_excluded(self):
+        params, round_fn, batches = self._setup()
+        w = jnp.full(4, 0.25)
+        mask = jnp.array([1.0, 1.0, 1.0, 0.0])
+        p_a, info_a = round_fn(params, batches, w, mask)
+        # manually zero client 3's data -> same aggregate
+        b2 = jax.tree_util.tree_map(lambda x: x.at[3].set(x[2]), batches)
+        p_b, _ = round_fn(params, b2, w, mask)
+        diff = jax.tree_util.tree_map(
+            lambda a, b: float(jnp.abs(a.astype(jnp.float32)
+                                       - b.astype(jnp.float32)).max()),
+            p_a, p_b)
+        assert max(jax.tree_util.tree_leaves(diff)) < 1e-6
+        assert float(info_a["q_values"][3]) == 0.0
+
+    def test_weighted_sum_kernel_path(self):
+        trees = {"a": jnp.arange(12.0).reshape(3, 4)}
+        w = jnp.array([0.5, 0.3, 0.2])
+        plain = tree_weighted_sum(trees, w, use_kernel=False)
+        np.testing.assert_allclose(
+            np.asarray(plain["a"]),
+            np.asarray(0.5 * trees["a"][0] + 0.3 * trees["a"][1]
+                       + 0.2 * trees["a"][2]), rtol=1e-6)
+
+
+class TestCheckpoint:
+    def test_roundtrip(self, tmp_path):
+        tree = {"a": jnp.arange(6, dtype=jnp.float32).reshape(2, 3),
+                "b": {"c": jnp.ones(4, jnp.bfloat16),
+                      "d": jnp.array(3, jnp.int32)},
+                "lst": [jnp.zeros(2), jnp.ones(2)]}
+        p = str(tmp_path / "x.ckpt")
+        save(p, tree)
+        back = restore(p, tree)
+        for x, y in zip(jax.tree_util.tree_leaves(tree),
+                        jax.tree_util.tree_leaves(back)):
+            assert x.dtype == y.dtype
+            np.testing.assert_array_equal(np.asarray(x, np.float32),
+                                          np.asarray(y, np.float32))
+
+    def test_shape_mismatch_raises(self, tmp_path):
+        p = str(tmp_path / "x.ckpt")
+        save(p, {"a": jnp.zeros(3)})
+        with pytest.raises(ValueError):
+            restore(p, {"a": jnp.zeros(4)})
+        with pytest.raises(KeyError):
+            restore(p, {"zz": jnp.zeros(3)})
+
+    def test_manager_rotation(self, tmp_path):
+        mgr = CheckpointManager(str(tmp_path), keep=2)
+        tree = {"w": jnp.zeros(2)}
+        for s in range(5):
+            mgr.save(s, jax.tree_util.tree_map(lambda x: x + s, tree))
+        assert mgr.steps() == [3, 4]
+        step, back = mgr.restore_latest(tree)
+        assert step == 4
+        np.testing.assert_allclose(np.asarray(back["w"]), 4.0)

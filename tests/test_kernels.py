@@ -1,0 +1,155 @@
+"""Pallas kernel validation: interpret-mode execution vs ref.py oracles,
+swept over shapes and dtypes (per the deliverable-c contract)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ref
+from repro.kernels.fedavg_agg import fedavg_agg
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.mlstm_scan import mlstm_scan
+from repro.kernels.rmsnorm import rmsnorm
+from repro.kernels.swiglu import swiglu
+
+
+def rk(i):
+    return jax.random.PRNGKey(i)
+
+
+def tol(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 \
+        else dict(rtol=2e-5, atol=2e-5)
+
+
+def assert_close(a, b, dtype):
+    np.testing.assert_allclose(np.asarray(a, np.float32),
+                               np.asarray(b, np.float32), **tol(dtype))
+
+
+class TestFlashAttention:
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    @pytest.mark.parametrize("B,H,G,S,hd", [
+        (1, 2, 2, 32, 16),    # MHA
+        (2, 4, 2, 64, 32),    # GQA rep=2
+        (1, 8, 1, 48, 64),    # MQA, ragged seq vs block
+    ])
+    def test_causal_sweep(self, B, H, G, S, hd, dtype):
+        q = jax.random.normal(rk(0), (B, H, S, hd), dtype)
+        k = jax.random.normal(rk(1), (B, G, S, hd), dtype)
+        v = jax.random.normal(rk(2), (B, G, S, hd), dtype)
+        out = flash_attention(q, k, v, causal=True, block_q=16, block_k=16,
+                              interpret=True)
+        expected = ref.flash_attention_ref(q, k, v, causal=True)
+        assert_close(out, expected, dtype)
+
+    @pytest.mark.parametrize("window", [8, 16])
+    def test_sliding_window(self, window):
+        B, H, G, S, hd = 1, 2, 1, 64, 16
+        q = jax.random.normal(rk(3), (B, H, S, hd))
+        k = jax.random.normal(rk(4), (B, G, S, hd))
+        v = jax.random.normal(rk(5), (B, G, S, hd))
+        out = flash_attention(q, k, v, causal=True, window=window,
+                              block_q=16, block_k=16, interpret=True)
+        expected = ref.flash_attention_ref(q, k, v, causal=True, window=window)
+        assert_close(out, expected, jnp.float32)
+
+    def test_decode_shape_sq1(self):
+        """Sq=1 against a long KV (right-aligned causal) — the serve path."""
+        B, H, G, Sk, hd = 2, 4, 2, 128, 32
+        q = jax.random.normal(rk(6), (B, H, 1, hd))
+        k = jax.random.normal(rk(7), (B, G, Sk, hd))
+        v = jax.random.normal(rk(8), (B, G, Sk, hd))
+        out = flash_attention(q, k, v, causal=True, block_q=8, block_k=32,
+                              interpret=True)
+        expected = ref.flash_attention_ref(q, k, v, causal=True)
+        assert_close(out, expected, jnp.float32)
+
+    def test_noncausal(self):
+        B, H, G, S, hd = 1, 2, 2, 32, 16
+        q = jax.random.normal(rk(9), (B, H, S, hd))
+        k = jax.random.normal(rk(10), (B, G, S, hd))
+        v = jax.random.normal(rk(11), (B, G, S, hd))
+        out = flash_attention(q, k, v, causal=False, block_q=16, block_k=16,
+                              interpret=True)
+        expected = ref.flash_attention_ref(q, k, v, causal=False)
+        assert_close(out, expected, jnp.float32)
+
+    def test_ragged_seq_not_multiple_of_block(self):
+        B, H, G, S, hd = 1, 2, 2, 40, 16   # 40 % 16 != 0
+        q = jax.random.normal(rk(12), (B, H, S, hd))
+        k = jax.random.normal(rk(13), (B, G, S, hd))
+        v = jax.random.normal(rk(14), (B, G, S, hd))
+        out = flash_attention(q, k, v, causal=True, block_q=16, block_k=16,
+                              interpret=True)
+        expected = ref.flash_attention_ref(q, k, v, causal=True)
+        assert_close(out, expected, jnp.float32)
+
+
+class TestRMSNorm:
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    @pytest.mark.parametrize("shape", [(8, 64), (3, 5, 128), (1, 256)])
+    def test_sweep(self, shape, dtype):
+        x = jax.random.normal(rk(0), shape, dtype) * 3
+        s = jax.random.normal(rk(1), shape[-1:], dtype)
+        out = rmsnorm(x, s, block_rows=4, interpret=True)
+        assert_close(out, ref.rmsnorm_ref(x, s), dtype)
+
+
+class TestSwiGLU:
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    @pytest.mark.parametrize("M,D,F", [(16, 32, 48), (7, 64, 24), (64, 128, 256)])
+    def test_sweep(self, M, D, F, dtype):
+        x = jax.random.normal(rk(0), (M, D), dtype)
+        wg = jax.random.normal(rk(1), (D, F), dtype) * 0.1
+        wu = jax.random.normal(rk(2), (D, F), dtype) * 0.1
+        out = swiglu(x, wg, wu, block_m=8, block_n=16, block_k=16,
+                     interpret=True)
+        assert_close(out, ref.swiglu_ref(x, wg, wu), dtype)
+
+
+class TestFedAvgAgg:
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    @pytest.mark.parametrize("K,P", [(4, 128), (13, 1000), (1, 64)])
+    def test_sweep(self, K, P, dtype):
+        u = jax.random.normal(rk(0), (K, P), dtype)
+        w = jax.nn.softmax(jax.random.normal(rk(1), (K,)))
+        out = fedavg_agg(u, w, block_p=64, interpret=True)
+        assert_close(out, ref.fedavg_agg_ref(u, w), dtype)
+
+    def test_matches_paper_weighting(self):
+        """Aggregation with p_k = n_k/Σn matches manual weighted sum."""
+        u = jnp.stack([jnp.ones(32), 2 * jnp.ones(32), 4 * jnp.ones(32)])
+        w = jnp.array([0.5, 0.25, 0.25])
+        out = fedavg_agg(u, w, block_p=32, interpret=True)
+        np.testing.assert_allclose(np.asarray(out), 2.0, rtol=1e-6)
+
+
+class TestMLSTMScan:
+    @pytest.mark.parametrize("normalize", [True, False])
+    @pytest.mark.parametrize("S,chunk", [(32, 8), (40, 16), (16, 16)])
+    def test_sweep(self, S, chunk, normalize):
+        B, H, dk, dv = 2, 3, 16, 8
+        q = jax.random.normal(rk(0), (B, H, S, dk))
+        k = jax.random.normal(rk(1), (B, H, S, dk)) * 0.3
+        v = jax.random.normal(rk(2), (B, H, S, dv))
+        log_f = jax.nn.log_sigmoid(jax.random.normal(rk(3), (B, H, S)) + 2)
+        log_i = (jax.random.normal(rk(4), (B, H, S)) * 0.5) if normalize else None
+        out = mlstm_scan(q, k, v, log_f, log_i, chunk=chunk,
+                         normalize=normalize, interpret=True)
+        expected = ref.mlstm_scan_ref(q, k, v, log_f, log_i, chunk=chunk,
+                                      normalize=normalize)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(expected),
+                                   rtol=5e-4, atol=5e-4)
+
+    def test_bfloat16(self):
+        B, H, S, d = 1, 2, 32, 8
+        q = jax.random.normal(rk(0), (B, H, S, d), jnp.bfloat16)
+        k = jax.random.normal(rk(1), (B, H, S, d), jnp.bfloat16)
+        v = jax.random.normal(rk(2), (B, H, S, d), jnp.bfloat16)
+        log_f = jax.nn.log_sigmoid(jax.random.normal(rk(3), (B, H, S)) + 2)
+        out = mlstm_scan(q, k, v, log_f, None, chunk=8, normalize=False,
+                         interpret=True)
+        expected = ref.mlstm_scan_ref(q, k, v, log_f, None, chunk=8,
+                                      normalize=False)
+        assert_close(out, expected, jnp.bfloat16)

@@ -1,0 +1,210 @@
+"""Model-layer correctness: chunked GLA vs sequential recurrence, MoE
+scatter dispatch vs dense oracle, attention masks, cache consistency."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import layers as L
+from repro.models import moe as M
+from repro.models import ssm as S
+from repro.models import transformer as T
+
+
+def rk(i=0):
+    return jax.random.PRNGKey(i)
+
+
+class TestGatedLinearAttention:
+    @pytest.mark.parametrize("normalize", [True, False])
+    @pytest.mark.parametrize("seq,chunk", [(16, 4), (17, 4), (32, 32), (7, 16)])
+    def test_chunked_matches_sequential(self, normalize, seq, chunk):
+        B, H, dk, dv = 2, 3, 8, 5
+        ks = jax.random.split(rk(0), 6)
+        q = jax.random.normal(ks[0], (B, seq, H, dk))
+        k = jax.random.normal(ks[1], (B, seq, H, dk)) * 0.5
+        v = jax.random.normal(ks[2], (B, seq, H, dv))
+        log_f = jax.nn.log_sigmoid(jax.random.normal(ks[3], (B, seq, H)) + 2.0)
+        log_i = jax.random.normal(ks[4], (B, seq, H)) * 0.5
+        li = log_i if normalize else None
+
+        out, final = S.gated_linear_attention(q, k, v, log_f, li, chunk=chunk,
+                                              normalize=normalize)
+        # sequential oracle via the decode step
+        state = {"S": jnp.zeros((B, H, dk, dv)), "n": jnp.zeros((B, H, dk)),
+                 "m": jnp.zeros((B, H))}
+        outs = []
+        for t in range(seq):
+            li_t = log_i[:, t] if normalize else None
+            y, state = S.gla_decode_step(q[:, t], k[:, t], v[:, t],
+                                         log_f[:, t], li_t, state,
+                                         normalize=normalize)
+            outs.append(y)
+        seq_out = jnp.stack(outs, axis=1)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(seq_out),
+                                   rtol=2e-4, atol=2e-4)
+        np.testing.assert_allclose(np.asarray(final["S"] * jnp.exp(final["m"])[..., None, None]),
+                                   np.asarray(state["S"] * jnp.exp(state["m"])[..., None, None]),
+                                   rtol=2e-4, atol=2e-4)
+
+    def test_initial_state_continuation(self):
+        """Processing [a; b] == processing a then b with carried state."""
+        B, H, dk, dv, S1, S2 = 1, 2, 4, 4, 12, 8
+        ks = jax.random.split(rk(1), 5)
+        q = jax.random.normal(ks[0], (B, S1 + S2, H, dk))
+        k = jax.random.normal(ks[1], (B, S1 + S2, H, dk))
+        v = jax.random.normal(ks[2], (B, S1 + S2, H, dv))
+        log_f = jax.nn.log_sigmoid(jax.random.normal(ks[3], (B, S1 + S2, H)) + 1.0)
+        log_i = jax.random.normal(ks[4], (B, S1 + S2, H)) * 0.3
+
+        full, _ = S.gated_linear_attention(q, k, v, log_f, log_i, chunk=4)
+        a, st = S.gated_linear_attention(q[:, :S1], k[:, :S1], v[:, :S1],
+                                         log_f[:, :S1], log_i[:, :S1], chunk=4)
+        b, _ = S.gated_linear_attention(q[:, S1:], k[:, S1:], v[:, S1:],
+                                        log_f[:, S1:], log_i[:, S1:], chunk=4,
+                                        initial_state=st)
+        np.testing.assert_allclose(np.asarray(jnp.concatenate([a, b], 1)),
+                                   np.asarray(full), rtol=2e-4, atol=2e-4)
+
+    def test_no_nan_extreme_gates(self):
+        B, seq, H, d = 1, 32, 2, 4
+        q = jnp.ones((B, seq, H, d))
+        k = jnp.ones((B, seq, H, d))
+        v = jnp.ones((B, seq, H, d))
+        log_f = jnp.full((B, seq, H), -50.0)     # near-total forget
+        log_i = jnp.full((B, seq, H), 40.0)      # huge input gate
+        out, _ = S.gated_linear_attention(q, k, v, log_f, log_i, chunk=8)
+        assert bool(jnp.isfinite(out).all())
+
+
+class TestMoE:
+    def _cfg(self, **kw):
+        return get_config("qwen2-moe-a2.7b").reduced(**kw)
+
+    def test_scatter_matches_dense_when_no_drops(self):
+        import dataclasses
+        cfg = dataclasses.replace(self._cfg(), capacity_factor=64.0)
+        p = M.moe_params(cfg, rk(0))
+        x = jax.random.normal(rk(1), (2, 16, cfg.d_model), jnp.float32)
+        y, aux = M.moe_ffn(cfg, p, x)
+        y_ref = M.moe_ffn_dense(cfg, p, x)
+        np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
+                                   rtol=2e-3, atol=2e-3)
+        assert float(aux) > 0
+
+    def test_capacity_drops_are_bounded(self):
+        import dataclasses
+        cfg = dataclasses.replace(self._cfg(), capacity_factor=1.0)
+        p = M.moe_params(cfg, rk(0))
+        x = jax.random.normal(rk(1), (4, 32, cfg.d_model), jnp.float32)
+        y, _ = M.moe_ffn(cfg, p, x)
+        assert y.shape == x.shape and bool(jnp.isfinite(y).all())
+
+    def test_aux_loss_balanced_router_is_one(self):
+        """For a perfectly uniform router, Switch aux ≈ weight·1."""
+        import dataclasses
+        cfg = dataclasses.replace(self._cfg(), router_aux_weight=1.0)
+        p = M.moe_params(cfg, rk(0))
+        p = dict(p, router=jnp.zeros_like(p["router"]))  # uniform logits
+        x = jax.random.normal(rk(1), (2, 64, cfg.d_model), jnp.float32)
+        _, aux = M.moe_ffn(cfg, p, x)
+        assert 0.9 < float(aux) < 1.1
+
+
+class TestAttention:
+    def test_gqa_equals_mha_when_repeated(self):
+        B, Sq, H, hd = 2, 8, 4, 16
+        ks = jax.random.split(rk(0), 3)
+        q = jax.random.normal(ks[0], (B, Sq, H, hd))
+        k = jax.random.normal(ks[1], (B, Sq, 2, hd))
+        v = jax.random.normal(ks[2], (B, Sq, 2, hd))
+        out_gqa = L.dot_product_attention(q, k, v)
+        k_full = jnp.repeat(k, 2, axis=2)
+        v_full = jnp.repeat(v, 2, axis=2)
+        out_mha = L.dot_product_attention(q, k_full, v_full)
+        np.testing.assert_allclose(np.asarray(out_gqa), np.asarray(out_mha),
+                                   rtol=1e-5, atol=1e-5)
+
+    def test_causal_mask_blocks_future(self):
+        pos = jnp.arange(6)[None]
+        m = L.attention_mask(pos, pos, causal=True, window=0)[0]
+        assert bool(m[0, 0]) and not bool(m[0, 5]) and bool(m[5, 0])
+
+    def test_window_mask(self):
+        pos = jnp.arange(10)[None]
+        m = L.attention_mask(pos, pos, causal=True, window=3)[0]
+        assert bool(m[5, 5]) and bool(m[5, 3]) and not bool(m[5, 2])
+
+    def test_rope_relative_property(self):
+        """RoPE scores depend only on relative distance."""
+        hd = 32
+        x = jax.random.normal(rk(0), (1, 1, 1, hd))
+        y = jax.random.normal(rk(1), (1, 1, 1, hd))
+        def score(p_q, p_k):
+            q = L.apply_rope(x, jnp.array([[p_q]]), 10000.0)
+            k = L.apply_rope(y, jnp.array([[p_k]]), 10000.0)
+            return float(jnp.sum(q * k))
+        assert score(3, 1) == pytest.approx(score(10, 8), rel=1e-5)
+        assert score(3, 1) != pytest.approx(score(3, 2), rel=1e-3)
+
+    def test_ring_cache_build_and_attend(self):
+        """build_kv_cache ring layout + cache_attend == direct windowed attn."""
+        B, Ss, G, hd, W = 1, 12, 2, 8, 8
+        ks = jax.random.split(rk(2), 3)
+        k = jax.random.normal(ks[0], (B, Ss, G, hd))
+        v = jax.random.normal(ks[1], (B, Ss, G, hd))
+        pos = jnp.arange(Ss)[None]
+        cache = L.build_kv_cache(k, v, pos, window=W)
+        assert cache["k"].shape == (B, W, G, hd)
+        # query at position Ss attends to last W-1 keys + itself
+        q = jax.random.normal(ks[2], (B, 1, 2 * G, hd))
+        cfg = get_config("smollm-360m").reduced()
+        qpos = jnp.full((B, 1), Ss)
+        nk = jax.random.normal(rk(3), (B, 1, G, hd))
+        nv = jax.random.normal(rk(4), (B, 1, G, hd))
+        o, newc = L.cache_attend(cfg, q, cache, qpos, W, new_k=nk, new_v=nv)
+        # reference: direct attention over the last W tokens
+        k_all = jnp.concatenate([k, nk], axis=1)[:, -(W):]
+        v_all = jnp.concatenate([v, nv], axis=1)[:, -(W):]
+        ref = L.dot_product_attention(q, k_all, v_all)
+        np.testing.assert_allclose(np.asarray(o), np.asarray(ref),
+                                   rtol=1e-5, atol=1e-5)
+
+
+class TestNorms:
+    def test_rmsnorm_unit_scale(self):
+        x = jax.random.normal(rk(0), (4, 8)) * 10
+        y = L.rmsnorm(x, jnp.ones(8))
+        rms = jnp.sqrt(jnp.mean(y ** 2, -1))
+        np.testing.assert_allclose(np.asarray(rms), 1.0, rtol=1e-4)
+
+    def test_layernorm_zero_mean(self):
+        x = jax.random.normal(rk(0), (4, 8)) + 5
+        y = L.layernorm(x, jnp.ones(8), jnp.zeros(8))
+        np.testing.assert_allclose(np.asarray(y.mean(-1)), 0.0, atol=1e-5)
+
+
+class TestChunkedAttention:
+    @pytest.mark.parametrize("causal,window", [(True, 0), (True, 7), (False, 0)])
+    def test_matches_full(self, causal, window):
+        B, S, H, G, hd = 2, 37, 4, 2, 16
+        ks = jax.random.split(rk(7), 3)
+        q = jax.random.normal(ks[0], (B, S, H, hd))
+        k = jax.random.normal(ks[1], (B, S, G, hd))
+        v = jax.random.normal(ks[2], (B, S, G, hd))
+        pos = jnp.broadcast_to(jnp.arange(S), (B, S))
+        mask = L.attention_mask(pos, pos, causal, window)[:, None]
+        full = L.dot_product_attention(q, k, v, mask)
+        chunked = L.chunked_attention(q, k, v, pos, causal=causal,
+                                      window=window, q_chunk=8)
+        np.testing.assert_allclose(np.asarray(chunked), np.asarray(full),
+                                   rtol=1e-5, atol=1e-5)
+
+    def test_grad_flows(self):
+        B, S, H, hd = 1, 16, 2, 8
+        q = jax.random.normal(rk(8), (B, S, H, hd))
+        pos = jnp.broadcast_to(jnp.arange(S), (B, S))
+        g = jax.grad(lambda q_: L.chunked_attention(
+            q_, q_, q_, pos, causal=True, window=0, q_chunk=4).sum())(q)
+        assert bool(jnp.isfinite(g).all())

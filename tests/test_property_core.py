@@ -1,0 +1,93 @@
+"""Hypothesis property-based tests for the control plane's invariants."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+import hypothesis.extra.numpy as hnp
+
+from repro.core import criteria as C
+from repro.core import mkp as M
+from repro.core import scheduling as Sch
+from repro.core import selection as S
+
+hist_strategy = hnp.arrays(
+    dtype=np.float64, shape=st.tuples(st.integers(2, 12)),
+    elements=st.floats(0, 1000, allow_nan=False))
+
+
+@settings(max_examples=200, deadline=None)
+@given(hist_strategy)
+def test_nid_in_unit_interval(h):
+    v = float(C.nid(h))
+    assert 0.0 <= v <= 1.0
+
+
+@settings(max_examples=200, deadline=None)
+@given(hist_strategy)
+def test_nid_scale_invariant(h):
+    """Nid(αh) == Nid(h) for α>0 — it is a distribution property."""
+    if h.sum() > 0:
+        np.testing.assert_allclose(C.nid(h * 3.7), C.nid(h), atol=1e-9)
+
+
+@settings(max_examples=100, deadline=None)
+@given(hist_strategy, hist_strategy)
+def test_nid_variants_agree_on_extremes(h1, h2):
+    for fn in (C.nid, C.nid_l2, C.nid_hellinger, C.nid_kl):
+        v = fn(h1)
+        assert -1e-9 <= float(v) <= 1 + 1e-9
+
+
+knapsack = st.integers(3, 25).flatmap(lambda n: st.tuples(
+    hnp.arrays(np.float64, n, elements=st.floats(0.1, 50, allow_nan=False)),
+    hnp.arrays(np.float64, n, elements=st.floats(1, 30, allow_nan=False)),
+    st.floats(5, 200)))
+
+
+@settings(max_examples=60, deadline=None)
+@given(knapsack)
+def test_greedy_selection_budget_and_bound(args):
+    scores, costs, B = args
+    g = S.select_greedy(scores, costs, B)
+    assert g.total_cost <= B + 1e-9
+    gs = S.select_greedy(scores, costs, B, skip_unaffordable=True)
+    # the beyond-paper skipping variant dominates the paper's variant
+    assert gs.total_score >= g.total_score - 1e-9
+    d = S.select_dp(scores, np.rint(costs), np.floor(B))
+    assert d.total_score >= S.select_greedy(scores, np.rint(costs),
+                                            np.floor(B)).total_score - 1e-9
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.integers(2, 20), st.integers(2, 6), st.integers(0, 10_000))
+def test_mkp_greedy_feasibility(n, m, seed):
+    rng = np.random.default_rng(seed)
+    w = rng.integers(0, 20, size=(n, m)).astype(float)
+    v = w.sum(axis=1) + 1.0
+    c = rng.uniform(0.3, 0.8) * np.maximum(w.sum(axis=0), 1.0)
+    res = M.solve_mkp_greedy(v, w, c)
+    assert M.is_feasible(w, c, res.selected)
+    assert len(set(res.selected)) == len(res.selected)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(5, 60), st.integers(2, 10), st.integers(2, 8),
+       st.integers(0, 3), st.integers(1, 4), st.integers(0, 10_000))
+def test_schedule_invariants(n_clients, n_classes, n, delta, x_star, seed):
+    """The paper's fairness guarantee holds for arbitrary pools."""
+    rng = np.random.default_rng(seed)
+    hists = {}
+    for i in range(n_clients):
+        h = np.zeros(n_classes)
+        k = int(rng.integers(1, n_classes + 1))
+        lab = rng.choice(n_classes, k, replace=False)
+        h[lab] = rng.integers(1, 100, size=k)
+        hists[i] = h
+    res = Sch.generate_subsets(hists, n=n, delta=delta, x_star=x_star)
+    # coverage: every client at least once
+    assert set().union(*map(set, res.subsets)) == set(hists)
+    # bound: at most x* times
+    assert max(res.counts.values()) <= x_star
+    # subsets are duplicate-free
+    for s in res.subsets:
+        assert len(set(s)) == len(s)
+    # Nid values are valid
+    assert all(0.0 <= v <= 1.0 for v in res.nids)
