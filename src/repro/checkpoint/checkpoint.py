@@ -5,6 +5,10 @@ Layout: <dir>/step_<n>.ckpt, each file a zstd-compressed msgpack map
 exactly (raw little-endian bytes); bfloat16 is stored via uint16 view.
 Restore targets an example pytree (for structure) or the stored
 structure alone.
+
+``zstandard`` is an optional dependency: without it, checkpoints are
+written as raw msgpack (restore auto-detects either format via the zstd
+frame magic, so compressed and uncompressed files interoperate).
 """
 from __future__ import annotations
 
@@ -16,7 +20,13 @@ import jax
 import jax.numpy as jnp
 import msgpack
 import numpy as np
-import zstandard
+
+try:
+    import zstandard
+except ModuleNotFoundError:      # optional: fall back to uncompressed
+    zstandard = None
+
+_ZSTD_MAGIC = b"\x28\xb5\x2f\xfd"
 
 
 def _leaf_to_record(x) -> dict:
@@ -49,16 +59,24 @@ def save(path: str, tree) -> None:
     payload = {"keys": keys, "leaves": [_leaf_to_record(x) for x in leaves]}
     packed = msgpack.packb(payload, use_bin_type=True)
     os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    if zstandard is not None:
+        packed = zstandard.ZstdCompressor(level=3).compress(packed)
     tmp = path + ".tmp"
     with open(tmp, "wb") as f:
-        f.write(zstandard.ZstdCompressor(level=3).compress(packed))
+        f.write(packed)
     os.replace(tmp, path)  # atomic
 
 
 def restore(path: str, like):
     """Restore into the structure of ``like`` (keys must match)."""
     with open(path, "rb") as f:
-        packed = zstandard.ZstdDecompressor().decompress(f.read())
+        packed = f.read()
+    if packed[:4] == _ZSTD_MAGIC:
+        if zstandard is None:
+            raise ModuleNotFoundError(
+                f"{path} is zstd-compressed but the optional 'zstandard' "
+                "module is not installed")
+        packed = zstandard.ZstdDecompressor().decompress(packed)
     payload = msgpack.unpackb(packed, raw=False)
     keys, like_leaves, treedef = _paths(like)
     stored = dict(zip(payload["keys"], payload["leaves"]))

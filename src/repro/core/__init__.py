@@ -1,30 +1,56 @@
-"""Core library: the paper's client selection + scheduling contribution."""
+"""Core library: the paper's client selection + scheduling contribution.
+
+Data flow (post array-native refactor):
+
+- ``ClientPoolState`` (pool.py) is the internal representation — a
+  struct-of-arrays (scores ``(n, 11)``, histograms ``(n, c)``, costs,
+  active mask, participation counts) shared by every stage.
+- ``engine`` holds the batched hot paths: vectorized greedy knapsack
+  (numpy, bit-exact vs. the legacy loop), a jit+vmap multi-task greedy,
+  and the Toyoda MKP scoring (numpy / jax / Pallas kernel).
+- ``selection`` / ``scheduling`` / ``service`` consume pool-state
+  columns; the dataclass APIs (``ClientProfile`` lists, ``dict``
+  histograms) keep working through thin adapters
+  (``ClientPoolState.from_profiles`` / ``from_histograms``).
+- The pre-refactor loop implementations survive as
+  ``select_greedy_legacy`` and ``generate_subsets_legacy`` — reference
+  paths for equivalence tests and benchmarks, not production.
+
+Use the dataclass API for small pools and readability; hand a
+``ClientPoolState`` to ``select_initial_pool`` / ``generate_subsets`` /
+``FLServiceProvider`` for large-n or multi-task serving.
+"""
 from .criteria import (CRITERIA, NUM_CRITERIA, ClientProfile, build_profiles,
                        cosine_similarity, data_dist_score, linear_cost, nid,
                        nid_hellinger, nid_kl, nid_l2, overall_score,
-                       random_profiles, resource_scores)
+                       random_histograms, random_profiles, resource_scores)
 from .fairness import (bounded_participation, coverage, fairness_report,
                        jain_index, over_selection_fraction)
 from .mkp import MKPResult, solve_mkp, solve_mkp_bnb, solve_mkp_greedy
+from .pool import ClientPoolState
 from .reputation import ReputationRecord, ReputationTracker, model_quality_batch
-from .scheduling import (ScheduleResult, default_capacities, generate_subsets,
-                         participation_weights, random_subsets, subset_nid)
+from .scheduling import (ScheduleResult, default_capacities,
+                         default_capacities_arrays, generate_subsets,
+                         generate_subsets_legacy, participation_weights,
+                         random_subsets, subset_nid)
 from .selection import (SelectionResult, budget_floor, select_dp,
-                        select_greedy, select_initial_pool, select_random,
-                        threshold_filter)
+                        select_greedy, select_greedy_legacy,
+                        select_initial_pool, select_random, threshold_filter)
 from .service import FLServiceProvider, RoundLog, ServiceRunResult, TaskRequest
 
 __all__ = [
-    "CRITERIA", "NUM_CRITERIA", "ClientProfile", "build_profiles",
-    "cosine_similarity", "data_dist_score", "linear_cost", "nid",
-    "nid_hellinger", "nid_kl", "nid_l2", "overall_score", "random_profiles",
-    "resource_scores", "bounded_participation", "coverage", "fairness_report",
-    "jain_index", "over_selection_fraction", "MKPResult", "solve_mkp",
-    "solve_mkp_bnb", "solve_mkp_greedy", "ReputationRecord",
-    "ReputationTracker", "model_quality_batch", "ScheduleResult",
-    "default_capacities", "generate_subsets", "participation_weights",
-    "random_subsets", "subset_nid", "SelectionResult", "budget_floor",
-    "select_dp", "select_greedy", "select_initial_pool", "select_random",
+    "CRITERIA", "NUM_CRITERIA", "ClientPoolState", "ClientProfile",
+    "build_profiles", "cosine_similarity", "data_dist_score", "linear_cost",
+    "nid", "nid_hellinger", "nid_kl", "nid_l2", "overall_score",
+    "random_histograms", "random_profiles", "resource_scores",
+    "bounded_participation", "coverage", "fairness_report", "jain_index",
+    "over_selection_fraction", "MKPResult", "solve_mkp", "solve_mkp_bnb",
+    "solve_mkp_greedy", "ReputationRecord", "ReputationTracker",
+    "model_quality_batch", "ScheduleResult", "default_capacities",
+    "default_capacities_arrays", "generate_subsets", "generate_subsets_legacy",
+    "participation_weights", "random_subsets", "subset_nid",
+    "SelectionResult", "budget_floor", "select_dp", "select_greedy",
+    "select_greedy_legacy", "select_initial_pool", "select_random",
     "threshold_filter", "FLServiceProvider", "RoundLog", "ServiceRunResult",
     "TaskRequest",
 ]

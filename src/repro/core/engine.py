@@ -1,0 +1,272 @@
+"""Batched selection / scheduling engine over ``ClientPoolState`` arrays.
+
+This module is the array-native hot path behind the control plane:
+
+- ``greedy_knapsack``        — Stage-1 greedy (Eq. 12) as argsort +
+  cumulative-sum prefix instead of a per-client Python loop. Bit-exact
+  against ``selection.select_greedy_legacy`` (the remaining-budget
+  sequence is reproduced with ``np.subtract.accumulate``, so even float
+  rounding matches the sequential loop).
+- ``greedy_knapsack_batch``  — the same greedy jit+vmapped over many
+  concurrent ``TaskRequest`` budgets/threshold masks (multi-tenant
+  serving: one argsort per task, one fused scan, no Python per client).
+- ``mkp_pseudo_utility``     — the Toyoda scarcity-weighted scoring of
+  *all* MKP candidates at once (shared with ``mkp.solve_mkp_greedy`` so
+  the two paths cannot drift).
+- ``solve_mkp_greedy_jax``   — the MKP greedy loop as a
+  ``lax.while_loop`` whose per-iteration ``(n_items, n_knapsacks)``
+  utility update runs through ``kernels.ops.mkp_utility`` (Pallas on
+  TPU, jnp reference on CPU, interpret mode for tests).
+
+Data flow: callers hold a ``ClientPoolState``; every function here takes
+plain arrays (columns of that state) and returns arrays/masks, so it is
+jit/vmap friendly and never materializes ``ClientProfile`` objects.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+_EPS = 1e-12
+
+
+# ---------------------------------------------------------------------------
+# Stage 1: vectorized greedy knapsack
+# ---------------------------------------------------------------------------
+
+def greedy_order(scores: np.ndarray, costs: np.ndarray) -> np.ndarray:
+    """Non-increasing score/cost ratio order (stable, like the legacy)."""
+    ratio = np.asarray(scores, np.float64) / np.maximum(
+        np.asarray(costs, np.float64), _EPS)
+    return np.argsort(-ratio, kind="stable")
+
+
+def greedy_knapsack(scores: np.ndarray, costs: np.ndarray, budget: float,
+                    skip_unaffordable: bool = False
+                    ) -> tuple[np.ndarray, float, float]:
+    """Vectorized greedy (§VI-A). Returns ``(chosen, total_score,
+    total_cost)`` with ``chosen`` positions in pick order — identical to
+    the legacy Python loop on any input.
+
+    Paper-faithful mode (``skip_unaffordable=False``): the scan stops at
+    the first client whose cost exceeds the remaining budget, i.e. the
+    selection is the longest affordable prefix of the ratio order. The
+    remaining-budget sequence ``b - c0 - c1 - ...`` is evaluated with
+    left-fold rounding (``np.subtract.accumulate``) so float behavior
+    matches the sequential loop exactly.
+
+    The skip variant keeps scanning for cheaper clients; that is an
+    inherently sequential recurrence, run here over the presorted cost
+    array with a suffix-min early exit.
+    """
+    scores = np.asarray(scores, dtype=np.float64)
+    costs = np.asarray(costs, dtype=np.float64)
+    order = greedy_order(scores, costs)
+    oc = costs[order]
+    n = oc.size
+    if n == 0:
+        return order[:0], 0.0, 0.0
+    if not skip_unaffordable:
+        # remaining[t] = budget - c0 - ... - c_{t-1}, folded left to right
+        rem = np.subtract.accumulate(
+            np.concatenate(([float(budget)], oc)))[:-1]
+        unaff = oc > rem
+        k = int(np.argmax(unaff)) if unaff.any() else n
+        chosen = order[:k]
+        return chosen, float(scores[chosen].sum()), float(costs[chosen].sum())
+    # skip mode: sequential over the sorted order, but bail out as soon as
+    # nothing further down can fit (suffix minimum of cost).
+    sufmin = np.minimum.accumulate(oc[::-1])[::-1]
+    remaining = float(budget)
+    taken = np.zeros(n, dtype=bool)
+    for t in range(n):
+        if sufmin[t] > remaining:
+            break
+        c = oc[t]
+        if c <= remaining:
+            taken[t] = True
+            remaining -= c
+    chosen = order[taken]
+    return chosen, float(scores[chosen].sum()), float(costs[chosen].sum())
+
+
+@functools.partial(jax.jit, static_argnames=("skip_unaffordable",))
+def _greedy_batch_jax(scores, costs, budgets, valid, skip_unaffordable):
+    """(T,) budgets x (T, n) validity -> (T, n) selection masks + totals."""
+
+    def one(budget, vmask):
+        ratio = jnp.where(vmask, scores / jnp.maximum(costs, _EPS), -jnp.inf)
+        order = jnp.argsort(-ratio, stable=True)
+        # invalid clients sort last; infinite cost makes them hard stops
+        oc = jnp.where(vmask[order], costs[order], jnp.inf)
+
+        def step(carry, c):
+            remaining, stopped = carry
+            fits = (c <= remaining) & jnp.logical_not(stopped)
+            if not skip_unaffordable:
+                stopped = stopped | (c > remaining)
+            remaining = remaining - jnp.where(fits, c, 0.0)
+            return (remaining, stopped), fits
+
+        init = (jnp.asarray(budget, scores.dtype), jnp.asarray(False))
+        _, taken = jax.lax.scan(step, init, oc)
+        return jnp.zeros_like(vmask).at[order].set(taken)
+
+    masks = jax.vmap(one)(budgets, valid)
+    return masks, masks @ scores, masks @ costs
+
+
+def greedy_knapsack_batch(scores: np.ndarray, costs: np.ndarray,
+                          budgets: np.ndarray,
+                          valid: np.ndarray | None = None,
+                          skip_unaffordable: bool = False,
+                          backend: str = "auto"):
+    """Batched Stage-1 greedy for multi-tenant serving.
+
+    Every concurrent task shares the client pool, hence the score/cost
+    ratio *order*: the batch reduces to ONE argsort plus a ``(T, n)``
+    masked cumulative sum — per-task work is O(n), not O(n log n), and
+    fully vectorized over tasks. ``backend="jax"`` instead runs the
+    jit+vmap scan (`_greedy_batch_jax`), the path that makes sense on
+    TPU; ``"auto"`` picks jax on TPU and numpy elsewhere.
+
+    Args:
+      scores, costs: (n,) shared client pool columns.
+      budgets: (T,) one budget per concurrent task.
+      valid: optional (T, n) per-task eligibility (threshold masks).
+
+    Returns ``(masks, total_scores, total_costs)`` with shapes
+    ``(T, n), (T,), (T,)`` as numpy arrays. With the numpy backend,
+    selections are bit-exact against running the single-task greedy per
+    task over its valid clients; the jax backend computes in float32
+    (ratio ties / rounding may differ at the margin).
+    """
+    if backend == "auto":
+        backend = "jax" if jax.default_backend() == "tpu" else "numpy"
+    if backend == "jax":
+        scores = jnp.asarray(scores)
+        costs = jnp.asarray(costs)
+        budgets = jnp.atleast_1d(jnp.asarray(budgets))
+        if valid is None:
+            valid = jnp.ones((budgets.shape[0], scores.shape[0]), dtype=bool)
+        else:
+            valid = jnp.asarray(valid, dtype=bool)
+        masks, ts, tc = _greedy_batch_jax(scores, costs, budgets, valid,
+                                          bool(skip_unaffordable))
+        return np.asarray(masks), np.asarray(ts), np.asarray(tc)
+
+    scores = np.asarray(scores, dtype=np.float64)
+    costs = np.asarray(costs, dtype=np.float64)
+    budgets = np.atleast_1d(np.asarray(budgets, dtype=np.float64))
+    T, n = budgets.shape[0], scores.shape[0]
+    if valid is None:
+        valid = np.ones((T, n), dtype=bool)
+    else:
+        valid = np.asarray(valid, dtype=bool)
+    if skip_unaffordable:
+        # sequential recurrence per task; no shared-prefix shortcut
+        masks = np.zeros((T, n), dtype=bool)
+        for t in range(T):
+            cols = np.flatnonzero(valid[t])
+            chosen, _, _ = greedy_knapsack(scores[cols], costs[cols],
+                                           budgets[t], skip_unaffordable=True)
+            masks[t, cols[chosen]] = True
+        return masks, masks @ scores, masks @ costs
+    order = greedy_order(scores, costs)
+    oc = costs[order]                                  # (n,)
+    ov = valid[:, order]                               # (T, n)
+    # Reproduce the single-task greedy's left-fold remaining-budget
+    # sequence per row (budget - c0 - c1 - ..., rounded at every step;
+    # invalid clients subtract exactly 0.0), so selections are bit-exact
+    # against greedy_knapsack even when partial sums round differently
+    # than a cumsum-vs-budget comparison would.
+    rem = np.subtract.accumulate(
+        np.concatenate([budgets[:, None], np.where(ov, oc, 0.0)], axis=1),
+        axis=1)[:, :-1]                                # (T, n) before each pick
+    viol = ov & (oc > rem)
+    first = np.where(viol.any(axis=1), viol.argmax(axis=1), n)
+    take = ov & (np.arange(n) < first[:, None])
+    masks = np.zeros((T, n), dtype=bool)
+    masks[:, order] = take
+    return masks, masks @ scores, masks @ costs
+
+
+# ---------------------------------------------------------------------------
+# Stage 2: vectorized Toyoda pseudo-utility (MKP inner loop)
+# ---------------------------------------------------------------------------
+
+def mkp_pseudo_utility(values: np.ndarray, weights: np.ndarray,
+                       residual: np.ndarray, selectable: np.ndarray
+                       ) -> tuple[np.ndarray, np.ndarray]:
+    """Scarcity-weighted utility of *all* candidates at once.
+
+    ``util_j = v_j / (w_j · scarcity)`` with ``scarcity = 1/residual``;
+    items that don't fit (or aren't selectable) score ``-inf``. This is
+    the single source of truth for the greedy MKP scoring — both
+    ``mkp.solve_mkp_greedy`` (numpy) and the jax/Pallas path call the
+    same formula.
+    """
+    scarcity = 1.0 / np.maximum(residual, _EPS)
+    penalty = weights @ scarcity
+    util = values / np.maximum(penalty, _EPS)
+    fits = selectable & np.all(weights <= residual + _EPS, axis=1)
+    return np.where(fits, util, -np.inf), fits
+
+
+def mkp_pseudo_utility_jax(values, weights, residual, selectable,
+                           interpret: bool | None = None):
+    """Accelerator path of :func:`mkp_pseudo_utility` (Pallas on TPU,
+    jnp reference otherwise; ``interpret=True`` forces the kernel in
+    interpreter mode for CPU testing)."""
+    from ..kernels import ops
+    return ops.mkp_utility(values, weights, residual, selectable,
+                           interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("max_size", "interpret"))
+def _mkp_greedy_jax(values, weights, capacities, max_size, interpret):
+    from ..kernels import ops
+    n, m = weights.shape
+
+    def cond(state):
+        _, _, count, cont = state
+        return cont & (count < max_size)
+
+    def body(state):
+        used, in_sel, count, _ = state
+        residual = capacities - used
+        util = ops.mkp_utility(values, weights, residual,
+                               jnp.logical_not(in_sel), interpret=interpret)
+        j = jnp.argmax(util)
+        ok = jnp.isfinite(util[j])
+        in_sel = in_sel.at[j].set(in_sel[j] | ok)
+        used = used + jnp.where(ok, weights[j], 0.0)
+        return used, in_sel, count + ok.astype(jnp.int32), ok
+
+    init = (jnp.zeros(m, values.dtype), jnp.zeros(n, dtype=bool),
+            jnp.asarray(0, jnp.int32), jnp.asarray(True))
+    used, in_sel, _, _ = jax.lax.while_loop(cond, body, init)
+    return in_sel, used
+
+
+def solve_mkp_greedy_jax(values, weights, capacities,
+                         max_size: int | None = None,
+                         interpret: bool | None = None
+                         ) -> tuple[np.ndarray, np.ndarray]:
+    """Toyoda greedy as a jit'd ``while_loop``; the per-iteration utility
+    update is the Pallas kernel (TPU) / jnp reference (CPU).
+
+    Returns ``(selection_mask (n,), used (m,))``. Matches the greedy
+    phase of ``mkp.solve_mkp_greedy`` (``local_search=False``) up to
+    float32 utility ties.
+    """
+    values = jnp.asarray(values)
+    weights = jnp.asarray(weights)
+    capacities = jnp.asarray(capacities)
+    ms = int(values.shape[0] if max_size is None else max_size)
+    in_sel, used = _mkp_greedy_jax(values, weights, capacities, ms,
+                                   interpret)
+    return np.asarray(in_sel), np.asarray(used)

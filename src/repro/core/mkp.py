@@ -6,7 +6,9 @@ available offline, so we implement the solver ourselves:
 - ``solve_mkp_greedy`` — Toyoda-style pseudo-utility greedy: items are
   added in decreasing value per unit of *scarcity-weighted* capacity
   consumption, recomputed as knapsacks fill up; followed by a repair-free
-  add pass and a 1-swap local search. This is the production path.
+  add pass and a 1-swap local search. This is the production path. The
+  per-pick rescoring of all candidates is ``engine.mkp_pseudo_utility``
+  (shared with the jax/Pallas path, see core/engine.py).
 - ``solve_mkp_bnb`` — exact depth-first branch-and-bound with an
   LP-style fractional bound, for small instances; used by tests to bound
   the greedy's optimality gap and by the scheduler for tiny tail pools.
@@ -69,17 +71,15 @@ def solve_mkp_greedy(values, weights, capacities, max_size: int | None = None,
     in_sel = np.zeros(n, dtype=bool)
 
     # -- pseudo-utility greedy (recompute scarcity each pick) --
+    # The whole candidate set is rescored at once per pick; the scoring
+    # formula lives in engine.mkp_pseudo_utility (one source of truth for
+    # the numpy, jax and Pallas paths).
+    from .engine import mkp_pseudo_utility
     while len(selected) < max_size:
         residual = capacities - used
-        # candidate fits?
-        fits = ~in_sel & np.all(weights <= residual + _EPS, axis=1)
+        util, fits = mkp_pseudo_utility(values, weights, residual, ~in_sel)
         if not np.any(fits):
             break
-        # scarcity: knapsacks with little residual capacity are expensive.
-        scarcity = 1.0 / np.maximum(residual, _EPS)
-        penalty = weights @ scarcity
-        util = values / np.maximum(penalty, _EPS)
-        util = np.where(fits, util, -np.inf)
         j = int(np.argmax(util))
         selected.append(j)
         in_sel[j] = True
@@ -206,9 +206,22 @@ def solve_mkp_bnb(values, weights, capacities, max_size: int | None = None,
 
 
 def solve_mkp(values, weights, capacities, max_size: int | None = None,
-              exact_threshold: int = 18) -> MKPResult:
-    """Dispatch: exact B&B for tiny instances, greedy+LS otherwise."""
+              exact_threshold: int = 18, backend: str = "numpy") -> MKPResult:
+    """Dispatch: exact B&B for tiny instances, greedy+LS otherwise.
+
+    ``backend="jax"`` routes large instances through the jit'd
+    ``engine.solve_mkp_greedy_jax`` while-loop (Pallas utility update on
+    TPU) — greedy phase only, no local search.
+    """
     values = np.asarray(values, dtype=np.float64)
     if values.shape[0] <= exact_threshold:
         return solve_mkp_bnb(values, weights, capacities, max_size)
+    if backend == "jax":
+        from .engine import solve_mkp_greedy_jax
+        mask, used = solve_mkp_greedy_jax(values, weights, capacities,
+                                          max_size)
+        sel = np.flatnonzero(mask)
+        val = float(values[sel].sum()) if sel.size else 0.0
+        return MKPResult([int(j) for j in sel], val,
+                         np.asarray(used, dtype=np.float64), optimal=False)
     return solve_mkp_greedy(values, weights, capacities, max_size)

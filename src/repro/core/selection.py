@@ -4,12 +4,18 @@ After threshold filtering (Eq. 8d) and the budget-floor check (Eq. 11),
 the problem is a 0-1 knapsack (Eq. 12): maximize total Score subject to
 total Cost <= B. We provide:
 
-- ``select_greedy``  — the paper's O(n log n) score/cost-ratio greedy;
+- ``select_greedy``  — the paper's O(n log n) score/cost-ratio greedy,
+  vectorized (argsort + cumulative-sum prefix via ``core.engine``);
+- ``select_greedy_legacy`` — the original per-client Python loop, kept
+  as the bit-exact reference for equivalence tests and benchmarks;
 - ``select_dp``      — exact dynamic programming, O(n·B) (integer costs);
 - ``select_random``  — the paper's random baseline;
 
 plus the full Stage-1 wrapper ``select_initial_pool`` implementing the
-threshold filter and minimum-pool-size feasibility check.
+threshold filter and minimum-pool-size feasibility check. The wrapper
+accepts either the legacy ``list[ClientProfile]`` or an array-native
+``ClientPoolState`` (the internal representation; profile lists are
+converted once and processed with masked array ops).
 """
 from __future__ import annotations
 
@@ -18,7 +24,9 @@ from typing import Sequence
 
 import numpy as np
 
+from . import engine
 from .criteria import THRESHOLDED, ClientProfile
+from .pool import ClientPoolState
 
 
 @dataclasses.dataclass
@@ -49,7 +57,7 @@ def _totals(ids: Sequence[int], scores, costs) -> tuple[float, float]:
 def select_greedy(scores: np.ndarray, costs: np.ndarray, budget: float,
                   ids: Sequence[int] | None = None,
                   skip_unaffordable: bool = False) -> SelectionResult:
-    """Greedy by non-increasing score/cost ratio (§VI-A).
+    """Greedy by non-increasing score/cost ratio (§VI-A), vectorized.
 
     With ``skip_unaffordable=False`` (paper-faithful, reproduces Table III:
     5 clients / 32.78) the scan stops at the first client whose cost
@@ -57,7 +65,28 @@ def select_greedy(scores: np.ndarray, costs: np.ndarray, budget: float,
     beyond-paper variant that keeps scanning for cheaper clients further
     down the ratio order — it dominates the paper's variant pointwise
     (recorded in EXPERIMENTS.md §Perf/control-plane).
+
+    Selections are identical to :func:`select_greedy_legacy` (tested in
+    tests/test_engine.py); the hot path is ``engine.greedy_knapsack``.
     """
+    scores = np.asarray(scores, dtype=np.float64)
+    costs = np.asarray(costs, dtype=np.float64)
+    chosen, ts, tc = engine.greedy_knapsack(
+        scores, costs, budget, skip_unaffordable=skip_unaffordable)
+    if ids is None:
+        sel = [int(j) for j in chosen]
+    else:
+        ids = list(ids)
+        sel = [ids[j] for j in chosen]
+    return SelectionResult(sel, ts, tc)
+
+
+def select_greedy_legacy(scores: np.ndarray, costs: np.ndarray, budget: float,
+                         ids: Sequence[int] | None = None,
+                         skip_unaffordable: bool = False) -> SelectionResult:
+    """The original per-client Python-loop greedy, kept as the reference
+    implementation the vectorized path is tested against (and as the
+    baseline for benchmarks/bench_selection_time.py)."""
     scores = np.asarray(scores, dtype=np.float64)
     costs = np.asarray(costs, dtype=np.float64)
     ids = list(range(len(scores))) if ids is None else list(ids)
@@ -140,7 +169,11 @@ def select_random(scores: np.ndarray, costs: np.ndarray, budget: float,
 def threshold_filter(profiles: Sequence[ClientProfile],
                      thresholds: np.ndarray | None) -> list[ClientProfile]:
     """Eq. (8d): keep clients whose thresholded criterion scores all meet
-    the per-criterion minimums s_th (the paper thresholds s_1..s_9)."""
+    the per-criterion minimums s_th (the paper thresholds s_1..s_9).
+
+    Legacy dataclass path (per-profile loop); the array-native pipeline
+    uses ``ClientPoolState.threshold_mask`` instead.
+    """
     if thresholds is None:
         return list(profiles)
     th = np.asarray(thresholds, dtype=np.float64)
@@ -151,29 +184,41 @@ def threshold_filter(profiles: Sequence[ClientProfile],
     return kept
 
 
-def budget_floor(profiles: Sequence[ClientProfile], n_star: int) -> float:
+def budget_floor(profiles: Sequence[ClientProfile] | ClientPoolState,
+                 n_star: int) -> float:
     """Eq. (11): minimal budget = sum of the top-n* costs among filtered
     clients, guaranteeing the |S| >= n* constraint is satisfiable."""
+    if isinstance(profiles, ClientPoolState):
+        return profiles.budget_floor(n_star)
     costs = sorted((p.cost for p in profiles), reverse=True)
     return float(sum(costs[:n_star]))
 
 
 def select_initial_pool(
-    profiles: Sequence[ClientProfile],
+    profiles: Sequence[ClientProfile] | ClientPoolState,
     budget: float,
     n_star: int = 1,
     thresholds: np.ndarray | None = None,
     method: str = "greedy",
     rng: np.random.Generator | None = None,
 ) -> SelectionResult:
-    """Stage 1 end-to-end: filter -> feasibility -> knapsack (Eq. 12)."""
-    filtered = threshold_filter(profiles, thresholds)
-    if len(filtered) < n_star:
+    """Stage 1 end-to-end: filter -> feasibility -> knapsack (Eq. 12).
+
+    Accepts a ``ClientPoolState`` (array-native fast path) or a profile
+    list (converted once — thin adapter, same results). Filtering, score
+    aggregation and the greedy knapsack are all masked array ops; no
+    per-client Python work remains.
+    """
+    pool = (profiles if isinstance(profiles, ClientPoolState)
+            else ClientPoolState.from_profiles(profiles))
+    mask = pool.threshold_mask(thresholds)
+    n_kept = int(mask.sum())
+    if n_kept < n_star:
         return SelectionResult([], 0.0, 0.0, feasible=False,
-                               note=f"only {len(filtered)} clients pass thresholds, need {n_star}")
-    scores = np.array([p.score for p in filtered])
-    costs = np.array([p.cost for p in filtered])
-    ids = [p.client_id for p in filtered]
+                               note=f"only {n_kept} clients pass thresholds, need {n_star}")
+    scores = pool.overall[mask]
+    costs = pool.costs[mask]
+    ids = pool.client_ids[mask].tolist()
     if method == "greedy":
         res = select_greedy(scores, costs, budget, ids)
     elif method == "dp":
@@ -185,6 +230,7 @@ def select_initial_pool(
         raise ValueError(f"unknown method {method!r}")
     if len(res.selected) < n_star:
         res.feasible = False
+        floor = pool.budget_floor(n_star, mask)
         res.note = (f"budget {budget} selects only {len(res.selected)} < n*={n_star} "
-                    f"clients; Eq.(11) floor is {budget_floor(filtered, n_star):.1f}")
+                    f"clients; Eq.(11) floor is {floor:.1f}")
     return res

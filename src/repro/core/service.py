@@ -6,6 +6,13 @@ periods (stage-2 subset generation + reputation-driven pool updates)
 until the training driver reports convergence or the round budget is
 exhausted.
 
+Internally the provider keeps the registry as an array-native
+``ClientPoolState`` (struct-of-arrays), so stage-1 filtering/selection
+and the per-round bookkeeping are masked array ops; the
+``ClientProfile`` registry dict remains as a compatibility view.
+``select_pools_batch`` serves many concurrent tasks in one jit+vmap
+sweep over the shared pool (multi-tenant stage 1).
+
 The actual model training is injected as a callback so the same
 orchestration drives the paper's CNN experiments, the LM federated runs
 and unit tests with stub trainers.
@@ -17,10 +24,11 @@ from typing import Callable, Mapping, Sequence
 
 import numpy as np
 
+from . import engine
 from .criteria import ClientProfile
+from .pool import ClientPoolState
 from .reputation import ReputationTracker
-from .scheduling import (ScheduleResult, generate_subsets,
-                         participation_weights, random_subsets)
+from .scheduling import ScheduleResult, generate_subsets, random_subsets
 from .selection import SelectionResult, select_initial_pool
 
 
@@ -71,24 +79,84 @@ TrainerFn = Callable[[int, Sequence[int], np.ndarray], tuple[np.ndarray, np.ndar
 class FLServiceProvider:
     """Client registry + the two-stage selection/scheduling pipeline."""
 
-    def __init__(self, profiles: Sequence[ClientProfile]):
-        self.registry: dict[int, ClientProfile] = {p.client_id: p for p in profiles}
+    def __init__(self, profiles: Sequence[ClientProfile] | ClientPoolState):
+        if isinstance(profiles, ClientPoolState):
+            self.pool_state = profiles
+        else:
+            self.pool_state = ClientPoolState.from_profiles(profiles)
+        self._registry: dict[int, ClientProfile] | None = None
+
+    @property
+    def registry(self) -> dict[int, ClientProfile]:
+        """Dataclass compatibility view of the pool (built lazily so a
+        100k-client ``ClientPoolState`` provider never materializes
+        profiles unless asked). A read-only snapshot: mutate
+        ``pool_state``, not these profiles, to affect selection."""
+        if self._registry is None:
+            self._registry = {
+                p.client_id: p for p in self.pool_state.to_profiles()}
+        return self._registry
 
     # -- Stage 1 -------------------------------------------------------------
     def select_pool(self, task: TaskRequest, method: str = "greedy",
                     rng: np.random.Generator | None = None) -> SelectionResult:
         return select_initial_pool(
-            list(self.registry.values()), budget=task.budget, n_star=task.n_star,
+            self.pool_state, budget=task.budget, n_star=task.n_star,
             thresholds=task.thresholds, method=method, rng=rng)
+
+    def select_pools_batch(self, tasks: Sequence[TaskRequest]
+                           ) -> list[SelectionResult]:
+        """Stage 1 for many concurrent tasks in one batched sweep.
+
+        Per-task threshold masks are computed vectorized over the shared
+        pool, then a single jit+vmap greedy (engine.greedy_knapsack_batch)
+        solves every task's knapsack at once — the multi-tenant serving
+        path. Per-task feasibility (n*, Eq. 11) is applied afterwards.
+        """
+        if not tasks:
+            return []
+        pool = self.pool_state
+        budgets = np.array([t.budget for t in tasks], dtype=np.float64)
+        valid = np.stack([pool.threshold_mask(t.thresholds) for t in tasks])
+        masks, _, _ = engine.greedy_knapsack_batch(
+            pool.overall, pool.costs, budgets, valid)
+        results: list[SelectionResult] = []
+        for t, task in enumerate(tasks):
+            n_kept = int(valid[t].sum())
+            if n_kept < task.n_star:
+                results.append(SelectionResult(
+                    [], 0.0, 0.0, feasible=False,
+                    note=f"only {n_kept} clients pass thresholds, "
+                         f"need {task.n_star}"))
+                continue
+            sel = masks[t]
+            res = SelectionResult(
+                pool.client_ids[sel].tolist(),
+                float(pool.overall[sel].sum()),
+                float(pool.costs[sel].sum()))
+            if len(res.selected) < task.n_star:
+                res.feasible = False
+                floor = pool.budget_floor(task.n_star, valid[t])
+                res.note = (f"budget {task.budget} selects only "
+                            f"{len(res.selected)} < n*={task.n_star} "
+                            f"clients; Eq.(11) floor is {floor:.1f}")
+            results.append(res)
+        return results
 
     # -- Stage 2 (one period) --------------------------------------------------
     def schedule_period(self, pool_ids: Sequence[int], task: TaskRequest,
                         rng: np.random.Generator) -> ScheduleResult:
-        hists = {k: self.registry[k].histogram for k in pool_ids}
+        rows = self.pool_state.positions(sorted(pool_ids))
         if task.scheduler == "random":
+            hists = {int(self.pool_state.client_ids[r]):
+                     self.pool_state.histograms[r] for r in rows}
             return random_subsets(hists, task.subset_size, rng)
-        return generate_subsets(hists, n=task.subset_size, delta=task.subset_delta,
-                                x_star=task.x_star, nid_threshold=task.nid_threshold)
+        # array-native: hand the scheduler (ids, H) columns directly
+        subpool = (self.pool_state.client_ids[rows],
+                   self.pool_state.histograms[rows])
+        return generate_subsets(subpool, n=task.subset_size,
+                                delta=task.subset_delta, x_star=task.x_star,
+                                nid_threshold=task.nid_threshold)
 
     # -- Full service loop -----------------------------------------------------
     def run_task(self, task: TaskRequest, trainer: TrainerFn,
@@ -108,6 +176,7 @@ class FLServiceProvider:
         tracker = ReputationTracker(pool_sel.selected,
                                     suspension_periods=task.suspension_periods,
                                     rep_threshold=task.rep_threshold)
+        data_sizes = self.pool_state.data_sizes()
         rounds: list[RoundLog] = []
         schedules: list[ScheduleResult] = []
         global_round = 0
@@ -116,10 +185,11 @@ class FLServiceProvider:
                 break
             sched = self.schedule_period(sorted(pool), task, rng)
             schedules.append(sched)
-            hists = {k: self.registry[k].histogram for k in pool}
             stop = False
             for t, subset in enumerate(sched.subsets):
-                w = participation_weights(hists, subset)
+                rows = self.pool_state.positions(subset)
+                sizes = data_sizes[rows]
+                w = sizes / np.maximum(sizes.sum(), 1e-12)
                 returned, q_vals, metrics = trainer(global_round, subset, w)
                 for i, cid in enumerate(subset):
                     tracker.record_round(cid, bool(returned[i]),

@@ -11,8 +11,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import (ClientProfile, FLServiceProvider, TaskRequest,
-                        build_profiles)
+from repro.core import (ClientPoolState, ClientProfile, FLServiceProvider,
+                        TaskRequest)
 from repro.core.criteria import NUM_CRITERIA, data_dist_score, overall_score, linear_cost
 from repro.data.synthetic import ClassificationData
 from repro.fl.partition import client_histograms
@@ -31,10 +31,10 @@ class SimConfig:
     seed: int = 0
 
 
-def profiles_from_partition(labels, parts, num_classes,
-                            seed: int = 0) -> list[ClientProfile]:
-    """Client profiles whose data criteria come from the real partition
-    and whose resource criteria are random (paper §VIII-A)."""
+def pool_from_partition(labels, parts, num_classes,
+                        seed: int = 0) -> ClientPoolState:
+    """Array-native client pool whose data criteria come from the real
+    partition and whose resource criteria are random (paper §VIII-A)."""
     rng = np.random.default_rng(seed)
     hists = client_histograms(labels, parts, num_classes)
     n = len(parts)
@@ -44,7 +44,13 @@ def profiles_from_partition(labels, parts, num_classes,
     scores[:, 7] = sizes / max(sizes.max(), 1)
     scores[:, 8] = data_dist_score(H)
     costs = linear_cost(overall_score(scores), 2.0, 5.0, integer=True)
-    return build_profiles(scores, H, costs)
+    return ClientPoolState(np.arange(n, dtype=np.int64), scores, H, costs)
+
+
+def profiles_from_partition(labels, parts, num_classes,
+                            seed: int = 0) -> list[ClientProfile]:
+    """Dataclass adapter over :func:`pool_from_partition` (same draws)."""
+    return pool_from_partition(labels, parts, num_classes, seed).to_profiles()
 
 
 class FLClassificationSim:
@@ -122,9 +128,9 @@ def run_fl_experiment(kind: str, noniid: str, n_clients: int = 100,
     test = full.subset(np.arange(n_train, n_train + n_test))
     parts = partition_labels(data.labels, n_clients, noniid,
                              data.num_classes, seed=seed)
-    profiles = profiles_from_partition(data.labels, parts, data.num_classes,
-                                       seed=seed)
-    provider = FLServiceProvider(profiles)
+    pool = pool_from_partition(data.labels, parts, data.num_classes,
+                               seed=seed)
+    provider = FLServiceProvider(pool)
     model_cfg = cnn.MNIST_CNN if kind == "mnist" else cnn.CIFAR_CNN
     simul = FLClassificationSim(model_cfg, data, parts, test, sim)
 

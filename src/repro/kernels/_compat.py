@@ -1,0 +1,17 @@
+"""Version shims for the Pallas TPU API.
+
+jax renamed ``TPUCompilerParams`` -> ``CompilerParams`` across
+versions; every kernel imports the resolved class from here so a future
+rename is one edit, with a clear error when neither name exists.
+"""
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+CompilerParams = getattr(pltpu, "CompilerParams",
+                         getattr(pltpu, "TPUCompilerParams", None))
+if CompilerParams is None:  # pragma: no cover - depends on jax version
+    raise ImportError(
+        "jax.experimental.pallas.tpu exposes neither CompilerParams nor "
+        "TPUCompilerParams; this jax version is unsupported by "
+        "repro.kernels")

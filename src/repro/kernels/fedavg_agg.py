@@ -15,6 +15,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from ._compat import CompilerParams as _CompilerParams
+
 
 def _agg_kernel(w_ref, u_ref, o_ref):
     u = u_ref[...].astype(jnp.float32)                 # (K, bp)
@@ -40,7 +42,7 @@ def fedavg_agg(updates, weights, *, block_p: int = 16_384,
                   pl.BlockSpec((K, bp), lambda i: (0, i))],
         out_specs=pl.BlockSpec((bp,), lambda i: (i,)),
         out_shape=jax.ShapeDtypeStruct((P,), updates.dtype),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel",)),
         interpret=interpret,
     )(w2, updates)

@@ -121,8 +121,8 @@ def _vmem(shape, dtype):
 
 def _tpu_params():
     try:
-        from jax.experimental.pallas import tpu as pltpu
-        return pltpu.CompilerParams(
+        from ._compat import CompilerParams
+        return CompilerParams(
             dimension_semantics=("parallel", "parallel", "parallel",
                                  "arbitrary"))
     except Exception:

@@ -13,6 +13,7 @@ from . import ref
 from .fedavg_agg import fedavg_agg as _fedavg_pallas
 from .fedavg_agg import fedavg_agg_tree
 from .flash_attention import flash_attention as _flash_pallas
+from .mkp_utility import mkp_utility as _mkp_utility_pallas
 from .mlstm_scan import mlstm_scan as _mlstm_pallas
 from .rmsnorm import rmsnorm as _rmsnorm_pallas
 from .swiglu import swiglu as _swiglu_pallas
@@ -60,6 +61,19 @@ def fedavg_agg(updates, weights, *, interpret=None):
     return ref.fedavg_agg_ref(updates, weights)
 
 
+def mkp_utility(values, weights, residual, selectable, *, interpret=None):
+    """Toyoda pseudo-utility update for the MKP greedy (core.engine).
+
+    values: (n,), weights: (n, m), residual: (m,), selectable: (n,).
+    Returns (n,) f32 utilities, −inf where the item can't be picked.
+    """
+    use_pallas = _on_tpu() if interpret is None else True
+    if use_pallas:
+        return _mkp_utility_pallas(values, weights, residual, selectable,
+                                   interpret=bool(interpret))
+    return ref.mkp_utility_ref(values, weights, residual, selectable)
+
+
 def mlstm_scan(q, k, v, log_f, log_i=None, *, chunk=64, normalize=True,
                interpret=None):
     use_pallas = _on_tpu() if interpret is None else True
@@ -71,4 +85,4 @@ def mlstm_scan(q, k, v, log_f, log_i=None, *, chunk=64, normalize=True,
 
 
 __all__ = ["flash_attention", "flash_attention_bshd", "rmsnorm", "swiglu",
-           "fedavg_agg", "fedavg_agg_tree", "mlstm_scan"]
+           "fedavg_agg", "fedavg_agg_tree", "mkp_utility", "mlstm_scan"]

@@ -77,3 +77,16 @@ def mlstm_scan_ref(q, k, v, log_f, log_i, *, chunk: int = 64,
         None if log_i is None else jnp.moveaxis(log_i, 1, 2),
         chunk=chunk, normalize=normalize)
     return jnp.moveaxis(out, 1, 2).astype(v.dtype)
+
+
+def mkp_utility_ref(values, weights, residual, selectable, eps: float = 1e-12):
+    """Toyoda pseudo-utility oracle: values (n,), weights (n, m),
+    residual (m,), selectable (n,) -> (n,) f32, −inf where infeasible."""
+    v = values.astype(jnp.float32)
+    w = weights.astype(jnp.float32)
+    r = residual.astype(jnp.float32)
+    scarcity = 1.0 / jnp.maximum(r, eps)
+    penalty = w @ scarcity
+    fits = jnp.all(w <= r + eps, axis=1) & (selectable.astype(jnp.float32) > 0)
+    util = v / jnp.maximum(penalty, eps)
+    return jnp.where(fits, util, -jnp.inf)

@@ -88,8 +88,17 @@ def _lower_compile(fn, args, out_sh, mesh, donate=()):
         return jax.jit(fn, **kw).lower(*args).compile()
 
 
-def _cost_record(compiled):
+def _cost_analysis(compiled) -> dict:
+    """compiled.cost_analysis() returns a dict in newer jax and a
+    one-element list of dicts in older versions; normalize to a dict."""
     cost = compiled.cost_analysis() or {}
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    return cost
+
+
+def _cost_record(compiled):
+    cost = _cost_analysis(compiled)
     coll = R.collective_bytes(compiled.as_text())
     return {"flops": float(cost.get("flops", 0) or 0),
             "bytes_accessed": float(cost.get("bytes accessed", 0) or 0),
@@ -229,7 +238,7 @@ def run_one(arch: str, shape: str, multi_pod: bool = False,
                 v = getattr(mem, field, None)
                 if v is not None:
                     mem_rec[field] = int(v)
-        cost = compiled.cost_analysis() or {}
+        cost = _cost_analysis(compiled)
         coll = R.collective_bytes(compiled.as_text())
         mf = model_flops_for(cfg, shape)
 

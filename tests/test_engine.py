@@ -1,0 +1,242 @@
+"""Equivalence tests: array-native engine vs the legacy Python-loop
+implementations (PR acceptance criterion), plus ClientPoolState adapters
+and the batched multi-task paths."""
+import numpy as np
+import pytest
+
+from repro.core import engine
+from repro.core import mkp as M
+from repro.core import scheduling as Sch
+from repro.core import selection as S
+from repro.core.criteria import random_histograms, random_profiles
+from repro.core.pool import ClientPoolState
+from repro.core.service import FLServiceProvider, TaskRequest
+from test_core_scheduling import make_pool
+from test_core_selection import BUDGET, PAPER_COSTS, PAPER_SCORES
+
+
+def rand_knapsack(rng, n=None):
+    n = int(rng.integers(3, 200)) if n is None else n
+    scores = rng.uniform(1, 10, n)
+    costs = np.rint(rng.uniform(3, 25, n))
+    budget = float(rng.integers(10, 900))
+    return scores, costs, budget
+
+
+class TestGreedyEquivalence:
+    def test_paper_instance(self):
+        vec = S.select_greedy(PAPER_SCORES, PAPER_COSTS, BUDGET)
+        leg = S.select_greedy_legacy(PAPER_SCORES, PAPER_COSTS, BUDGET)
+        assert vec.selected == leg.selected
+        assert sorted(vec.selected) == [0, 2, 3, 4, 5]   # paper Table III
+        assert vec.total_score == pytest.approx(leg.total_score)
+
+    @pytest.mark.parametrize("skip", [False, True])
+    def test_randomized_identical(self, skip):
+        rng = np.random.default_rng(0)
+        for _ in range(40):
+            s, c, B = rand_knapsack(rng)
+            vec = S.select_greedy(s, c, B, skip_unaffordable=skip)
+            leg = S.select_greedy_legacy(s, c, B, skip_unaffordable=skip)
+            assert vec.selected == leg.selected
+            assert vec.total_score == pytest.approx(leg.total_score, abs=1e-9)
+            assert vec.total_cost == pytest.approx(leg.total_cost, abs=1e-9)
+
+    def test_ids_and_empty(self):
+        s, c = np.array([2.0, 1.0]), np.array([5.0, 5.0])
+        res = S.select_greedy(s, c, 5.0, ids=[7, 9])
+        assert res.selected == [7]
+        assert S.select_greedy(np.zeros(0), np.zeros(0), 10.0).selected == []
+
+    def test_batch_matches_single(self):
+        rng = np.random.default_rng(1)
+        n = 300
+        s = rng.uniform(1, 10, n).astype(np.float32)
+        c = np.rint(rng.uniform(3, 25, n)).astype(np.float32)
+        budgets = np.array([50.0, 400.0, 2000.0, 1e6], np.float32)
+        masks, ts, tc = engine.greedy_knapsack_batch(s, c, budgets)
+        for t, B in enumerate(budgets):
+            # compare against the single-task vectorized path in f32
+            chosen, _, _ = engine.greedy_knapsack(
+                s.astype(np.float64), c.astype(np.float64), float(B))
+            want = np.zeros(n, bool)
+            want[chosen] = True
+            np.testing.assert_array_equal(masks[t], want)
+            assert ts[t] == pytest.approx(s[want].sum(), rel=1e-5)
+
+    def test_batch_respects_validity(self):
+        rng = np.random.default_rng(2)
+        n = 100
+        s = rng.uniform(1, 10, n)
+        c = np.rint(rng.uniform(3, 25, n))
+        valid = rng.uniform(size=(3, n)) < 0.5
+        budgets = np.full(3, 200.0)
+        masks, _, _ = engine.greedy_knapsack_batch(s, c, budgets, valid)
+        assert not np.any(masks & ~valid)
+        for t in range(3):
+            chosen, _, _ = engine.greedy_knapsack(
+                s[valid[t]], c[valid[t]], 200.0)
+            want = np.zeros(n, bool)
+            want[np.flatnonzero(valid[t])[chosen]] = True
+            np.testing.assert_array_equal(masks[t], want)
+
+
+class TestMKPEquivalence:
+    def rand_instance(self, rng, n=60, m=7):
+        w = rng.integers(0, 30, size=(n, m)).astype(float)
+        v = w.sum(axis=1) + rng.uniform(0, 5, n)
+        cap = 0.4 * w.sum(axis=0)
+        return v, w, cap
+
+    def test_pseudo_utility_matches_inline_formula(self):
+        rng = np.random.default_rng(3)
+        v, w, cap = self.rand_instance(rng)
+        residual = cap * rng.uniform(0.2, 1.0, cap.shape)
+        selectable = rng.uniform(size=v.shape) < 0.8
+        util, fits = engine.mkp_pseudo_utility(v, w, residual, selectable)
+        # the legacy loop's exact computation
+        scarcity = 1.0 / np.maximum(residual, 1e-12)
+        want_fits = selectable & np.all(w <= residual + 1e-12, axis=1)
+        want = np.where(want_fits,
+                        v / np.maximum(w @ scarcity, 1e-12), -np.inf)
+        np.testing.assert_array_equal(fits, want_fits)
+        np.testing.assert_allclose(util, want)
+
+    def test_jax_greedy_matches_legacy_greedy_phase(self):
+        rng = np.random.default_rng(4)
+        for _ in range(10):
+            v, w, cap = self.rand_instance(rng, n=int(rng.integers(20, 80)))
+            leg = M.solve_mkp_greedy(v, w, cap, local_search=False)
+            mask, used = engine.solve_mkp_greedy_jax(v, w, cap)
+            assert sorted(int(j) for j in np.flatnonzero(mask)) == leg.selected
+            np.testing.assert_allclose(used, leg.used, rtol=1e-5, atol=1e-4)
+
+    def test_jax_greedy_max_size(self):
+        rng = np.random.default_rng(5)
+        v, w, cap = self.rand_instance(rng, n=50)
+        mask, _ = engine.solve_mkp_greedy_jax(v, w, cap, max_size=7)
+        assert mask.sum() <= 7
+
+    def test_solve_mkp_jax_backend_feasible(self):
+        rng = np.random.default_rng(6)
+        v, w, cap = self.rand_instance(rng, n=40)
+        res = M.solve_mkp(v, w, cap, backend="jax")
+        assert M.is_feasible(w, cap, res.selected, slack=1e-3)
+
+    def test_pallas_kernel_matches_ref(self):
+        import jax.numpy as jnp
+        from repro.kernels import ops, ref
+        rng = np.random.default_rng(7)
+        for n, m in [(64, 8), (37, 10), (200, 3)]:
+            v = jnp.asarray(rng.uniform(1, 10, n))
+            w = jnp.asarray(rng.integers(0, 30, (n, m)).astype(float))
+            r = jnp.asarray(0.3 * np.asarray(w).sum(0))
+            sel = jnp.asarray(rng.uniform(size=n) < 0.7)
+            out_k = ops.mkp_utility(v, w, r, sel, interpret=True)
+            out_r = ref.mkp_utility_ref(v, w, r, sel)
+            finite = np.isfinite(np.asarray(out_r))
+            np.testing.assert_array_equal(np.isfinite(np.asarray(out_k)),
+                                          finite)
+            np.testing.assert_allclose(np.asarray(out_k)[finite],
+                                       np.asarray(out_r)[finite], rtol=1e-6)
+
+
+class TestSchedulerEquivalence:
+    @pytest.mark.parametrize("kind", ["type1", "type2", "type3", "iid"])
+    def test_identical_schedules(self, kind):
+        hists = make_pool(kind, n_clients=60)
+        new = Sch.generate_subsets(hists, n=10, delta=3, x_star=3)
+        leg = Sch.generate_subsets_legacy(hists, n=10, delta=3, x_star=3)
+        assert new.subsets == leg.subsets
+        assert new.counts == leg.counts
+        np.testing.assert_allclose(new.nids, leg.nids, rtol=1e-12)
+        np.testing.assert_array_equal(new.capacities, leg.capacities)
+
+    def test_identical_on_random_pools(self):
+        rng = np.random.default_rng(8)
+        for trial in range(5):
+            P = int(rng.integers(15, 70))
+            H = random_histograms(P, int(rng.integers(3, 12)), rng)
+            hists = {i: H[i] for i in range(P)}
+            n = int(rng.integers(4, 12))
+            delta = int(rng.integers(1, 4))
+            new = Sch.generate_subsets(hists, n=n, delta=delta, x_star=3)
+            leg = Sch.generate_subsets_legacy(hists, n=n, delta=delta,
+                                              x_star=3)
+            assert new.subsets == leg.subsets, (trial, P, n, delta)
+            assert new.counts == leg.counts
+
+    def test_pool_state_input(self):
+        hists = make_pool("type2", n_clients=40)
+        pool = ClientPoolState.from_histograms(hists)
+        via_pool = Sch.generate_subsets(pool, n=8, delta=2)
+        via_dict = Sch.generate_subsets(hists, n=8, delta=2)
+        assert via_pool.subsets == via_dict.subsets
+
+
+class TestPoolState:
+    def test_profile_round_trip(self):
+        profs = random_profiles(25, 6, np.random.default_rng(9))
+        pool = ClientPoolState.from_profiles(profs)
+        back = pool.to_profiles()
+        assert [p.client_id for p in back] == [p.client_id for p in profs]
+        for a, b in zip(back, profs):
+            np.testing.assert_array_equal(a.scores, b.scores)
+            np.testing.assert_array_equal(a.histogram, b.histogram)
+            assert a.cost == b.cost
+
+    def test_threshold_mask_matches_filter(self):
+        profs = random_profiles(40, 6, np.random.default_rng(10))
+        pool = ClientPoolState.from_profiles(profs)
+        th = np.full(9, 0.3)
+        kept_legacy = {p.client_id for p in S.threshold_filter(profs, th)}
+        mask = pool.threshold_mask(th)
+        assert set(pool.client_ids[mask].tolist()) == kept_legacy
+
+    def test_budget_floor_matches(self):
+        profs = random_profiles(30, 6, np.random.default_rng(11))
+        pool = ClientPoolState.from_profiles(profs)
+        assert pool.budget_floor(5) == pytest.approx(S.budget_floor(profs, 5))
+
+    def test_select_initial_pool_profile_vs_pool(self):
+        profs = random_profiles(50, 8, np.random.default_rng(12))
+        pool = ClientPoolState.from_profiles(profs)
+        a = S.select_initial_pool(profs, budget=300.0, n_star=3)
+        b = S.select_initial_pool(pool, budget=300.0, n_star=3)
+        assert a.selected == b.selected
+        assert a.total_score == pytest.approx(b.total_score)
+
+    def test_random_pool_shapes(self):
+        pool = ClientPoolState.random(1000, 10, np.random.default_rng(13))
+        assert pool.n == 1000 and pool.num_classes == 10
+        assert (pool.data_sizes() > 0).all()
+        assert np.isfinite(pool.overall).all()
+
+    def test_positions(self):
+        pool = ClientPoolState(np.array([5, 2, 9]), np.zeros((3, 11)),
+                               np.ones((3, 4)), np.ones(3))
+        np.testing.assert_array_equal(pool.positions([9, 5]), [2, 0])
+
+
+class TestServiceBatch:
+    def test_select_pools_batch_matches_single(self):
+        sp = FLServiceProvider(random_profiles(80, 10,
+                                               np.random.default_rng(14)))
+        tasks = [TaskRequest(budget=b, n_star=2,
+                             thresholds=th)
+                 for b, th in [(150.0, None), (600.0, np.full(9, 0.2)),
+                               (50.0, None), (1e6, np.full(9, 0.4))]]
+        batch = sp.select_pools_batch(tasks)
+        for task, got in zip(tasks, batch):
+            single = sp.select_pool(task)
+            assert got.feasible == single.feasible
+            assert sorted(got.selected) == sorted(single.selected)
+            assert got.total_cost == pytest.approx(single.total_cost,
+                                                   rel=1e-5)
+
+    def test_infeasible_task_in_batch(self):
+        sp = FLServiceProvider(random_profiles(10, 5,
+                                               np.random.default_rng(15)))
+        res = sp.select_pools_batch(
+            [TaskRequest(budget=1e6, n_star=99)])[0]
+        assert not res.feasible

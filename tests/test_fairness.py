@@ -1,0 +1,93 @@
+"""§VII fairness-guarantee property checks (promised by
+core/scheduling.py's docstring).
+
+For both the legacy dict/loop scheduler and the array-native one, over
+the paper's pool types and fully randomized pools:
+
+  1. coverage  — every pooled client appears in >= 1 subset;
+  2. bounded   — no client appears in more than x* subsets;
+  3. sizes     — every subset has <= n+δ clients; every subset but the
+     last has >= n−δ; the last has >= min(n−δ, tail), where tail is the
+     number of clients still uncovered when it is formed.
+"""
+import numpy as np
+import pytest
+
+from repro.core import fairness as F
+from repro.core import scheduling as Sch
+from repro.core.criteria import random_histograms
+from test_core_scheduling import make_pool
+
+SCHEDULERS = {
+    "array": Sch.generate_subsets,
+    "legacy": Sch.generate_subsets_legacy,
+}
+
+
+def check_guarantees(res, hists, n, delta, x_star):
+    ids = set(hists)
+    # 1. coverage
+    covered = set().union(*map(set, res.subsets)) if res.subsets else set()
+    assert covered == ids, "some pooled client never scheduled"
+    assert F.coverage(res, list(ids))
+    # 2. bounded participation
+    assert F.bounded_participation(res, x_star)
+    recount = {}
+    for s in res.subsets:
+        assert len(s) == len(set(s)), "duplicate client within a subset"
+        for k in s:
+            recount[k] = recount.get(k, 0) + 1
+    assert recount == {k: v for k, v in res.counts.items() if v > 0}
+    # 3. size bounds
+    min_size, max_size = max(1, n - delta), n + delta
+    seen = set()
+    for i, s in enumerate(res.subsets):
+        assert len(s) <= max_size
+        tail = len(ids) - len(seen)
+        if i < len(res.subsets) - 1:
+            assert len(s) >= min_size
+        else:
+            assert len(s) >= min(min_size, tail)
+        seen |= set(s)
+
+
+@pytest.mark.parametrize("backend", list(SCHEDULERS))
+@pytest.mark.parametrize("kind", ["type1", "type2", "type3", "iid"])
+def test_paper_pool_types(backend, kind):
+    hists = make_pool(kind, n_clients=70)
+    res = SCHEDULERS[backend](hists, n=10, delta=3, x_star=3)
+    check_guarantees(res, hists, n=10, delta=3, x_star=3)
+
+
+@pytest.mark.parametrize("backend", list(SCHEDULERS))
+def test_randomized_pools(backend):
+    rng = np.random.default_rng(0)
+    for trial in range(8):
+        P = int(rng.integers(5, 80))
+        c = int(rng.integers(2, 12))
+        hists = {i: h for i, h in
+                 enumerate(random_histograms(P, c, rng))}
+        n = int(rng.integers(3, 14))
+        delta = int(rng.integers(0, 4))
+        x_star = int(rng.integers(1, 5))
+        res = SCHEDULERS[backend](hists, n=n, delta=delta, x_star=x_star)
+        check_guarantees(res, hists, n, delta, x_star)
+
+
+@pytest.mark.parametrize("backend", list(SCHEDULERS))
+def test_fairness_report_quantities(backend):
+    hists = make_pool("type1", n_clients=60)
+    res = SCHEDULERS[backend](hists, n=10, delta=3, x_star=3)
+    rep = F.fairness_report(res, list(hists), x_star=3)
+    assert rep["coverage"] and rep["bounded"]
+    assert 0.0 < rep["jain_index"] <= 1.0
+    assert rep["max_count"] <= 3
+    assert rep["rounds"] == res.num_rounds
+
+
+def test_single_and_empty_pools():
+    for backend in SCHEDULERS.values():
+        res = backend({0: np.array([10.0, 0.0])}, n=10, delta=3)
+        assert res.subsets == [[0]]
+        res = backend({}, n=10, delta=3)
+        assert res.subsets == []

@@ -1,5 +1,9 @@
 """Hypothesis property-based tests for the control plane's invariants."""
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis",
+                    reason="optional dep: hypothesis not installed")
 from hypothesis import given, settings, strategies as st
 import hypothesis.extra.numpy as hnp
 
