@@ -14,6 +14,7 @@ BENCHES = [
     "bench_selection_time",   # Fig. 3
     "bench_subsets",          # Fig. 4 + fairness §VII
     "bench_training",         # Figs. 5/6 (reduced)
+    "bench_round_time",       # ISSUE-2 device-resident round data plane
     "bench_roofline",         # §Roofline (from dry-run artifacts)
 ]
 

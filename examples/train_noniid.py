@@ -2,7 +2,9 @@
 Type 1/2/3 non-iid, MKP scheduling vs random selection.
 
 Default is a budgeted run; pass --full for the paper-scale setting
-(100 clients, 200 rounds — slow on CPU).
+(100 clients, 200 rounds — slow on CPU). ``--data-plane device`` runs
+the device-resident chunked round driver (fl.round.make_fl_rounds_scan,
+``--round-chunk`` rounds per dispatch) instead of the legacy host loop.
 
 Run:  PYTHONPATH=src python examples/train_noniid.py --kind mnist --noniid type1
 """
@@ -24,6 +26,12 @@ def main():
     ap.add_argument("--full", action="store_true",
                     help="paper-scale: 100 clients, 200 rounds")
     ap.add_argument("--out", default=None, help="write history JSON here")
+    ap.add_argument("--data-plane", default="host",
+                    choices=["host", "device"],
+                    help="legacy per-round host loop vs device-resident "
+                         "chunked scan driver")
+    ap.add_argument("--round-chunk", type=int, default=8,
+                    help="rounds per device dispatch (device plane)")
     args = ap.parse_args()
     if args.full:
         args.clients, args.rounds = 100, 200
@@ -35,7 +43,8 @@ def main():
             rounds=args.rounds, scheduler=sched,
             n_train=80 * args.clients, n_test=1500, subset_size=10,
             sim=SimConfig(batch_size=16, local_steps=2, local_lr=0.15,
-                          eval_every=5, dropout_rate=0.05, seed=0))
+                          eval_every=5, dropout_rate=0.05, seed=0),
+            data_plane=args.data_plane, round_chunk=args.round_chunk)
         accs = [(h["round"], h["accuracy"]) for h in out["history"]
                 if "accuracy" in h]
         curves[sched] = {"accs": accs, "final": out["final_accuracy"]}

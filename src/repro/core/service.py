@@ -42,11 +42,16 @@ class TaskRequest:
     subset_delta: int = 3                 # δ
     x_star: int = 3                       # max selections per period
     max_periods: int = 20
+    max_rounds: int | None = None         # hard round budget; chunked
+    # dispatch never trains past it (unlike a stop_fn, which a chunk can
+    # only observe at its host checkpoint)
     rep_threshold: float = 0.5
     suspension_periods: int = 1
     scheduler: str = "mkp"                # "mkp" (ours) | "random" (baseline)
     nid_threshold: float = 0.35
     seed: int = 0
+    round_chunk: int = 1                  # rounds per device dispatch (>1 =
+    # chunked driver; requires a trainer exposing ``run_rounds``)
 
 
 @dataclasses.dataclass
@@ -74,6 +79,11 @@ class ServiceRunResult:
 # A trainer callback runs one FL round for the given subset and returns
 # (per-client returned flags, per-client q_t values, metrics dict).
 TrainerFn = Callable[[int, Sequence[int], np.ndarray], tuple[np.ndarray, np.ndarray, dict]]
+
+# Chunk-capable trainers additionally expose
+#   run_rounds(start_round, subsets, weights) -> list of per-round tuples
+# running several consecutive rounds in one device dispatch
+# (fl.simulation.DeviceFLSim); run_task uses it when task.round_chunk > 1.
 
 
 class FLServiceProvider:
@@ -167,6 +177,16 @@ class FLServiceProvider:
 
         availability_fn(client_id, period) -> bool models clients going
         offline (paper: conflicting schedules / battery / network).
+
+        With ``task.round_chunk > 1`` and a chunk-capable trainer
+        (``run_rounds``), consecutive rounds of a period are dispatched
+        in chunks of up to ``round_chunk``; the host checkpoint between
+        chunks runs stop_fn and the reputation bookkeeping. Chunks never
+        straddle a period boundary (the pool update must see every round
+        of the period). If stop_fn fires mid-chunk, logging stops at
+        that round but the model has already advanced to the chunk end —
+        known round budgets should use ``task.max_rounds``, which caps
+        the chunk so the model never trains past it.
         """
         rng = np.random.default_rng(task.seed)
         pool_sel = self.select_pool(task, method=method, rng=rng)
@@ -177,29 +197,49 @@ class FLServiceProvider:
                                     suspension_periods=task.suspension_periods,
                                     rep_threshold=task.rep_threshold)
         data_sizes = self.pool_state.data_sizes()
+        chunk_size = max(1, int(task.round_chunk)) \
+            if hasattr(trainer, "run_rounds") else 1
         rounds: list[RoundLog] = []
         schedules: list[ScheduleResult] = []
         global_round = 0
         for period in range(task.max_periods):
             if not pool:
                 break
+            if task.max_rounds is not None and global_round >= task.max_rounds:
+                break
             sched = self.schedule_period(sorted(pool), task, rng)
             schedules.append(sched)
             stop = False
-            for t, subset in enumerate(sched.subsets):
-                rows = self.pool_state.positions(subset)
-                sizes = data_sizes[rows]
-                w = sizes / np.maximum(sizes.sum(), 1e-12)
-                returned, q_vals, metrics = trainer(global_round, subset, w)
-                for i, cid in enumerate(subset):
-                    tracker.record_round(cid, bool(returned[i]),
-                                         q_value=float(q_vals[i]))
-                rounds.append(RoundLog(period, global_round, list(subset), w,
-                                       sched.nids[t], metrics))
-                global_round += 1
-                if stop_fn is not None and stop_fn(metrics):
-                    stop = True
-                    break
+            t = 0
+            while t < len(sched.subsets) and not stop:
+                limit = chunk_size
+                if task.max_rounds is not None:
+                    remaining = task.max_rounds - global_round
+                    if remaining <= 0:
+                        stop = True
+                        break
+                    limit = min(limit, remaining)
+                chunk = sched.subsets[t:t + limit]
+                ws = []
+                for subset in chunk:
+                    sizes = data_sizes[self.pool_state.positions(subset)]
+                    ws.append(sizes / np.maximum(sizes.sum(), 1e-12))
+                if chunk_size > 1:
+                    results = trainer.run_rounds(global_round, chunk, ws)
+                else:
+                    results = [trainer(global_round, chunk[0], ws[0])]
+                for j, (returned, q_vals, metrics) in enumerate(results):
+                    subset = chunk[j]
+                    for i, cid in enumerate(subset):
+                        tracker.record_round(cid, bool(returned[i]),
+                                             q_value=float(q_vals[i]))
+                    rounds.append(RoundLog(period, global_round, list(subset),
+                                           ws[j], sched.nids[t + j], metrics))
+                    global_round += 1
+                    if stop_fn is not None and stop_fn(metrics):
+                        stop = True
+                        break
+                t += len(chunk)
             avail = {cid: (availability_fn(cid, period + 1)
                            if availability_fn else True)
                      for cid in tracker.records}

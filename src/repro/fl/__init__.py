@@ -1,5 +1,7 @@
-from .partition import (client_histograms, dirichlet_partition,
-                        partition_labels)
-from .round import make_fedsgd_step, make_fl_round, tree_weighted_sum
-from .simulation import (FLClassificationSim, SimConfig,
+from .device_data import DeviceDataset
+from .partition import (client_histograms, dense_index_pools,
+                        dirichlet_partition, partition_labels)
+from .round import (make_fedsgd_step, make_fl_round, make_fl_rounds_scan,
+                    tree_weighted_sum)
+from .simulation import (DeviceFLSim, FLClassificationSim, SimConfig,
                          profiles_from_partition, run_fl_experiment)

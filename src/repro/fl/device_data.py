@@ -1,0 +1,113 @@
+"""Device-resident FL data plane: staged dataset + on-device batch gather.
+
+The PR-1 trainer assembled every round's client batches on the host
+(numpy fancy-indexing per client) and shipped them device-ward anew each
+round. This module stages the partitioned dataset on device ONCE and
+draws batches with a jit'd gather, so a whole scheduling period can run
+with zero per-round host transfers (fl.round.make_fl_rounds_scan):
+
+- :func:`repro.fl.partition.dense_index_pools` turns the ragged
+  per-client index lists into a dense ``(n_clients, cap)`` pool matrix;
+- :class:`DeviceDataset` holds images/labels/pools/sizes as device
+  arrays (a NamedTuple, so it is a pytree and jit-traceable);
+- :func:`sample_positions` derives per-round, per-slot randomness by
+  key folding. Randomness is *slot-keyed* (one fold per client slot),
+  so the draw for slot k is independent of how far the subset is padded
+  — the host-loop trainer (K = true subset size) and the padded device
+  scan (K = n+delta) see the same stream, which is what makes the
+  device-vs-legacy equivalence tests exact;
+- :func:`gather_batches` maps sampled positions to samples with two
+  chained ``jnp.take`` gathers (pool row -> sample index -> image);
+- :func:`dropout_mask` draws the paper's per-round client dropout
+  (behavior b_t = 0) on device, guaranteeing at least one surviving
+  client per round (slot 0 always holds a real client).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.fl.partition import dense_index_pools
+
+
+class DeviceDataset(NamedTuple):
+    """Partitioned dataset staged on device once (tentpole step 1)."""
+    images: jax.Array        # (N, H, W, C)
+    labels: jax.Array        # (N,)
+    pools: jax.Array         # (n_clients, cap) int32 sample-index pools
+    sizes: jax.Array         # (n_clients,) int32 true pool sizes
+
+    @classmethod
+    def stage(cls, data, parts, cap: int | None = None) -> "DeviceDataset":
+        """One-time host->device staging of a partitioned dataset."""
+        pools, sizes = dense_index_pools(parts, cap=cap)
+        return cls(jnp.asarray(data.images), jnp.asarray(data.labels),
+                   jnp.asarray(pools), jnp.asarray(sizes))
+
+    @property
+    def n_clients(self) -> int:
+        return self.pools.shape[0]
+
+
+def slot_key(base_key, round_index, slot):
+    """Key for (round, client-slot): fold round then slot."""
+    return jax.random.fold_in(jax.random.fold_in(base_key, round_index), slot)
+
+
+def sample_positions(base_key, round_index, n_slots: int, local_steps: int,
+                     batch_size: int):
+    """Per-slot uniforms for one round: ``(mask_u (K,), pos_u (K, E, b))``.
+
+    ``mask_u`` drives the dropout draw, ``pos_u`` the batch-position
+    draw. Values for slot k depend only on (base_key, round, k), never
+    on ``n_slots`` — padding the subset does not perturb the stream.
+    """
+    def one(slot):
+        ku, kb = jax.random.split(slot_key(base_key, round_index, slot))
+        return (jax.random.uniform(ku, ()),
+                jax.random.uniform(kb, (local_steps, batch_size)))
+    return jax.vmap(one)(jnp.arange(n_slots))
+
+
+def positions_to_indices(pools, sizes, rows, pos_u):
+    """Map uniform draws to sample indices: ``(K, E, b)`` int32.
+
+    pos = floor(u * size_k) in [0, size_k) — sampling with replacement
+    from the client's true pool; dense-pool padding never selected.
+    """
+    sz = jnp.take(sizes, rows, axis=0).astype(jnp.float32)   # (K,)
+    pos = jnp.floor(pos_u * sz[:, None, None]).astype(jnp.int32)
+    pos = jnp.minimum(pos, (sz[:, None, None] - 1).astype(jnp.int32))
+    pos = jnp.maximum(pos, 0)                                # empty-pool guard
+    rowpools = jnp.take(pools, rows, axis=0)                 # (K, cap)
+    flat = jnp.take_along_axis(rowpools, pos.reshape(pos.shape[0], -1), axis=1)
+    return flat.reshape(pos.shape)
+
+
+def gather_batches(data: DeviceDataset, rows, pos_u):
+    """On-device batch assembly: ``{"images": (K,E,b,H,W,C), "labels": (K,E,b)}``."""
+    idx = positions_to_indices(data.pools, data.sizes, rows, pos_u)
+    flat = idx.reshape(-1)
+    K, E, b = idx.shape
+    imgs = jnp.take(data.images, flat, axis=0).reshape(
+        K, E, b, *data.images.shape[1:])
+    labs = jnp.take(data.labels, flat, axis=0).reshape(K, E, b)
+    return {"images": imgs, "labels": labs}
+
+
+def dropout_mask(mask_u, active, dropout_rate: float):
+    """Per-round client dropout mask (K,) f32.
+
+    A client drops when its uniform < dropout_rate. ``active`` (K,) f32
+    marks real (non-padding) slots. If every active client would drop,
+    slot 0 is kept (schedules place real clients first) — mirroring the
+    legacy trainer's "never lose the whole round" rule.
+    """
+    act = active > 0
+    keep = (mask_u >= dropout_rate) & act
+    fallback = (jnp.arange(mask_u.shape[0]) == 0) & act
+    keep = jnp.where(keep.any(), keep, fallback)
+    return keep.astype(jnp.float32)

@@ -91,3 +91,32 @@ def client_histograms(labels: np.ndarray, parts: list[np.ndarray],
                       num_classes: int) -> dict[int, np.ndarray]:
     return {i: np.bincount(labels[p], minlength=num_classes).astype(np.float64)
             for i, p in enumerate(parts)}
+
+
+def dense_index_pools(parts: list[np.ndarray],
+                      cap: int | None = None) -> tuple[np.ndarray, np.ndarray]:
+    """Ragged per-client sample-index lists -> dense device-friendly form.
+
+    Returns ``(pools, sizes)`` where ``pools`` is ``(n_clients, cap)``
+    int32 (each row the client's sample indices, padded by cycling the
+    row's own indices so every slot is a valid sample of that client)
+    and ``sizes`` is ``(n_clients,)`` int32 true pool sizes. This is the
+    staging format of the device-resident data plane (fl.device_data):
+    batch sampling draws positions in ``[0, sizes[k])`` so the padding
+    never biases the draw.
+    """
+    n = len(parts)
+    cap = cap or max((len(p) for p in parts), default=1)
+    cap = max(cap, 1)
+    pools = np.zeros((n, cap), dtype=np.int32)
+    sizes = np.zeros(n, dtype=np.int32)
+    for k, idx in enumerate(parts):
+        m = len(idx)
+        sizes[k] = m
+        if m == 0:
+            continue
+        if m > cap:
+            raise ValueError(f"client {k} has {m} samples > cap={cap}")
+        reps = -(-cap // m)                    # ceil-div: cycle the row
+        pools[k] = np.tile(np.asarray(idx, dtype=np.int32), reps)[:cap]
+    return pools, sizes

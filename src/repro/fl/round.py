@@ -1,10 +1,21 @@
-"""Federated rounds in JAX — two scales (DESIGN.md §4):
+"""Federated rounds in JAX — three scales (DESIGN.md §4):
 
 - ``make_fl_round``: true FedAvg semantics at simulation scale — every
   scheduled client gets its own parameter copy (vmap over the client
   axis), runs E local SGD steps, and the server aggregates weighted
   deltas (Pallas ``fedavg_agg`` on TPU) and applies the server LR
-  (paper §III: w_{t+1} = w_t − η Δ_t).
+  (paper §III: w_{t+1} = w_t − η Δ_t). One dispatch per round; batches
+  arrive from the caller (host- or device-assembled).
+
+- ``make_fl_rounds_scan``: the device-resident round data plane — S
+  rounds per dispatch via ``lax.scan`` over precomputed schedule arrays
+  (padded subsets/weights from stage 2), with on-device batch gather
+  (fl.device_data), on-device dropout masks, the fused aggregation +
+  quality kernel (kernels.fedavg_agg_quality: one pass over the stacked
+  deltas yields Δ_t and every q_t cosine), and ``donate_argnums`` on
+  the params so the server state never round-trips the host. A host
+  checkpoint between chunks (core.service.run_task with round_chunk>1)
+  handles stop_fn/eval/reputation.
 
 - ``make_fedsgd_step``: datacenter-scale one-local-step equivalent —
   per-client weights fold into the loss so a single data-parallel
@@ -18,7 +29,9 @@ from typing import Callable
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
+from repro.fl import device_data
 from repro.kernels import ops as kops
 from repro.optim import apply_updates, sgd
 
@@ -28,31 +41,57 @@ def tree_sub(a, b):
 
 
 def tree_weighted_sum(trees_stacked, weights, use_kernel: bool = False):
-    """Σ_k w_k · leaf[k] for every leaf with leading client axis K."""
+    """Σ_k w_k · leaf[k] for every leaf with leading client axis K.
+
+    Uses ``lax.dot_general`` with ``preferred_element_type=float32`` so
+    accumulation happens in f32 *without* first materializing an f32
+    copy of the stacked (K, P) tree (which doubled peak memory on bf16
+    deltas); weights are cast to the leaf dtype instead.
+    """
     if use_kernel:
         return kops.fedavg_agg_tree(trees_stacked, weights)
-    return jax.tree_util.tree_map(
-        lambda leaf: jnp.tensordot(weights.astype(jnp.float32),
-                                   leaf.astype(jnp.float32), axes=1
-                                   ).astype(leaf.dtype),
-        trees_stacked)
+
+    def agg_leaf(leaf):
+        K = leaf.shape[0]
+        flat = leaf.reshape(K, -1)
+        acc = jax.lax.dot_general(
+            weights.astype(leaf.dtype), flat, (((0,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        return acc.reshape(leaf.shape[1:]).astype(leaf.dtype)
+
+    return jax.tree_util.tree_map(agg_leaf, trees_stacked)
 
 
-def make_fl_round(loss_fn: Callable, local_lr: float = 0.05,
-                  local_steps: int = 1, server_lr: float = 1.0,
-                  use_agg_kernel: bool = False):
-    """Build a jit'd FedAvg round.
+def flatten_stacked(trees_stacked):
+    """Stacked pytree (leaves (K, ...)) -> ((K, P) array, unflatten).
 
-    loss_fn(params, batch) -> (loss, metrics). Client batches arrive
-    stacked: every leaf (K, local_steps, ...). Returns
-    round_fn(params, client_batches, weights, mask) -> (params, info)
-    where ``mask`` (K,) zeroes out dropped clients (behavior b_t = 0) and
-    info carries per-client deltas' cosine-to-global q_t (paper §IV-C).
+    The fused aggregation+quality kernel wants one contiguous (K, P)
+    matrix; ``unflatten`` restores a (P,) vector to the original tree
+    structure/shapes/dtypes.
     """
+    leaves, treedef = jax.tree_util.tree_flatten(trees_stacked)
+    K = leaves[0].shape[0]
+    ctype = jnp.result_type(*leaves)
+    flats = [leaf.reshape(K, -1).astype(ctype) for leaf in leaves]
+    sizes = [f.shape[1] for f in flats]
+    splits = [int(s) for s in np.cumsum(sizes)[:-1]]
+    shapes = [leaf.shape[1:] for leaf in leaves]
+    dtypes = [leaf.dtype for leaf in leaves]
+
+    def unflatten(vec):
+        parts = jnp.split(vec, splits)
+        out = [p.reshape(s).astype(d)
+               for p, s, d in zip(parts, shapes, dtypes)]
+        return jax.tree_util.tree_unflatten(treedef, out)
+
+    return jnp.concatenate(flats, axis=1), unflatten
+
+
+def _make_client_update(loss_fn: Callable, local_lr: float):
+    """E local SGD steps for one client; returns (delta, mean_loss)."""
     opt = sgd(local_lr)
 
     def client_update(params, batches):
-        """E local steps; returns (delta, mean_loss)."""
         state = opt.init(params)
 
         def step(carry, batch):
@@ -64,34 +103,137 @@ def make_fl_round(loss_fn: Callable, local_lr: float = 0.05,
         (new_params, _), losses = jax.lax.scan(step, (params, state), batches)
         return tree_sub(params, new_params), losses.mean()
 
+    return client_update
+
+
+def _aggregate_and_quality(deltas, w, use_agg_kernel: bool,
+                           fused_quality: bool):
+    """Weighted aggregate Δ_t + per-client q_t = cos(Δ_t^(k), Δ_t).
+
+    ``fused_quality`` routes through the single-pass aggregation +
+    quality kernel (kernels.fedavg_agg_quality / its jnp oracle off-TPU);
+    otherwise the legacy two-pass path: tree_weighted_sum then a vmapped
+    cosine with the aggregate norm hoisted out of the K loop.
+    """
+    if fused_quality:
+        flat, unflatten = flatten_stacked(deltas)
+        agg_flat, dots, sq, asq = kops.fedavg_agg_quality(flat, w)
+        q = dots / jnp.maximum(jnp.sqrt(sq) * jnp.sqrt(asq), 1e-12)
+        return unflatten(agg_flat), q
+
+    agg = tree_weighted_sum(deltas, w, use_agg_kernel)
+
+    def dot(a, b):
+        return sum(jnp.vdot(x.astype(jnp.float32), y.astype(jnp.float32))
+                   for x, y in zip(jax.tree_util.tree_leaves(a),
+                                   jax.tree_util.tree_leaves(b)))
+
+    nb = jnp.sqrt(dot(agg, agg))       # hoisted: identical for every k
+
+    def cos_one(k):
+        dk = jax.tree_util.tree_map(lambda leaf: leaf[k], deltas)
+        num = dot(dk, agg)
+        na = jnp.sqrt(dot(dk, dk))
+        return num / jnp.maximum(na * nb, 1e-12)
+
+    K = jax.tree_util.tree_leaves(deltas)[0].shape[0]
+    return agg, jax.vmap(cos_one)(jnp.arange(K))
+
+
+def make_fl_round(loss_fn: Callable, local_lr: float = 0.05,
+                  local_steps: int = 1, server_lr: float = 1.0,
+                  use_agg_kernel: bool = False,
+                  fused_quality: bool = False):
+    """Build a jit'd FedAvg round.
+
+    loss_fn(params, batch) -> (loss, metrics). Client batches arrive
+    stacked: every leaf (K, local_steps, ...). Returns
+    round_fn(params, client_batches, weights, mask) -> (params, info)
+    where ``mask`` (K,) zeroes out dropped clients (behavior b_t = 0) and
+    info carries per-client deltas' cosine-to-global q_t (paper §IV-C).
+    ``fused_quality`` computes Δ_t and all q_t in one pass over the
+    stacked deltas (the device data plane's default).
+    """
+    client_update = _make_client_update(loss_fn, local_lr)
+
     @jax.jit
     def round_fn(params, client_batches, weights, mask):
         deltas, losses = jax.vmap(client_update, in_axes=(None, 0))(
             params, client_batches)
         w = weights * mask
         w = w / jnp.maximum(w.sum(), 1e-9)
-        agg = tree_weighted_sum(deltas, w, use_agg_kernel)
+        agg, q = _aggregate_and_quality(deltas, w, use_agg_kernel,
+                                        fused_quality)
         new_params = jax.tree_util.tree_map(
             lambda p, d: (p - server_lr * d).astype(p.dtype), params, agg)
-
-        # per-client model quality q_t = cos(delta_k, agg) (paper §IV-C)
-        def dot(a, b):
-            return sum(jnp.vdot(x.astype(jnp.float32), y.astype(jnp.float32))
-                       for x, y in zip(jax.tree_util.tree_leaves(a),
-                                       jax.tree_util.tree_leaves(b)))
-
-        def cos_one(k):
-            dk = jax.tree_util.tree_map(lambda leaf: leaf[k], deltas)
-            num = dot(dk, agg)
-            na = jnp.sqrt(dot(dk, dk))
-            nb = jnp.sqrt(dot(agg, agg))
-            return num / jnp.maximum(na * nb, 1e-12)
-        q = jax.vmap(cos_one)(jnp.arange(mask.shape[0]))
         info = {"client_losses": losses, "q_values": q * mask,
                 "mean_loss": jnp.sum(losses * w)}
         return new_params, info
 
     return round_fn
+
+
+def make_fl_rounds_scan(loss_fn: Callable, local_lr: float = 0.05,
+                        local_steps: int = 1, batch_size: int = 16,
+                        server_lr: float = 1.0, dropout_rate: float = 0.0,
+                        fused_quality: bool = True,
+                        use_agg_kernel: bool = False):
+    """Chunked multi-round driver: S rounds in ONE device dispatch.
+
+    Returns ``chunk_fn(params, data, schedule, base_key)`` (jit'd, params
+    donated) where
+
+    - ``data`` is a :class:`repro.fl.device_data.DeviceDataset` (staged
+      once; never re-transferred),
+    - ``schedule`` is a dict of stacked per-round arrays from stage 2:
+      ``rows (S, K)`` int32 positions into the dataset pools, ``weights
+      (S, K)`` f32 FedAvg p_k, ``active (S, K)`` f32 padding mask
+      (subsets sized n±δ are padded to a static K with actives first),
+      ``round_ids (S,)`` int32 global round indices (PRNG folding —
+      chunking-invariant randomness),
+    - ``base_key`` seeds batch sampling + dropout via per-(round, slot)
+      key folds (fl.device_data.sample_positions).
+
+    Each scan step gathers the round's client batches on device, draws
+    the dropout mask on device, runs E local steps per client, and
+    applies the fused aggregation+quality pass. Outputs stack across the
+    chunk: ``(params', {"masks": (S,K), "q_values": (S,K),
+    "client_losses": (S,K), "mean_loss": (S,)})``. The host only sees
+    params/metrics at chunk boundaries (core.service round_chunk knob).
+    """
+    client_update = _make_client_update(loss_fn, local_lr)
+
+    @functools.partial(jax.jit, donate_argnums=(0,))
+    def chunk_fn(params, data: device_data.DeviceDataset, schedule, base_key):
+        K = schedule["rows"].shape[1]
+
+        def one_round(params, per_round):
+            rows, weights, active, rnd = per_round
+            # a scheduled client with an empty pool cannot return an
+            # update: treat its slot as inactive (b_t = 0, weight 0)
+            # rather than silently training on the index-0 fallback.
+            active = active * (jnp.take(data.sizes, rows, axis=0) > 0)
+            mask_u, pos_u = device_data.sample_positions(
+                base_key, rnd, K, local_steps, batch_size)
+            mask = device_data.dropout_mask(mask_u, active, dropout_rate)
+            batch = device_data.gather_batches(data, rows, pos_u)
+            deltas, losses = jax.vmap(client_update, in_axes=(None, 0))(
+                params, batch)
+            w = weights * mask
+            w = w / jnp.maximum(w.sum(), 1e-9)
+            agg, q = _aggregate_and_quality(deltas, w, use_agg_kernel,
+                                            fused_quality)
+            params = jax.tree_util.tree_map(
+                lambda p, d: (p - server_lr * d).astype(p.dtype), params, agg)
+            return params, {"masks": mask, "q_values": q * mask,
+                            "client_losses": losses,
+                            "mean_loss": jnp.sum(losses * w)}
+
+        xs = (schedule["rows"], schedule["weights"], schedule["active"],
+              schedule["round_ids"])
+        return jax.lax.scan(one_round, params, xs)
+
+    return chunk_fn
 
 
 def make_fedsgd_step(loss_fn: Callable, optimizer, microbatches: int = 1,

@@ -1,11 +1,29 @@
 """End-to-end FL simulation: glues core.service (selection/scheduling)
 to real JAX training (fl.round) over partitioned synthetic data —
 the machinery behind the paper's Figs. 5/6 experiments.
+
+Two trainers implement the ``core.service`` trainer protocol:
+
+- :class:`FLClassificationSim` — the legacy host-loop data plane: every
+  round assembles client batches on the host (numpy fancy-indexing per
+  client) and ships them to the device, one dispatch per round. Kept as
+  the equivalence/benchmark baseline.
+- :class:`DeviceFLSim` — the device-resident data plane: the partitioned
+  dataset is staged on device once (fl.device_data.DeviceDataset) and
+  ``run_rounds`` drives S rounds per dispatch through the chunked
+  ``lax.scan`` driver (fl.round.make_fl_rounds_scan) with on-device
+  batch gather, dropout masks, and the fused aggregation+quality pass.
+  Wired into ``FLServiceProvider.run_task`` via ``TaskRequest.round_chunk``.
+
+Both trainers draw batch positions and dropout from the same
+slot-keyed PRNG stream (fl.device_data.sample_positions), so with equal
+seeds they see identical schedules, masks, and batches — the
+device-vs-legacy equivalence tests rely on this.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable
+from typing import Callable, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -15,8 +33,9 @@ from repro.core import (ClientPoolState, ClientProfile, FLServiceProvider,
                         TaskRequest)
 from repro.core.criteria import NUM_CRITERIA, data_dist_score, overall_score, linear_cost
 from repro.data.synthetic import ClassificationData
+from repro.fl import device_data
 from repro.fl.partition import client_histograms
-from repro.fl.round import make_fl_round
+from repro.fl.round import make_fl_round, make_fl_rounds_scan
 from repro.models import cnn
 
 
@@ -53,8 +72,44 @@ def profiles_from_partition(labels, parts, num_classes,
     return pool_from_partition(labels, parts, num_classes, seed).to_profiles()
 
 
-class FLClassificationSim:
-    """Federated CNN training over a partitioned synthetic dataset."""
+class _EvalCache:
+    """Shared eval/history machinery for both trainers: the test set is
+    cached on device once (evaluate() only ships sampled indices), and
+    per-round metrics/history bookkeeping lives in one place so the two
+    data planes cannot drift apart."""
+
+    def _init_eval(self, model_cfg: cnn.CNNConfig, test: ClassificationData,
+                   sim: SimConfig, impl: str = "reference"):
+        self.sim = sim
+        self._eval_fn = jax.jit(
+            lambda p, images, labels: (cnn.forward(model_cfg, p, images,
+                                                   impl=impl)
+                                       .argmax(-1) == labels).mean())
+        self._test_images = jnp.asarray(test.images)
+        self._test_labels = jnp.asarray(test.labels)
+        self._eval_rng = np.random.default_rng(sim.seed)
+        self.history: list[dict] = []
+
+    def evaluate(self, n: int = 1024) -> float:
+        m = len(self._test_labels)
+        idx = jnp.asarray(self._eval_rng.choice(m, size=min(n, m),
+                                                replace=False))
+        return float(self._eval_fn(self.params,
+                                   jnp.take(self._test_images, idx, axis=0),
+                                   jnp.take(self._test_labels, idx, axis=0)))
+
+    def _record(self, rnd: int, loss) -> dict:
+        metrics = {"round": rnd, "loss": float(loss)}
+        if rnd % self.sim.eval_every == 0:
+            metrics["accuracy"] = self.evaluate()
+        self.history.append(metrics)
+        return metrics
+
+
+class FLClassificationSim(_EvalCache):
+    """Federated CNN training over a partitioned synthetic dataset —
+    the legacy host-loop data plane (per-round host batch assembly +
+    host→device transfer; one jit dispatch per round)."""
 
     def __init__(self, model_cfg: cnn.CNNConfig, data: ClassificationData,
                  parts: list[np.ndarray], test: ClassificationData,
@@ -63,62 +118,202 @@ class FLClassificationSim:
         self.data = data
         self.parts = parts
         self.test = test
-        self.sim = sim
-        self.rng = np.random.default_rng(sim.seed)
+        self.base_key = jax.random.PRNGKey(sim.seed)
         self.params = cnn.init_params(model_cfg, jax.random.PRNGKey(sim.seed))
         self.round_fn = make_fl_round(
             lambda p, b: cnn.loss_fn(model_cfg, p, b),
             local_lr=sim.local_lr, local_steps=sim.local_steps,
             server_lr=sim.server_lr)
-        self._eval_fn = jax.jit(
-            lambda p, images, labels: (cnn.forward(model_cfg, p, images)
-                                       .argmax(-1) == labels).mean())
-        self.history: list[dict] = []
+        self._init_eval(model_cfg, test, sim)
         self.dropped_this_round: set[int] = set()
 
     # -- batching -----------------------------------------------------------
-    def _client_batches(self, subset):
+    def _round_draws(self, rnd: int, K: int):
+        """Shared slot-keyed PRNG draws for round ``rnd`` (host copy)."""
+        mask_u, pos_u = device_data.sample_positions(
+            self.base_key, rnd, K, self.sim.local_steps, self.sim.batch_size)
+        return np.asarray(mask_u), np.asarray(pos_u)
+
+    def _client_batches(self, subset, pos_u):
         E, b = self.sim.local_steps, self.sim.batch_size
         imgs, labs = [], []
-        for cid in subset:
+        for i, cid in enumerate(subset):
             idx = self.parts[cid]
-            take = self.rng.choice(idx, size=E * b, replace=len(idx) < E * b)
+            pos = np.minimum((pos_u[i] * len(idx)).astype(np.int64),
+                             len(idx) - 1)
+            take = idx[pos.reshape(-1)]
             imgs.append(self.data.images[take].reshape(E, b, *self.data.images.shape[1:]))
             labs.append(self.data.labels[take].reshape(E, b))
         return {"images": jnp.asarray(np.stack(imgs)),
                 "labels": jnp.asarray(np.stack(labs))}
 
-    def evaluate(self, n: int = 1024) -> float:
-        idx = self.rng.choice(len(self.test.labels), size=min(n, len(self.test.labels)),
-                              replace=False)
-        return float(self._eval_fn(self.params,
-                                   jnp.asarray(self.test.images[idx]),
-                                   jnp.asarray(self.test.labels[idx])))
-
     # -- TrainerFn for core.service.FLServiceProvider -----------------------
     def trainer(self, rnd: int, subset, weights) -> tuple:
         K = len(subset)
-        drop = self.rng.uniform(size=K) < self.sim.dropout_rate
-        if drop.all():
-            drop[self.rng.integers(K)] = False
-        batches = self._client_batches(subset)
-        mask = jnp.asarray((~drop).astype(np.float32))
+        mask_u, pos_u = self._round_draws(rnd, K)
+        mask_np = np.asarray(device_data.dropout_mask(
+            jnp.asarray(mask_u), jnp.ones(K), self.sim.dropout_rate))
+        batches = self._client_batches(subset, pos_u)
+        mask = jnp.asarray(mask_np)
         self.params, info = self.round_fn(self.params, batches,
                                           jnp.asarray(weights), mask)
-        metrics = {"round": rnd, "loss": float(info["mean_loss"])}
-        if rnd % self.sim.eval_every == 0:
-            metrics["accuracy"] = self.evaluate()
-        self.history.append(metrics)
+        metrics = self._record(rnd, info["mean_loss"])
         q = np.asarray(info["q_values"])
-        return (~drop), q, metrics
+        return mask_np > 0, q, metrics
+
+
+class DeviceFLSim(_EvalCache):
+    """Device-resident trainer: staged dataset + chunked scan driver.
+
+    Implements both the per-round ``TrainerFn`` protocol (``__call__``)
+    and the chunked ``run_rounds`` protocol that
+    ``FLServiceProvider.run_task`` uses when ``task.round_chunk > 1``.
+
+    Subsets sized n±δ share one static client axis K per dispatch
+    (padding is semantics-free thanks to slot-keyed randomness), and a
+    chunk may be split into several dispatches: a small DP picks the
+    segmentation minimizing padded-slot waste plus a fixed per-dispatch
+    cost, so e.g. a [5,5,5,11]-sized chunk trains as [5,5,5]+[11]
+    rather than all-padded-to-11. ``pad_subset_to`` caps K.
+
+    Eval rounds (``rnd % eval_every == 0``) force a split so the
+    dispatch ends exactly at the eval round — accuracy is always
+    measured with that round's params, matching the host-loop trainer.
+    """
+
+    # estimated fixed cost of one extra dispatch, in units of one
+    # padded client-slot-round of training compute (sets how eagerly
+    # the segmentation DP splits a chunk to avoid padding waste)
+    DISPATCH_COST = 4.0
+
+    def __init__(self, model_cfg: cnn.CNNConfig, data: ClassificationData,
+                 parts: list[np.ndarray], test: ClassificationData,
+                 sim: SimConfig = SimConfig(), impl: str = "auto",
+                 pad_subset_to: int | None = None,
+                 fused_quality: bool = True):
+        self.cfg = model_cfg
+        self.pad_subset_to = pad_subset_to
+        self.base_key = jax.random.PRNGKey(sim.seed)
+        self.params = cnn.init_params(model_cfg, jax.random.PRNGKey(sim.seed))
+        self.data = device_data.DeviceDataset.stage(data, parts)
+        self.chunk_fn = make_fl_rounds_scan(
+            lambda p, b: cnn.loss_fn(model_cfg, p, b, impl=impl),
+            local_lr=sim.local_lr, local_steps=sim.local_steps,
+            batch_size=sim.batch_size, server_lr=sim.server_lr,
+            dropout_rate=sim.dropout_rate, fused_quality=fused_quality)
+        self._init_eval(model_cfg, test, sim, impl=impl)
+
+    def _k_pad(self, k: int) -> int:
+        """Padded client axis for a segment whose largest subset has k
+        clients: next multiple of 2 (fewer distinct compile shapes),
+        capped at pad_subset_to but never below k."""
+        pad = -(-k // 2) * 2
+        if self.pad_subset_to is not None:
+            pad = min(pad, self.pad_subset_to)
+        return max(pad, k)
+
+    def _segment(self, sizes: list[int]) -> list[int]:
+        """Optimal consecutive segmentation of one chunk (DP): minimize
+        Σ over segments of [DISPATCH_COST + Σ_t (K_seg − k_t)] where
+        K_seg pads the segment's max size. Returns segment lengths."""
+        n = len(sizes)
+        best = [0.0] + [float("inf")] * n       # best[i]: cost of sizes[:i]
+        cut = [0] * (n + 1)
+        for i in range(1, n + 1):
+            kmax = 0
+            waste = 0.0
+            for j in range(i - 1, -1, -1):      # segment sizes[j:i]
+                if sizes[j] > kmax:              # pad grew: recompute
+                    kmax = sizes[j]
+                    kp = self._k_pad(kmax)
+                    waste = float(sum(kp - s for s in sizes[j:i]))
+                else:
+                    waste += self._k_pad(kmax) - sizes[j]
+                cost = best[j] + self.DISPATCH_COST + waste
+                if cost < best[i]:
+                    best[i] = cost
+                    cut[i] = j
+        lengths: list[int] = []
+        i = n
+        while i > 0:
+            lengths.append(i - cut[i])
+            i = cut[i]
+        return lengths[::-1]
+
+    # -- chunked trainer protocol -------------------------------------------
+    def run_rounds(self, start_round: int, subsets: Sequence[Sequence[int]],
+                   weights: Sequence[np.ndarray]) -> list[tuple]:
+        """Run ``len(subsets)`` consecutive rounds, splitting the chunk
+        after every eval round (so accuracies use that round's params)
+        and per the padding-vs-dispatch-cost DP (``_segment``)."""
+        out = []
+        seg_start = 0
+        for e in range(len(subsets)):
+            if (start_round + e) % self.sim.eval_every == 0 \
+                    or e == len(subsets) - 1:
+                block = subsets[seg_start:e + 1]
+                r = start_round + seg_start
+                for length in self._segment([len(s) for s in block]):
+                    out += self._dispatch_rounds(
+                        r, subsets[seg_start:seg_start + length],
+                        weights[seg_start:seg_start + length])
+                    r += length
+                    seg_start += length
+        return out
+
+    def _dispatch_rounds(self, start_round: int,
+                         subsets: Sequence[Sequence[int]],
+                         weights: Sequence[np.ndarray]) -> list[tuple]:
+        """One device dispatch for ``len(subsets)`` consecutive rounds."""
+        S = len(subsets)
+        K = self._k_pad(max(len(s) for s in subsets))
+        rows = np.zeros((S, K), dtype=np.int32)
+        w = np.zeros((S, K), dtype=np.float32)
+        active = np.zeros((S, K), dtype=np.float32)
+        for t, (subset, wt) in enumerate(zip(subsets, weights)):
+            k = len(subset)
+            rows[t, :k] = np.asarray(subset, dtype=np.int32)
+            w[t, :k] = np.asarray(wt, dtype=np.float32)
+            active[t, :k] = 1.0
+        schedule = {"rows": jnp.asarray(rows), "weights": jnp.asarray(w),
+                    "active": jnp.asarray(active),
+                    "round_ids": jnp.asarray(
+                        start_round + np.arange(S, dtype=np.int32))}
+        self.params, info = self.chunk_fn(self.params, self.data, schedule,
+                                          self.base_key)
+        masks = np.asarray(info["masks"])
+        qs = np.asarray(info["q_values"])
+        losses = np.asarray(info["mean_loss"])
+        out = []
+        for t, subset in enumerate(subsets):
+            k = len(subset)
+            metrics = self._record(start_round + t, losses[t])
+            out.append((masks[t, :k] > 0, qs[t, :k], metrics))
+        return out
+
+    # -- per-round TrainerFn protocol (round_chunk == 1) ---------------------
+    def __call__(self, rnd: int, subset, weights) -> tuple:
+        return self.run_rounds(rnd, [subset], [np.asarray(weights)])[0]
+
+    @property
+    def trainer(self):
+        """The object itself: callable per-round AND chunk-capable, so
+        ``run_task`` can discover ``run_rounds`` via ``hasattr``."""
+        return self
 
 
 def run_fl_experiment(kind: str, noniid: str, n_clients: int = 100,
                       rounds: int = 30, scheduler: str = "mkp",
                       n_train: int = 6000, n_test: int = 1500,
                       subset_size: int = 10, sim: SimConfig = SimConfig(),
-                      seed: int = 0) -> dict:
-    """One learning-curve run (paper Figs. 5/6): returns history + config."""
+                      seed: int = 0, data_plane: str = "host",
+                      round_chunk: int = 8) -> dict:
+    """One learning-curve run (paper Figs. 5/6): returns history + config.
+
+    ``data_plane="host"`` uses the legacy per-round host-loop trainer;
+    ``"device"`` stages the dataset on device and runs ``round_chunk``
+    rounds per dispatch through the chunked scan driver.
+    """
     from repro.data.synthetic import make_classification_data
     from repro.fl.partition import partition_labels
 
@@ -132,11 +327,20 @@ def run_fl_experiment(kind: str, noniid: str, n_clients: int = 100,
                                seed=seed)
     provider = FLServiceProvider(pool)
     model_cfg = cnn.MNIST_CNN if kind == "mnist" else cnn.CIFAR_CNN
-    simul = FLClassificationSim(model_cfg, data, parts, test, sim)
+    subset_delta = 3
+    if data_plane == "device":
+        simul = DeviceFLSim(model_cfg, data, parts, test, sim,
+                            pad_subset_to=subset_size + subset_delta)
+    elif data_plane == "host":
+        simul = FLClassificationSim(model_cfg, data, parts, test, sim)
+        round_chunk = 1
+    else:
+        raise ValueError(f"unknown data_plane {data_plane!r}")
 
     task = TaskRequest(budget=1e9, n_star=n_clients, subset_size=subset_size,
-                       subset_delta=3, x_star=3, max_periods=10_000,
-                       scheduler=scheduler, seed=seed)
+                       subset_delta=subset_delta, x_star=3, max_periods=10_000,
+                       scheduler=scheduler, seed=seed,
+                       round_chunk=round_chunk, max_rounds=rounds)
     result = provider.run_task(
         task, simul.trainer,
         stop_fn=lambda m: m["round"] + 1 >= rounds)

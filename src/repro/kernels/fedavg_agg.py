@@ -1,10 +1,21 @@
-"""Fused FedAvg aggregation Pallas kernel.
+"""Fused FedAvg aggregation Pallas kernels.
 
 The paper's server-side aggregation Δ_t = Σ_k p_k · Δ_t^(k) is a
 bandwidth-bound weighted reduction over K client updates. The kernel
 tiles the flattened parameter axis into VMEM-sized blocks; the client
 axis is the in-register reduction dimension, weights live in SMEM-like
 a (1,K) block, accumulation in f32 regardless of the update dtype.
+
+``fedavg_agg_quality`` is the fused aggregation + model-quality kernel
+of the device-resident round data plane: in a single pass over the
+stacked deltas U (K, P) it emits the weighted aggregate Δ_t AND the
+per-client Gram quantities the server's quality signal q_t (paper
+§IV-C, q_t = cos(Δ_t^(k), Δ_t)) needs — ⟨Δ_t^(k), Δ_t⟩, ‖Δ_t^(k)‖² and
+‖Δ_t‖². U is read once instead of twice (once to aggregate, once for
+the K cosines), and the per-client tree-walk in fl.round disappears.
+The reduction outputs accumulate across the sequential parameter-block
+grid (init at block 0), with the ragged tail column-masked so padding
+never leaks into the sums.
 """
 from __future__ import annotations
 
@@ -46,6 +57,70 @@ def fedavg_agg(updates, weights, *, block_p: int = 16_384,
             dimension_semantics=("parallel",)),
         interpret=interpret,
     )(w2, updates)
+
+
+def _agg_quality_kernel(w_ref, u_ref, o_ref, dots_ref, sq_ref, asq_ref, *,
+                        total_p: int, block_p: int):
+    i = pl.program_id(0)
+    u = u_ref[...].astype(jnp.float32)                 # (K, bp)
+    # column-mask the ragged tail so reductions ignore block padding
+    col = jax.lax.broadcasted_iota(jnp.int32, u.shape, 1) + i * block_p
+    u = jnp.where(col < total_p, u, 0.0)
+    w = w_ref[...].astype(jnp.float32)                 # (1, K)
+    agg = jax.lax.dot(w, u, preferred_element_type=jnp.float32)  # (1, bp)
+    o_ref[...] = agg[0].astype(o_ref.dtype)
+    part_dots = jax.lax.dot(u, agg.T,
+                            preferred_element_type=jnp.float32)  # (K, 1)
+    part_sq = jnp.sum(u * u, axis=1, keepdims=True)              # (K, 1)
+    part_asq = jnp.sum(agg * agg).reshape(1, 1)
+
+    @pl.when(i == 0)
+    def _init():
+        dots_ref[...] = part_dots
+        sq_ref[...] = part_sq
+        asq_ref[...] = part_asq
+
+    @pl.when(i > 0)
+    def _accumulate():
+        dots_ref[...] += part_dots
+        sq_ref[...] += part_sq
+        asq_ref[...] += part_asq
+
+
+@functools.partial(jax.jit, static_argnames=("block_p", "interpret"))
+def fedavg_agg_quality(updates, weights, *, block_p: int = 16_384,
+                       interpret: bool = False):
+    """Fused Δ_t + quality pass. updates: (K, P); weights: (K,) p_k.
+
+    Returns ``(agg, dots, sq, asq)``:
+      agg  (P,)  = Σ_k p_k updates_k (dtype of updates, f32 accumulate)
+      dots (K,)  = ⟨updates_k, agg⟩ (f32; agg kept in f32 for the dot)
+      sq   (K,)  = ‖updates_k‖² (f32)
+      asq  ()    = ‖agg‖² (f32)
+    so q_k = dots_k / max(sqrt(sq_k)·sqrt(asq), eps).
+    """
+    K, P = updates.shape
+    bp = min(block_p, P)
+    w2 = weights.reshape(1, K)
+    kernel = functools.partial(_agg_quality_kernel, total_p=P, block_p=bp)
+    agg, dots, sq, asq = pl.pallas_call(
+        kernel,
+        grid=(pl.cdiv(P, bp),),
+        in_specs=[pl.BlockSpec((1, K), lambda i: (0, 0)),
+                  pl.BlockSpec((K, bp), lambda i: (0, i))],
+        out_specs=[pl.BlockSpec((bp,), lambda i: (i,)),
+                   pl.BlockSpec((K, 1), lambda i: (0, 0)),
+                   pl.BlockSpec((K, 1), lambda i: (0, 0)),
+                   pl.BlockSpec((1, 1), lambda i: (0, 0))],
+        out_shape=[jax.ShapeDtypeStruct((P,), updates.dtype),
+                   jax.ShapeDtypeStruct((K, 1), jnp.float32),
+                   jax.ShapeDtypeStruct((K, 1), jnp.float32),
+                   jax.ShapeDtypeStruct((1, 1), jnp.float32)],
+        compiler_params=_CompilerParams(
+            dimension_semantics=("arbitrary",)),
+        interpret=interpret,
+    )(w2, updates)
+    return agg, dots[:, 0], sq[:, 0], asq[0, 0]
 
 
 def fedavg_agg_tree(updates_tree, weights, *, interpret: bool = False):

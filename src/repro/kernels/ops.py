@@ -11,6 +11,7 @@ import jax.numpy as jnp
 
 from . import ref
 from .fedavg_agg import fedavg_agg as _fedavg_pallas
+from .fedavg_agg import fedavg_agg_quality as _fedavg_quality_pallas
 from .fedavg_agg import fedavg_agg_tree
 from .flash_attention import flash_attention as _flash_pallas
 from .mkp_utility import mkp_utility as _mkp_utility_pallas
@@ -61,6 +62,17 @@ def fedavg_agg(updates, weights, *, interpret=None):
     return ref.fedavg_agg_ref(updates, weights)
 
 
+def fedavg_agg_quality(updates, weights, *, interpret=None):
+    """Fused Δ_t aggregation + per-client quality pass (single read of
+    the stacked updates). Returns (agg (P,), dots (K,), sq (K,), asq ())
+    — see kernels.fedavg_agg.fedavg_agg_quality."""
+    use_pallas = _on_tpu() if interpret is None else True
+    if use_pallas:
+        return _fedavg_quality_pallas(updates, weights,
+                                      interpret=bool(interpret))
+    return ref.fedavg_agg_quality_ref(updates, weights)
+
+
 def mkp_utility(values, weights, residual, selectable, *, interpret=None):
     """Toyoda pseudo-utility update for the MKP greedy (core.engine).
 
@@ -85,4 +97,5 @@ def mlstm_scan(q, k, v, log_f, log_i=None, *, chunk=64, normalize=True,
 
 
 __all__ = ["flash_attention", "flash_attention_bshd", "rmsnorm", "swiglu",
-           "fedavg_agg", "fedavg_agg_tree", "mkp_utility", "mlstm_scan"]
+           "fedavg_agg", "fedavg_agg_quality", "fedavg_agg_tree",
+           "mkp_utility", "mlstm_scan"]

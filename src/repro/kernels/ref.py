@@ -61,6 +61,22 @@ def fedavg_agg_ref(updates, weights):
     return acc.astype(updates.dtype)
 
 
+def fedavg_agg_quality_ref(updates, weights):
+    """Fused aggregation + quality oracle (kernels.fedavg_agg).
+
+    updates: (K, P), weights: (K,). Returns (agg, dots, sq, asq) with
+    agg = Σ_k p_k u_k in updates.dtype, dots_k = ⟨u_k, agg⟩ (f32 agg),
+    sq_k = ‖u_k‖², asq = ‖agg‖² — everything accumulated in f32.
+    """
+    u = updates.astype(jnp.float32)
+    w = weights.astype(jnp.float32)
+    agg = jnp.einsum("k,kp->p", w, u)
+    dots = u @ agg
+    sq = jnp.sum(u * u, axis=1)
+    asq = jnp.dot(agg, agg)
+    return agg.astype(updates.dtype), dots, sq, asq
+
+
 def mlstm_scan_ref(q, k, v, log_f, log_i, *, chunk: int = 64,
                    normalize: bool = True):
     """Chunkwise gated linear attention oracle.

@@ -6,7 +6,7 @@ import numpy as np
 import pytest
 
 from repro.kernels import ref
-from repro.kernels.fedavg_agg import fedavg_agg
+from repro.kernels.fedavg_agg import fedavg_agg, fedavg_agg_quality
 from repro.kernels.flash_attention import flash_attention
 from repro.kernels.mlstm_scan import mlstm_scan
 from repro.kernels.rmsnorm import rmsnorm
@@ -123,6 +123,54 @@ class TestFedAvgAgg:
         w = jnp.array([0.5, 0.25, 0.25])
         out = fedavg_agg(u, w, block_p=32, interpret=True)
         np.testing.assert_allclose(np.asarray(out), 2.0, rtol=1e-6)
+
+
+class TestFedAvgAggQuality:
+    """Fused aggregation+quality kernel vs the two-pass reference:
+    ragged parameter axes (P % block_p != 0), small/odd K, both dtypes,
+    interpret and reference modes (deliverable of ISSUE 2)."""
+
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    @pytest.mark.parametrize("K,P,bp", [
+        (4, 128, 64),     # aligned
+        (13, 1000, 64),   # ragged P, odd K
+        (1, 64, 64),      # single client
+        (3, 130, 64),     # ragged tail smaller than a block
+        (8, 50, 64),      # single partial block (P < block_p)
+    ])
+    def test_sweep_vs_ref(self, K, P, bp, dtype):
+        u = jax.random.normal(rk(0), (K, P), dtype)
+        w = jax.nn.softmax(jax.random.normal(rk(1), (K,)))
+        agg, dots, sq, asq = fedavg_agg_quality(u, w, block_p=bp,
+                                                interpret=True)
+        r_agg, r_dots, r_sq, r_asq = ref.fedavg_agg_quality_ref(u, w)
+        assert_close(agg, r_agg, dtype)
+        assert_close(dots, r_dots, dtype)
+        assert_close(sq, r_sq, dtype)
+        assert_close(asq, r_asq, dtype)
+
+    def test_matches_two_pass_cosine(self):
+        """q from the fused outputs == cosine(delta_k, tree_weighted_sum)
+        computed the legacy way (f32 accumulate tolerance)."""
+        K, P = 6, 333
+        u = jax.random.normal(rk(2), (K, P))
+        w = jax.nn.softmax(jax.random.normal(rk(3), (K,)))
+        agg, dots, sq, asq = fedavg_agg_quality(u, w, block_p=128,
+                                                interpret=True)
+        q = dots / jnp.maximum(jnp.sqrt(sq) * jnp.sqrt(asq), 1e-12)
+        ref_agg = ref.fedavg_agg_ref(u, w).astype(jnp.float32)
+        ref_q = (u.astype(jnp.float32) @ ref_agg) / jnp.maximum(
+            jnp.linalg.norm(u, axis=1) * jnp.linalg.norm(ref_agg), 1e-12)
+        assert_close(agg, ref_agg, jnp.float32)
+        assert_close(q, ref_q, jnp.float32)
+
+    def test_agg_consistent_with_plain_kernel(self):
+        K, P = 5, 200
+        u = jax.random.normal(rk(4), (K, P))
+        w = jax.nn.softmax(jax.random.normal(rk(5), (K,)))
+        agg, *_ = fedavg_agg_quality(u, w, block_p=64, interpret=True)
+        plain = fedavg_agg(u, w, block_p=64, interpret=True)
+        assert_close(agg, plain, jnp.float32)
 
 
 class TestMLSTMScan:
