@@ -14,7 +14,8 @@ Three paths over the SAME schedule/PRNG stream:
                      per ``lax.scan`` dispatch, zero per-round host
                      transfers.
 
-Each path serves the task three times through ``run_task``: a COLD pass
+Each path serves the task three times through the service lifecycle
+(``lifecycle.submit`` + ``drain``): a COLD pass
 (first task on a fresh trainer — includes every jit compile) and two
 WARM passes (the same trainer serving further identical tasks — the
 steady state a deployed provider sustains; min of the two on this
@@ -38,7 +39,7 @@ import time
 
 import numpy as np
 
-from repro.core import FLServiceProvider, TaskRequest
+from repro.core import FLServiceProvider, TaskRequest, lifecycle
 from repro.data.synthetic import make_classification_data
 from repro.fl.partition import partition_labels
 from repro.fl.simulation import (DeviceFLSim, FLClassificationSim, SimConfig,
@@ -75,7 +76,7 @@ class _TimedTrainer:
     """Wraps a trainer, accumulating time spent inside trainer calls —
     the round loop proper, without the (shared) scheduling control
     plane. Exposes ``run_rounds`` only when the inner trainer does, so
-    run_task's chunk-capability probe still works."""
+    the lifecycle treats it exactly like the inner trainer."""
 
     def __init__(self, inner):
         self.inner = inner
@@ -120,8 +121,11 @@ def _run_one(path: str, cfg, data, test, parts, pool):
         provider = FLServiceProvider(pool)
         loop0 = trainer.seconds
         t0 = time.perf_counter()
-        result = provider.run_task(task, trainer,
-                                   stop_fn=lambda m: m["round"] + 1 >= rounds)
+        state = lifecycle.submit(provider, task)
+        state, _ = lifecycle.drain(
+            provider, state, trainer,
+            stop_fn=lambda m: m["round"] + 1 >= rounds)
+        result = lifecycle.as_run_result(state)
         elapsed = time.perf_counter() - t0
         assert result.num_rounds == rounds, (path, result.num_rounds)
         return (elapsed, trainer.seconds - loop0,

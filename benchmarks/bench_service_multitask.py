@@ -1,0 +1,185 @@
+"""ISSUE-3 multi-tenant service study: N concurrent FL tasks over one
+shared client pool, served by the round-robin ``ServiceScheduler``
+(batched stage-1 intake + interleaved ``step``) vs the serial baseline
+(``submit`` + ``drain`` one task after another).
+
+Two things are measured at T ∈ {8, 16, 32, 64} concurrent tasks
+(T ∈ {8, 16} in smoke mode):
+
+- **throughput** — tasks/sec and rounds/sec for serial vs scheduler
+  execution of the identical task set (stub trainers, so the number is
+  the *orchestration* cost: stage-1 knapsacks, Algorithm-1 scheduling,
+  reputation bookkeeping, state-machine overhead);
+- **round-latency fairness** — every trained round is stamped with its
+  global completion index; per task we take the mean normalized
+  completion position of its rounds, and report the Jain index over
+  tasks. Serial execution finishes task 0 entirely before task T-1
+  starts (positions spread over [0, 1] -> Jain ≈ 0.75); round-robin
+  interleaving keeps every task's mean position ≈ 0.5 (Jain -> 1.0) —
+  the multi-tenant service property the blocking run_task loop could
+  not provide.
+
+Also timed: batched stage-1 intake (``select_pools_batch``) vs per-task
+``select_pool`` for the same T tasks.
+
+Results go through the harness ``report`` AND into machine-readable
+``BENCH_service.json`` at the repo root.
+
+Reproduce locally:
+    PYTHONPATH=src python -m benchmarks.run --only bench_service_multitask
+or directly (CI uses this):
+    PYTHONPATH=src python -m benchmarks.bench_service_multitask --smoke
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import numpy as np
+
+from repro.core import (FLServiceProvider, ServiceScheduler, TaskRequest,
+                        as_run_result, drain, jain_index, submit)
+from repro.core.pool import ClientPoolState
+
+_JSON_PATH = os.path.join(os.path.dirname(os.path.abspath(__file__)), "..",
+                          "BENCH_service.json")
+
+
+def _stub_trainer(task_seed: int):
+    """Deterministic, nearly-free trainer: orchestration is the cost."""
+    def trainer(rnd, subset, weights):
+        returned = np.array([(cid + rnd + task_seed) % 11 != 0
+                             for cid in subset])
+        q = np.where(returned, 0.6 + 0.3 * np.cos(np.asarray(subset) + rnd),
+                     0.0)
+        return returned, q, {"round": rnd}
+    return trainer
+
+
+def _make_tasks(T: int, n_pool: int) -> list[TaskRequest]:
+    return [TaskRequest(budget=3.0 * n_pool + 17.0 * t, n_star=8,
+                        subset_size=6, subset_delta=2, x_star=3,
+                        max_periods=2,
+                        scheduler="mkp" if t % 2 else "random", seed=t)
+            for t in range(T)]
+
+
+def _serial(pool: ClientPoolState, tasks) -> tuple[float, dict, list[int]]:
+    """One task after another; returns elapsed, results, and the task id
+    of every round in completion order."""
+    provider = FLServiceProvider(pool)
+    order: list[int] = []
+    results = {}
+    t0 = time.perf_counter()
+    for tid, task in enumerate(tasks):
+        state = submit(provider, task)
+        state, events = drain(provider, state, _stub_trainer(task.seed))
+        order.extend([tid] * len(events))
+        results[tid] = as_run_result(state)
+    return time.perf_counter() - t0, results, order
+
+
+def _concurrent(pool: ClientPoolState, tasks) -> tuple[float, dict, list[int]]:
+    """ServiceScheduler round-robin; same outputs as :func:`_serial`."""
+    provider = FLServiceProvider(pool)
+    sched = ServiceScheduler(provider)
+    for task in tasks:
+        sched.submit(task, _stub_trainer(task.seed))
+    order: list[int] = []
+    t0 = time.perf_counter()
+    while sched.active:
+        for tid, events in sched.sweep().items():
+            order.extend([tid] * len(events))
+    elapsed = time.perf_counter() - t0
+    return elapsed, sched.results(), order
+
+
+def _latency_fairness(order: list[int], T: int) -> float:
+    """Jain index over per-task mean normalized round-completion
+    position (1.0 = every task progresses at the same rate)."""
+    if not order:
+        return 1.0
+    pos = {t: [] for t in range(T)}
+    for i, tid in enumerate(order):
+        pos[tid].append((i + 1) / len(order))
+    means = np.array([np.mean(p) if p else 0.0 for p in pos.values()])
+    return float(jain_index(means))
+
+
+def run(report):
+    smoke = bool(int(os.environ.get("REPRO_BENCH_SMOKE", "0")))
+    n_pool = 500 if smoke else 5000
+    fleet = (8, 16) if smoke else (8, 16, 32, 64)
+    record: dict = {"smoke": smoke, "n_pool": n_pool, "fleet": []}
+    rng = np.random.default_rng(0)
+    pool = ClientPoolState.random(n_pool, 10, rng)
+
+    for T in fleet:
+        tasks = _make_tasks(T, n_pool)
+        ser_s, ser_res, ser_order = _serial(pool, tasks)
+        con_s, con_res, con_order = _concurrent(pool, tasks)
+        # sanity: interleaving must not change any task's outcome
+        for tid in range(T):
+            a, b = ser_res[tid], con_res[tid]
+            assert sorted(a.pool.selected) == sorted(b.pool.selected), tid
+            assert [r.subset for r in a.rounds] == \
+                [r.subset for r in b.rounds], tid
+        n_rounds = sum(r.num_rounds for r in ser_res.values())
+        row = {"tasks": T, "rounds": n_rounds,
+               "serial_s": round(ser_s, 4),
+               "scheduler_s": round(con_s, 4),
+               "serial_tasks_per_s": round(T / ser_s, 2),
+               "scheduler_tasks_per_s": round(T / con_s, 2),
+               "scheduler_overhead_x": round(con_s / max(ser_s, 1e-9), 3),
+               "fairness_serial": round(_latency_fairness(ser_order, T), 4),
+               "fairness_scheduler": round(_latency_fairness(con_order, T),
+                                           4)}
+        record["fleet"].append(row)
+        report(f"tasks_per_s_serial_T{T}", row["serial_tasks_per_s"],
+               f"{n_rounds} rounds total")
+        report(f"tasks_per_s_scheduler_T{T}", row["scheduler_tasks_per_s"],
+               "round-robin + batched intake")
+        report(f"fairness_serial_T{T}", row["fairness_serial"],
+               "Jain over per-task round completion position")
+        report(f"fairness_scheduler_T{T}", row["fairness_scheduler"],
+               "1.0 = all tasks progress together")
+
+    # batched stage-1 intake vs per-task select_pool
+    T = fleet[-1]
+    tasks = _make_tasks(T, n_pool)
+    provider = FLServiceProvider(pool)
+    t0 = time.perf_counter()
+    per_task = [provider.select_pool(t) for t in tasks]
+    t_seq = time.perf_counter() - t0
+    provider.select_pools_batch(tasks[:1])      # jit warmup if any
+    t0 = time.perf_counter()
+    batched = provider.select_pools_batch(tasks)
+    t_batch = time.perf_counter() - t0
+    for a, b in zip(per_task, batched):
+        assert sorted(a.selected) == sorted(b.selected)
+    record["intake"] = {"tasks": T,
+                        "per_task_ms": round(1e3 * t_seq, 3),
+                        "batched_ms": round(1e3 * t_batch, 3),
+                        "speedup": round(t_seq / max(t_batch, 1e-9), 2)}
+    report(f"intake{T}_per_task_ms", record["intake"]["per_task_ms"],
+           "select_pool per task")
+    report(f"intake{T}_batched_ms", record["intake"]["batched_ms"],
+           "select_pools_batch (one sweep)")
+    report(f"intake{T}_speedup", record["intake"]["speedup"], "x")
+
+    with open(_JSON_PATH, "w") as f:
+        json.dump(record, f, indent=1)
+    report("json_written", 1, os.path.abspath(_JSON_PATH))
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized configuration (same as "
+                         "REPRO_BENCH_SMOKE=1)")
+    args = ap.parse_args()
+    if args.smoke:
+        os.environ["REPRO_BENCH_SMOKE"] = "1"
+    run(lambda k, v, note="": print(f"{k},{v},{note}"))

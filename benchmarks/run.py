@@ -15,6 +15,7 @@ BENCHES = [
     "bench_subsets",          # Fig. 4 + fairness §VII
     "bench_training",         # Figs. 5/6 (reduced)
     "bench_round_time",       # ISSUE-2 device-resident round data plane
+    "bench_service_multitask",  # ISSUE-3 multi-tenant service lifecycle
     "bench_roofline",         # §Roofline (from dry-run artifacts)
 ]
 

@@ -1,16 +1,35 @@
-"""FL-service walkthrough: the full §III system loop with reputation.
+"""FL-service walkthrough: the full §III system loop as an explicit,
+resumable task lifecycle.
 
-Demonstrates: task intake -> threshold filter + budget floor (Eq. 11) ->
-greedy pool selection -> repeated scheduling periods with per-round
-model-quality/behavior tracking (Eqs. 3-5) -> suspension of unreliable
-clients -> re-admission.
+Demonstrates the redesigned service API end to end:
+
+1. task intake -> threshold filter + budget floor (Eq. 11) -> greedy
+   pool selection (``lifecycle.submit``);
+2. stepping the task state machine one transition at a time
+   (``lifecycle.step``: SCHEDULED -> TRAINING -> PERIOD_CHECKPOINT),
+   with per-round model-quality/behavior tracking (Eqs. 3-5) and
+   suspension of unreliable clients;
+3. client churn: new clients register into the shared pool mid-task and
+   are admitted at the next PERIOD_CHECKPOINT; a departing client is
+   deregistered and dropped;
+4. checkpoint/resume: the TaskState is serialized to disk mid-period,
+   "the provider dies", and a fresh provider resumes it to completion
+   (``lifecycle.save_state`` / ``load_state``);
+5. multi-tenant serving: a ServiceScheduler drives several tasks
+   concurrently over the one shared pool with batched stage-1 intake.
 
 Run:  PYTHONPATH=src python examples/fl_service_demo.py
 """
+import os
+import tempfile
+
 import numpy as np
 
-from repro.core import (FLServiceProvider, TaskRequest, budget_floor,
-                        random_profiles, threshold_filter)
+from repro.core import (FLServiceProvider, ServiceScheduler, TaskPhase,
+                        TaskRequest, as_run_result, budget_floor, drain,
+                        load_state, random_profiles, save_state, step,
+                        submit, threshold_filter)
+from repro.core.pool import ClientPoolState
 
 rng = np.random.default_rng(7)
 profiles = random_profiles(80, n_classes=10, rng=rng)
@@ -37,10 +56,58 @@ def trainer(rnd, subset, weights):
     return returned, q, {"round": rnd}
 
 
-result = provider.run_task(task, trainer)
-print(f"pool: {len(result.pool.selected)} clients, "
-      f"cost {result.pool.total_cost:.0f} <= {task.budget:.0f}")
-for period in range(3):
+# -- 1-2: submit, then step the machine explicitly --------------------------
+state = submit(provider, task)
+print(f"\nsubmit -> {state.phase.name}: pool of "
+      f"{len(state.pool_selected.selected)} clients, cost "
+      f"{state.pool_selected.total_cost:.0f} <= {task.budget:.0f}")
+
+transitions = 0
+while not (state.phase == TaskPhase.PERIOD_CHECKPOINT
+           or state.phase.terminal):
+    state, events = step(provider, state, trainer)
+    transitions += 1
+    if events:
+        print(f"  step {transitions}: {state.phase.name:17s} trained rounds "
+              f"{[e.round_index for e in events]}")
+    else:
+        print(f"  step {transitions}: -> {state.phase.name}")
+
+# -- 3: churn between periods ------------------------------------------------
+# three budget-priced newcomers join the shared pool mid-task; whoever
+# fits the task's remaining stage-1 budget is admitted at the checkpoint
+joiners = ClientPoolState.random(3, 10, np.random.default_rng(99))
+provider.pool_state.register_arrays(joiners.client_ids + 1000,
+                                    joiners.scores, joiners.histograms,
+                                    np.full(3, 5.0))
+leaver = sorted(state.pool)[-1]
+provider.pool_state.deregister([leaver])
+state, _ = step(provider, state, trainer)   # the PERIOD_CHECKPOINT step
+admitted = sorted(set(state.admitted))
+print(f"\nchurn at period boundary: registered 3 joiners, deregistered "
+      f"client {leaver}; admitted {admitted}, pool now {len(state.pool)}")
+
+# -- 4: checkpoint, "crash", resume in a fresh provider ----------------------
+# step into the middle of period 1 (schedule drawn, one chunk trained)
+# so the checkpoint carries a pending schedule and a subset cursor
+state, _ = step(provider, state, trainer)   # -> SCHEDULED
+state, _ = step(provider, state, trainer)   # -> TRAINING (1 round done)
+ckpt = os.path.join(tempfile.mkdtemp(), "task_state.ckpt")
+save_state(ckpt, state)
+pool_arrays = provider.pool_state          # the registry survives the crash
+del provider, state
+
+provider = FLServiceProvider(pool_arrays)
+state = load_state(ckpt)
+print(f"resumed from {os.path.basename(ckpt)} at phase {state.phase.name}, "
+      f"period {state.period}, round {state.global_round} "
+      f"(subset {state.subset_index}/{len(state.schedule.subsets)} of the "
+      f"pending schedule)")
+state, events = drain(provider, state, trainer)
+result = as_run_result(state)
+print(f"drained to {state.phase.name}: {len(events)} further rounds")
+
+for period in sorted({e.period for e in result.rounds}):
     rounds = [r for r in result.rounds if r.period == period]
     participants = {c for r in rounds for c in r.subset}
     print(f"period {period}: {len(rounds)} rounds, "
@@ -49,3 +116,17 @@ for period in range(3):
 low = [cid for cid, s in result.reputation.items() if s < 1.2]
 print(f"low-reputation clients (s_rep < 1.2): {sorted(low)[:10]} "
       f"(flaky = {sorted(flaky)})")
+
+# -- 5: multi-tenant serving -------------------------------------------------
+scheduler = ServiceScheduler(provider)
+for i in range(4):
+    t = TaskRequest(budget=floor * (0.8 + 0.2 * i), n_star=10,
+                    thresholds=thresholds, subset_size=5, subset_delta=2,
+                    max_periods=2, seed=i)
+    scheduler.submit(t, trainer)
+results = scheduler.run()
+print(f"\nServiceScheduler served {len(results)} concurrent tasks "
+      f"(batched stage-1 intake, round-robin stepping):")
+for tid, res in results.items():
+    print(f"  task {tid}: {res.num_rounds:2d} rounds over "
+          f"{len(res.schedules)} periods, pool {len(res.pool.selected)}")

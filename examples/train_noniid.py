@@ -6,6 +6,11 @@ Default is a budgeted run; pass --full for the paper-scale setting
 the device-resident chunked round driver (fl.round.make_fl_rounds_scan,
 ``--round-chunk`` rounds per dispatch) instead of the legacy host loop.
 
+Both trainers implement the ``core.lifecycle.Trainer`` protocol and the
+run is driven through the stepped service lifecycle (submit/drain); the
+final ``TaskState`` comes back in the result, so a driver could
+checkpoint it mid-run (``lifecycle.save_state``) and resume later.
+
 Run:  PYTHONPATH=src python examples/train_noniid.py --kind mnist --noniid type1
 """
 import argparse
@@ -48,7 +53,10 @@ def main():
         accs = [(h["round"], h["accuracy"]) for h in out["history"]
                 if "accuracy" in h]
         curves[sched] = {"accs": accs, "final": out["final_accuracy"]}
+        state = out["state"]
         print(f"[{sched:6s}] final acc {out['final_accuracy']:.3f}  "
+              f"({state.phase.name}, {state.global_round} rounds / "
+              f"{state.period} periods)  "
               f"curve: {['%.2f' % a for _, a in accs]}")
     gain = curves["mkp"]["final"] - curves["random"]["final"]
     print(f"scheduling gain ({args.kind}/{args.noniid}): {gain:+.3f} "

@@ -1,1 +1,1 @@
-from .checkpoint import CheckpointManager, restore, save
+from .checkpoint import CheckpointManager, restore, restore_dict, save

@@ -67,8 +67,7 @@ def save(path: str, tree) -> None:
     os.replace(tmp, path)  # atomic
 
 
-def restore(path: str, like):
-    """Restore into the structure of ``like`` (keys must match)."""
+def _read_payload(path: str) -> dict:
     with open(path, "rb") as f:
         packed = f.read()
     if packed[:4] == _ZSTD_MAGIC:
@@ -77,7 +76,41 @@ def restore(path: str, like):
                 f"{path} is zstd-compressed but the optional 'zstandard' "
                 "module is not installed")
         packed = zstandard.ZstdDecompressor().decompress(packed)
-    payload = msgpack.unpackb(packed, raw=False)
+    return msgpack.unpackb(packed, raw=False)
+
+
+def _record_to_numpy(rec: dict):
+    """Exact-dtype numpy leaf (no ``jnp.asarray``, which would truncate
+    float64/int64 payloads to 32 bit under JAX's default x64=off and
+    hand back immutable device arrays). bfloat16 stays numpy via
+    ``ml_dtypes`` (a jax dependency)."""
+    shape = tuple(rec["shape"])
+    if rec["dtype"] == "bfloat16":
+        import ml_dtypes
+        return np.frombuffer(rec["data"], np.uint16).reshape(shape) \
+            .copy().view(ml_dtypes.bfloat16)
+    return np.frombuffer(rec["data"],
+                         np.dtype(rec["dtype"])).reshape(shape).copy()
+
+
+def restore_dict(path: str) -> dict:
+    """Structure-free restore: the stored leaves as a flat
+    ``{key: numpy array}`` mapping (keys are the "/"-joined tree paths),
+    with dtypes preserved exactly.
+
+    Unlike :func:`restore` this needs no ``like`` tree, so it fits
+    payloads whose array shapes are unknowable a priori — e.g. a
+    ``core.lifecycle.TaskState`` whose pending-schedule matrices vary
+    per period (``lifecycle.load_state``).
+    """
+    payload = _read_payload(path)
+    return {k: _record_to_numpy(rec)
+            for k, rec in zip(payload["keys"], payload["leaves"])}
+
+
+def restore(path: str, like):
+    """Restore into the structure of ``like`` (keys must match)."""
+    payload = _read_payload(path)
     keys, like_leaves, treedef = _paths(like)
     stored = dict(zip(payload["keys"], payload["leaves"]))
     missing = [k for k in keys if k not in stored]

@@ -12,9 +12,16 @@ Data flow (post array-native refactor):
   columns; the dataclass APIs (``ClientProfile`` lists, ``dict``
   histograms) keep working through thin adapters
   (``ClientPoolState.from_profiles`` / ``from_histograms``).
+- ``lifecycle`` is the service orchestration layer: an explicit
+  ``TaskState`` machine (``submit`` / ``step`` / ``drain``) with
+  checkpoint/resume (``save_state``/``load_state``), client churn, and
+  a multi-tenant ``ServiceScheduler`` round-robining many tasks over
+  one shared pool. ``FLServiceProvider.run_task`` is a deprecated shim
+  over it.
 - The pre-refactor loop implementations survive as
-  ``select_greedy_legacy`` and ``generate_subsets_legacy`` — reference
-  paths for equivalence tests and benchmarks, not production.
+  ``select_greedy_legacy``, ``generate_subsets_legacy`` and
+  ``FLServiceProvider.run_task_legacy`` — reference paths for
+  equivalence tests and benchmarks, not production.
 
 Use the dataclass API for small pools and readability; hand a
 ``ClientPoolState`` to ``select_initial_pool`` / ``generate_subsets`` /
@@ -26,6 +33,10 @@ from .criteria import (CRITERIA, NUM_CRITERIA, ClientProfile, build_profiles,
                        random_histograms, random_profiles, resource_scores)
 from .fairness import (bounded_participation, coverage, fairness_report,
                        jain_index, over_selection_fraction)
+from .lifecycle import (RoundEvent, ServiceScheduler, ServiceState, TaskPhase,
+                        TaskState, Trainer, apply_pool_selection,
+                        as_run_result, drain, load_state, resolve_trainer,
+                        save_state, single_round_adapter, step, submit)
 from .mkp import MKPResult, solve_mkp, solve_mkp_bnb, solve_mkp_greedy
 from .pool import ClientPoolState
 from .reputation import ReputationRecord, ReputationTracker, model_quality_batch
@@ -53,4 +64,9 @@ __all__ = [
     "select_greedy_legacy", "select_initial_pool", "select_random",
     "threshold_filter", "FLServiceProvider", "RoundLog", "ServiceRunResult",
     "TaskRequest",
+    # lifecycle (resumable service API)
+    "RoundEvent", "ServiceScheduler", "ServiceState", "TaskPhase",
+    "TaskState", "Trainer", "apply_pool_selection", "as_run_result", "drain",
+    "load_state", "resolve_trainer", "save_state", "single_round_adapter",
+    "step", "submit",
 ]

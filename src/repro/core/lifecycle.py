@@ -1,0 +1,768 @@
+"""Resumable service lifecycle: the task state machine behind the FL
+service provider (paper §III Fig. 1, deployed form).
+
+The blocking ``FLServiceProvider.run_task`` loop owned the Python
+control flow for a task's whole lifetime: one task, one frozen client
+registry, convergence-or-bust. This module inverts that control. A task
+is an explicit, serializable :class:`TaskState` advanced by *pure-ish*
+transition functions::
+
+    INTAKE -> POOL_SELECTED -> SCHEDULED -> TRAINING -> ... -> TRAINING
+                 ^                                               |
+                 +--------------- PERIOD_CHECKPOINT <------------+
+                                        |
+                                DONE / INFEASIBLE
+
+- :func:`submit` runs stage 1 (pool selection) and returns the state;
+- :func:`step` advances exactly one transition, returning the new state
+  plus the :class:`RoundEvent` s it produced (a TRAINING step dispatches
+  one round chunk to the trainer; everything else is bookkeeping);
+- :func:`drain` is the convenience loop (step until DONE/INFEASIBLE) —
+  ``run_task`` is now a deprecated shim over ``submit`` + ``drain`` that
+  reproduces the pre-redesign results bit-for-bit.
+
+Because the state between steps is explicit, the API expresses the three
+things the blocking loop structurally could not:
+
+- **multi-tenant serving** — :class:`ServiceScheduler` holds N in-flight
+  TaskStates against one shared ``ClientPoolState``, batches stage-1
+  intake through ``select_pools_batch`` and round-robins ``step`` so
+  device dispatches from different tasks interleave;
+- **client churn** — clients joining the shared pool between periods
+  (``ClientPoolState.register``) are admitted into running tasks at
+  their next PERIOD_CHECKPOINT (budget permitting, same score/cost-ratio
+  greedy as stage 1) without re-running stage 1; deregistered clients
+  are dropped from task pools at the same point;
+- **checkpoint/resume** — :meth:`TaskState.to_arrays` /
+  :meth:`TaskState.from_arrays` round-trip the full control state
+  (cursors, pool, reputation arrays, PCG64 rng state, pending schedule)
+  through plain numpy arrays, serialized via the existing
+  ``repro.checkpoint`` msgpack path (:func:`save_state` /
+  :func:`load_state`), so a killed provider resumes mid-period with
+  identical remaining rounds.
+
+Trainers implement the explicit :class:`Trainer` protocol (one required
+method, ``run_rounds``) instead of being duck-typed via
+``hasattr("run_rounds")``; :func:`single_round_adapter` wraps legacy
+per-round callables.
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+from typing import (Any, Callable, Mapping, Protocol, Sequence,
+                    runtime_checkable)
+
+import numpy as np
+
+from .scheduling import ScheduleResult
+from .selection import SelectionResult
+from .reputation import ReputationTracker
+
+_STATE_FORMAT = 1       # to_arrays layout version
+
+
+# ---------------------------------------------------------------------------
+# Task intake types (previously in core.service; moved here so the
+# provider can shim run_task over the lifecycle without an import cycle)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class TaskRequest:
+    """An FL task as submitted by a task requester."""
+    budget: float
+    n_star: int = 1                       # minimum pool size (Eq. 8c)
+    thresholds: np.ndarray | None = None  # per-criterion minimums (Eq. 8d)
+    subset_size: int = 10                 # n
+    subset_delta: int = 3                 # δ
+    x_star: int = 3                       # max selections per period
+    max_periods: int = 20
+    max_rounds: int | None = None         # hard round budget; chunked
+    # dispatch never trains past it (unlike a stop_fn, which a chunk can
+    # only observe at its host checkpoint)
+    rep_threshold: float = 0.5
+    suspension_periods: int = 1
+    scheduler: str = "mkp"                # "mkp" (ours) | "random" (baseline)
+    nid_threshold: float = 0.35
+    seed: int = 0
+    round_chunk: int = 1                  # rounds per trainer dispatch (>1 =
+    # chunked driver; requires a chunk-capable Trainer)
+    admit_joiners: bool = True            # churn: admit clients registered
+    # after stage 1 at the next PERIOD_CHECKPOINT, budget permitting
+
+
+@dataclasses.dataclass
+class RoundEvent:
+    """One completed FL round, as emitted by a TRAINING step."""
+    period: int
+    round_index: int
+    subset: list[int]
+    weights: np.ndarray
+    nid: float
+    metrics: dict
+
+
+# Pre-redesign name for the same record (ServiceRunResult.rounds entries).
+RoundLog = RoundEvent
+
+
+@dataclasses.dataclass
+class ServiceRunResult:
+    pool: SelectionResult
+    rounds: list[RoundEvent]
+    schedules: list[ScheduleResult]
+    reputation: dict[int, float]
+
+    @property
+    def num_rounds(self) -> int:
+        return len(self.rounds)
+
+
+# ---------------------------------------------------------------------------
+# Trainer protocol
+# ---------------------------------------------------------------------------
+
+@runtime_checkable
+class Trainer(Protocol):
+    """Explicit trainer contract (replaces ``hasattr("run_rounds")``).
+
+    ``run_rounds(start_round, subsets, weights)`` runs
+    ``len(subsets)`` consecutive FL rounds and returns one
+    ``(returned_flags, q_values, metrics)`` tuple per round. A trainer
+    that can fuse consecutive rounds into one device dispatch (e.g.
+    ``fl.simulation.DeviceFLSim``) simply implements this over the whole
+    chunk; a sequential trainer loops internally. Set the class
+    attribute ``chunkable = False`` to force one-round chunks regardless
+    of ``TaskRequest.round_chunk`` (the default is chunk-capable).
+    """
+
+    def run_rounds(self, start_round: int,
+                   subsets: Sequence[Sequence[int]],
+                   weights: Sequence[np.ndarray]
+                   ) -> list[tuple[np.ndarray, np.ndarray, dict]]: ...
+
+
+class single_round_adapter:
+    """Wrap a legacy per-round callable ``fn(round, subset, weights)``
+    into the :class:`Trainer` protocol. ``chunkable = False`` keeps the
+    deprecated callback contract: exactly one round per dispatch."""
+
+    chunkable = False
+
+    def __init__(self, fn: Callable[[int, Sequence[int], np.ndarray], tuple]):
+        self.fn = fn
+
+    def run_rounds(self, start_round, subsets, weights):
+        return [self.fn(start_round + j, subsets[j], weights[j])
+                for j in range(len(subsets))]
+
+
+def resolve_trainer(trainer) -> Trainer:
+    """Coerce ``trainer`` into the protocol: real Trainers pass through,
+    bare callables get wrapped in :class:`single_round_adapter`."""
+    if isinstance(trainer, Trainer):
+        return trainer
+    if callable(trainer):
+        return single_round_adapter(trainer)
+    raise TypeError(f"trainer {trainer!r} is neither a Trainer "
+                    f"(run_rounds) nor a per-round callable")
+
+
+def _chunk_size(task: TaskRequest, trainer: Trainer) -> int:
+    return max(1, int(task.round_chunk)) \
+        if getattr(trainer, "chunkable", True) else 1
+
+
+# ---------------------------------------------------------------------------
+# Task state
+# ---------------------------------------------------------------------------
+
+class TaskPhase(enum.IntEnum):
+    INTAKE = 0             # submitted, stage 1 not yet run
+    POOL_SELECTED = 1      # pool known; next step schedules a period
+    SCHEDULED = 2          # period schedule pending, no round trained yet
+    TRAINING = 3           # mid-period: >=1 chunk dispatched
+    PERIOD_CHECKPOINT = 4  # period over; next step updates the pool
+    DONE = 5
+    INFEASIBLE = 6
+
+    @property
+    def terminal(self) -> bool:
+        return self in (TaskPhase.DONE, TaskPhase.INFEASIBLE)
+
+
+@dataclasses.dataclass
+class TaskState:
+    """Everything ``run_task`` kept in locals, made explicit.
+
+    Advanced exclusively by :func:`step`; serialized by
+    :meth:`to_arrays` / :meth:`from_arrays` (control state only — the
+    accumulated ``rounds``/``schedules`` histories are *event streams*,
+    already delivered to the caller, and are not checkpointed; a
+    restored task reproduces the remaining rounds exactly).
+    """
+
+    task: TaskRequest
+    phase: TaskPhase = TaskPhase.INTAKE
+    rng: np.random.Generator | None = None     # created at construction
+    pool_selected: SelectionResult | None = None
+    tracker: ReputationTracker | None = None
+    pool: set[int] = dataclasses.field(default_factory=set)
+    admitted: list[int] = dataclasses.field(default_factory=list)
+    admitted_cost: float = 0.0
+    schedule: ScheduleResult | None = None     # pending period schedule
+    subset_index: int = 0                      # cursor into schedule.subsets
+    period: int = 0
+    global_round: int = 0
+    stop: bool = False                         # stop_fn/max_rounds fired
+    pool_watermark: int = 0                    # pool_state.reg_counter at
+    # the last joiner scan (registration *events*, not row count, so
+    # tombstone-reactivating rejoins are seen too)
+    rounds: list[RoundEvent] = dataclasses.field(default_factory=list)
+    schedules: list[ScheduleResult] = dataclasses.field(default_factory=list)
+
+    def __post_init__(self):
+        if self.rng is None:
+            self.rng = np.random.default_rng(self.task.seed)
+
+    @property
+    def eligible(self) -> set[int]:
+        """Clients allowed back into the pool after suspension: the
+        stage-1 selection plus churn admissions."""
+        sel = self.pool_selected.selected if self.pool_selected else []
+        return set(sel) | set(self.admitted)
+
+    # -- serialization -------------------------------------------------------
+    def to_arrays(self) -> dict[str, np.ndarray]:
+        """Flat ``{key: numpy array}`` form of the control state, ready
+        for ``repro.checkpoint.save`` (msgpack; no pickle anywhere)."""
+        a: dict[str, np.ndarray] = {}
+        t = self.task
+        a["format"] = np.array([_STATE_FORMAT], dtype=np.int64)
+        a["meta"] = np.array(
+            [int(self.phase), self.period, self.subset_index,
+             self.global_round, int(self.stop), self.pool_watermark,
+             int(self.schedule is not None),
+             int(self.pool_selected is not None),
+             int(self.tracker is not None)], dtype=np.int64)
+        a["task/floats"] = np.array(
+            [t.budget, t.rep_threshold, t.nid_threshold], dtype=np.float64)
+        a["task/ints"] = np.array(
+            [t.n_star, t.subset_size, t.subset_delta, t.x_star,
+             t.max_periods,
+             0 if t.max_rounds is None else 1,
+             0 if t.max_rounds is None else int(t.max_rounds),
+             t.suspension_periods, t.seed, t.round_chunk,
+             int(t.admit_joiners)], dtype=np.int64)
+        a["task/scheduler"] = _encode_str(t.scheduler)
+        a["task/thresholds"] = (np.zeros(0) if t.thresholds is None
+                                else np.asarray(t.thresholds, np.float64))
+        a["task/has_thresholds"] = np.array(
+            [t.thresholds is not None], dtype=np.int64)
+        a["rng"] = _encode_rng(self.rng)
+        a["pool/ids"] = np.array(sorted(self.pool), dtype=np.int64)
+        a["admitted/ids"] = np.array(self.admitted, dtype=np.int64)
+        a["admitted/cost"] = np.array([self.admitted_cost], dtype=np.float64)
+        if self.pool_selected is not None:
+            s = self.pool_selected
+            a["sel/ids"] = np.array(s.selected, dtype=np.int64)
+            a["sel/totals"] = np.array(
+                [s.total_score, s.total_cost, float(s.feasible)],
+                dtype=np.float64)
+            a["sel/note"] = _encode_str(s.note)
+        if self.tracker is not None:
+            for k, v in self.tracker.to_arrays().items():
+                a[f"rep/{k}"] = v
+        if self.schedule is not None:
+            for k, v in _encode_schedule(self.schedule).items():
+                a[f"sched/{k}"] = v
+        return a
+
+    @classmethod
+    def from_arrays(cls, arrays: Mapping[str, Any]) -> "TaskState":
+        a = {k: np.asarray(v) for k, v in arrays.items()}
+        fmt = int(a["format"][0])
+        if fmt != _STATE_FORMAT:
+            raise ValueError(f"unsupported TaskState format {fmt}")
+        meta = a["meta"].astype(np.int64)
+        tf = a["task/floats"].astype(np.float64)
+        ti = a["task/ints"].astype(np.int64)
+        task = TaskRequest(
+            budget=float(tf[0]), n_star=int(ti[0]), subset_size=int(ti[1]),
+            subset_delta=int(ti[2]), x_star=int(ti[3]),
+            max_periods=int(ti[4]),
+            max_rounds=int(ti[6]) if ti[5] else None,
+            rep_threshold=float(tf[1]), suspension_periods=int(ti[7]),
+            scheduler=_decode_str(a["task/scheduler"]),
+            nid_threshold=float(tf[2]), seed=int(ti[8]),
+            round_chunk=int(ti[9]), admit_joiners=bool(ti[10]),
+            thresholds=(a["task/thresholds"].astype(np.float64)
+                        if int(a["task/has_thresholds"][0]) else None))
+        state = cls(task=task, phase=TaskPhase(int(meta[0])),
+                    rng=_decode_rng(a["rng"]))
+        state.period = int(meta[1])
+        state.subset_index = int(meta[2])
+        state.global_round = int(meta[3])
+        state.stop = bool(meta[4])
+        state.pool_watermark = int(meta[5])
+        state.pool = {int(c) for c in a["pool/ids"]}
+        state.admitted = [int(c) for c in a["admitted/ids"]]
+        state.admitted_cost = float(a["admitted/cost"][0])
+        if int(meta[7]):
+            tot = a["sel/totals"].astype(np.float64)
+            state.pool_selected = SelectionResult(
+                [int(c) for c in a["sel/ids"]], float(tot[0]), float(tot[1]),
+                feasible=bool(tot[2]), note=_decode_str(a["sel/note"]))
+        if int(meta[8]):
+            state.tracker = ReputationTracker.from_arrays(
+                {k[len("rep/"):]: v for k, v in a.items()
+                 if k.startswith("rep/")})
+        if int(meta[6]):
+            state.schedule = _decode_schedule(
+                {k[len("sched/"):]: v for k, v in a.items()
+                 if k.startswith("sched/")})
+            # the pending schedule was appended to the history when it
+            # was generated; keep the resumed result self-consistent
+            state.schedules.append(state.schedule)
+        return state
+
+
+# Issue/title name for the explicit service-side state.
+ServiceState = TaskState
+
+
+# -- serialization helpers ---------------------------------------------------
+
+def _encode_str(s: str) -> np.ndarray:
+    return np.frombuffer(s.encode("utf-8"), dtype=np.uint8).copy()
+
+
+def _decode_str(a: np.ndarray) -> str:
+    return bytes(np.asarray(a, dtype=np.uint8).tolist()).decode("utf-8")
+
+
+def _encode_rng(rng: np.random.Generator) -> np.ndarray:
+    st = rng.bit_generator.state
+    if st.get("bit_generator") != "PCG64":
+        raise ValueError("TaskState serialization requires the default "
+                         "PCG64 bit generator (np.random.default_rng)")
+    M = (1 << 64) - 1
+    s, inc = st["state"]["state"], st["state"]["inc"]
+    return np.array([s & M, (s >> 64) & M, inc & M, (inc >> 64) & M,
+                     st["has_uint32"], st["uinteger"]], dtype=np.uint64)
+
+
+def _decode_rng(a: np.ndarray) -> np.random.Generator:
+    a = np.asarray(a, dtype=np.uint64)
+    rng = np.random.default_rng(0)
+    st = rng.bit_generator.state
+    st["state"]["state"] = int(a[0]) | (int(a[1]) << 64)
+    st["state"]["inc"] = int(a[2]) | (int(a[3]) << 64)
+    st["has_uint32"] = int(a[4])
+    st["uinteger"] = int(a[5])
+    rng.bit_generator.state = st
+    return rng
+
+
+def _encode_schedule(s: ScheduleResult) -> dict[str, np.ndarray]:
+    P = len(s.subsets)
+    L = max((len(x) for x in s.subsets), default=0)
+    subs = np.full((P, L), -1, dtype=np.int64)
+    lens = np.zeros(P, dtype=np.int64)
+    for i, x in enumerate(s.subsets):
+        subs[i, : len(x)] = x
+        lens[i] = len(x)
+    cids = np.array(list(s.counts.keys()), dtype=np.int64)
+    cvals = np.array([s.counts[int(c)] for c in cids], dtype=np.int64)
+    return {"subsets": subs, "lens": lens,
+            "nids": np.asarray(s.nids, dtype=np.float64),
+            "count_ids": cids, "count_vals": cvals,
+            "capacities": np.asarray(s.capacities, dtype=np.float64)}
+
+
+def _decode_schedule(a: Mapping[str, np.ndarray]) -> ScheduleResult:
+    subs = np.asarray(a["subsets"], dtype=np.int64)
+    lens = np.asarray(a["lens"], dtype=np.int64)
+    if subs.size == 0:
+        subs = subs.reshape(lens.size, 0)
+    subsets = [[int(v) for v in subs[i, : lens[i]]]
+               for i in range(lens.size)]
+    counts = {int(c): int(v) for c, v in
+              zip(np.asarray(a["count_ids"]), np.asarray(a["count_vals"]))}
+    return ScheduleResult(subsets,
+                          [float(x) for x in np.asarray(a["nids"])],
+                          counts,
+                          np.asarray(a["capacities"], dtype=np.float64))
+
+
+def save_state(path: str, state: TaskState) -> None:
+    """Serialize ``state`` through the repo checkpoint path (msgpack,
+    zstd when available)."""
+    from repro import checkpoint
+    checkpoint.save(path, state.to_arrays())
+
+
+def load_state(path: str) -> TaskState:
+    """Inverse of :func:`save_state` (structure-free restore)."""
+    from repro import checkpoint
+    return TaskState.from_arrays(checkpoint.restore_dict(path))
+
+
+# ---------------------------------------------------------------------------
+# Transition functions
+# ---------------------------------------------------------------------------
+
+def submit(provider, task: TaskRequest, method: str = "greedy") -> TaskState:
+    """Task intake + stage 1: returns a POOL_SELECTED (or INFEASIBLE)
+    state. ``provider`` is an ``FLServiceProvider``; ``method`` picks the
+    stage-1 knapsack ("greedy" | "dp" | "random")."""
+    state = TaskState(task=task)
+    sel = provider.select_pool(task, method=method, rng=state.rng)
+    return apply_pool_selection(provider, state, sel)
+
+
+def apply_pool_selection(provider, state: TaskState,
+                         sel: SelectionResult) -> TaskState:
+    """Attach a stage-1 result to an INTAKE state (used by
+    :func:`submit` and by the batched ``ServiceScheduler`` intake)."""
+    if state.phase != TaskPhase.INTAKE:
+        raise ValueError(f"stage 1 already applied (phase={state.phase.name})")
+    state.pool_selected = sel
+    if not sel.feasible:
+        state.phase = TaskPhase.INFEASIBLE
+        return state
+    state.pool = set(sel.selected)
+    state.tracker = ReputationTracker(
+        sel.selected, suspension_periods=state.task.suspension_periods,
+        rep_threshold=state.task.rep_threshold)
+    state.pool_watermark = provider.pool_state.reg_counter
+    state.phase = TaskPhase.POOL_SELECTED
+    return state
+
+
+def step(provider, state: TaskState, trainer,
+         availability_fn: Callable[[int, int], bool] | None = None,
+         stop_fn: Callable[[dict], bool] | None = None,
+         ) -> tuple[TaskState, list[RoundEvent]]:
+    """Advance the task by exactly one transition.
+
+    POOL_SELECTED steps generate the next period's schedule (or finish
+    the task when a loop guard fires); SCHEDULED/TRAINING steps dispatch
+    one round chunk to ``trainer`` and emit the resulting
+    :class:`RoundEvent` s; PERIOD_CHECKPOINT steps run the reputation
+    pool update, churn admission, and either loop or finish. Terminal
+    states are no-ops.
+
+    ``trainer`` may be a :class:`Trainer` or a legacy per-round callable
+    (wrapped via :func:`single_round_adapter`); ``availability_fn`` /
+    ``stop_fn`` keep their ``run_task`` semantics. The state is mutated
+    in place and also returned.
+    """
+    if state.phase.terminal:
+        return state, []
+    if state.phase == TaskPhase.INTAKE:
+        raise ValueError("cannot step an INTAKE state: run submit() or a "
+                         "ServiceScheduler intake first")
+    if state.phase == TaskPhase.POOL_SELECTED:
+        return _schedule_next_period(provider, state), []
+    if state.phase in (TaskPhase.SCHEDULED, TaskPhase.TRAINING):
+        return _train_chunk(provider, state, resolve_trainer(trainer),
+                            stop_fn)
+    # PERIOD_CHECKPOINT
+    return _period_checkpoint(provider, state, availability_fn), []
+
+
+def drain(provider, state: TaskState, trainer,
+          availability_fn: Callable[[int, int], bool] | None = None,
+          stop_fn: Callable[[dict], bool] | None = None,
+          max_steps: int | None = None,
+          ) -> tuple[TaskState, list[RoundEvent]]:
+    """Step until the task reaches DONE/INFEASIBLE (the convenience
+    loop ``run_task`` shims over). Returns the final state and every
+    event produced along the way."""
+    events: list[RoundEvent] = []
+    steps = 0
+    while not state.phase.terminal:
+        state, ev = step(provider, state, trainer,
+                         availability_fn=availability_fn, stop_fn=stop_fn)
+        events.extend(ev)
+        steps += 1
+        if max_steps is not None and steps >= max_steps:
+            break
+    return state, events
+
+
+def as_run_result(state: TaskState) -> ServiceRunResult:
+    """The accumulated ``ServiceRunResult`` view of a task state."""
+    rep = state.tracker.scores() if state.tracker is not None else {}
+    pool_sel = state.pool_selected if state.pool_selected is not None \
+        else SelectionResult([], 0.0, 0.0, feasible=False, note="no stage 1")
+    return ServiceRunResult(pool_sel, state.rounds, state.schedules, rep)
+
+
+# -- internal transitions ----------------------------------------------------
+
+def _drop_deregistered(provider, state: TaskState) -> None:
+    """Remove members that churned out of the shared pool from the
+    task's pool (used at both churn windows: before a schedule draw and
+    at the period checkpoint)."""
+    if not state.pool:
+        return
+    ids = np.array(sorted(state.pool), dtype=np.int64)
+    state.pool -= {int(c)
+                   for c in ids[~provider.pool_state.is_registered(ids)]}
+
+
+def _schedule_next_period(provider, state: TaskState) -> TaskState:
+    task = state.task
+    # churn can strike between the last checkpoint and this step
+    # (including right after submit): drop deregistered members before
+    # drawing the schedule
+    _drop_deregistered(provider, state)
+    if (not state.pool or state.period >= task.max_periods
+            or (task.max_rounds is not None
+                and state.global_round >= task.max_rounds)):
+        state.phase = TaskPhase.DONE
+        return state
+    state.schedule = provider.schedule_period(sorted(state.pool), task,
+                                              state.rng)
+    state.schedules.append(state.schedule)
+    state.subset_index = 0
+    state.stop = False
+    state.phase = TaskPhase.SCHEDULED
+    return state
+
+
+def _train_chunk(provider, state: TaskState, trainer: Trainer,
+                 stop_fn) -> tuple[TaskState, list[RoundEvent]]:
+    task, sched = state.task, state.schedule
+    t = state.subset_index
+    if sched is None or t >= len(sched.subsets) or state.stop:
+        state.phase = TaskPhase.PERIOD_CHECKPOINT   # defensive guard
+        return state, []
+    limit = _chunk_size(task, trainer)
+    if task.max_rounds is not None:
+        remaining = task.max_rounds - state.global_round
+        if remaining <= 0:
+            state.stop = True
+            state.phase = TaskPhase.PERIOD_CHECKPOINT
+            return state, []
+        limit = min(limit, remaining)
+    chunk = sched.subsets[t: t + limit]
+    data_sizes = provider.pool_state.data_sizes()
+    ws = []
+    for subset in chunk:
+        # include_deregistered: a client churned out mid-period keeps
+        # training this period's schedule against its (still resident)
+        # tombstoned row; the next PERIOD_CHECKPOINT drops it.
+        rows = provider.pool_state.positions(subset,
+                                             include_deregistered=True)
+        sizes = data_sizes[rows]
+        ws.append(sizes / np.maximum(sizes.sum(), 1e-12))
+    results = trainer.run_rounds(state.global_round, chunk, ws)
+    events: list[RoundEvent] = []
+    for j, (returned, q_vals, metrics) in enumerate(results):
+        subset = chunk[j]
+        for i, cid in enumerate(subset):
+            state.tracker.record_round(cid, bool(returned[i]),
+                                       q_value=float(q_vals[i]))
+        ev = RoundEvent(state.period, state.global_round, list(subset),
+                        ws[j], sched.nids[t + j], metrics)
+        state.rounds.append(ev)
+        events.append(ev)
+        state.global_round += 1
+        if stop_fn is not None and stop_fn(metrics):
+            state.stop = True
+            break
+    state.subset_index = t + len(chunk)
+    state.phase = TaskPhase.TRAINING
+    if state.stop or state.subset_index >= len(sched.subsets):
+        state.phase = TaskPhase.PERIOD_CHECKPOINT
+    return state, events
+
+
+def _period_checkpoint(provider, state: TaskState,
+                       availability_fn) -> TaskState:
+    avail = {cid: (availability_fn(cid, state.period + 1)
+                   if availability_fn else True)
+             for cid in state.tracker.records}
+    state.pool = state.tracker.update_pool(state.pool, avail) \
+        & state.eligible
+    state.schedule = None
+    state.period += 1
+    if state.stop:
+        state.phase = TaskPhase.DONE
+        return state
+    _apply_churn(provider, state)
+    state.phase = TaskPhase.POOL_SELECTED
+    return state
+
+
+def _apply_churn(provider, state: TaskState) -> None:
+    """Between periods, sync the task with pool churn: drop deregistered
+    clients, then admit qualifying joiners while the stage-1 budget
+    lasts (score/cost-ratio greedy over the newly-registered rows — an
+    incremental stage 1, not a re-run). Rows are found by their
+    registration-event stamp (``reg_seq``), so a rejoin that reactivated
+    a tombstoned row below the old row-count is seen too."""
+    ps = provider.pool_state
+    _drop_deregistered(provider, state)
+    task = state.task
+    if not task.admit_joiners:
+        state.pool_watermark = ps.reg_counter
+        return
+    if ps.reg_counter <= state.pool_watermark:
+        return
+    rows = np.flatnonzero(ps.reg_seq > state.pool_watermark)
+    state.pool_watermark = ps.reg_counter
+    ok = ps.threshold_mask(task.thresholds)[rows]
+    rows = rows[ok]
+    if rows.size == 0:
+        return
+    budget_left = (task.budget - state.pool_selected.total_cost
+                   - state.admitted_cost)
+    eligible = state.eligible
+    ratio = ps.overall[rows] / np.maximum(ps.costs[rows], 1e-12)
+    admitted: list[int] = []
+    for r in rows[np.argsort(-ratio, kind="stable")]:
+        cid = int(ps.client_ids[r])
+        if cid in eligible:
+            # a rejoining stage-1/previously-admitted client: its seat
+            # is already paid for and tracked, and this checkpoint's
+            # update_pool ∩ eligible already decided its membership
+            # (respecting availability/suspension) — no second charge
+            continue
+        c = float(ps.costs[r])
+        if c > budget_left:
+            continue        # keep scanning for cheaper joiners
+        admitted.append(cid)
+        state.admitted_cost += c
+        budget_left -= c
+    if admitted:
+        state.admitted.extend(admitted)
+        state.pool.update(admitted)
+        state.tracker.add_clients(admitted)   # one batched row append
+
+
+# ---------------------------------------------------------------------------
+# Multi-tenant scheduler
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class _Tenant:
+    state: TaskState
+    trainer: Trainer
+    availability_fn: Callable[[int, int], bool] | None = None
+    stop_fn: Callable[[dict], bool] | None = None
+
+
+class ServiceScheduler:
+    """N in-flight tasks against one shared client pool.
+
+    ``submit`` queues a task in INTAKE; each ``sweep`` first serves every
+    queued intake through the provider's *batched* stage 1
+    (``select_pools_batch`` — one vectorized knapsack sweep for all new
+    tasks), then round-robins :func:`step` across the active tasks, so
+    trainer dispatches from different tasks interleave. Per-task results
+    are identical to serial execution: each task owns its rng,
+    reputation arrays and cursors, and the shared pool is only read by
+    selection/scheduling.
+
+    A continuously serving provider should :meth:`retire` finished
+    tasks; completed tenants are otherwise retained (with their full
+    round histories) so ``results()`` stays available.
+    """
+
+    def __init__(self, provider):
+        self.provider = provider
+        self._tenants: dict[int, _Tenant] = {}
+        self._next_id = 0
+
+    # -- intake --------------------------------------------------------------
+    def submit(self, task: TaskRequest, trainer,
+               availability_fn: Callable[[int, int], bool] | None = None,
+               stop_fn: Callable[[dict], bool] | None = None) -> int:
+        """Queue a task (INTAKE). Stage 1 runs batched at the next sweep.
+        Returns the task id."""
+        tid = self._next_id
+        self._next_id += 1
+        self._tenants[tid] = _Tenant(TaskState(task=task),
+                                     resolve_trainer(trainer),
+                                     availability_fn, stop_fn)
+        return tid
+
+    def adopt(self, state: TaskState, trainer,
+              availability_fn: Callable[[int, int], bool] | None = None,
+              stop_fn: Callable[[dict], bool] | None = None) -> int:
+        """Take over an existing state (e.g. restored via
+        :func:`load_state`) and drive it alongside the other tenants."""
+        tid = self._next_id
+        self._next_id += 1
+        self._tenants[tid] = _Tenant(state, resolve_trainer(trainer),
+                                     availability_fn, stop_fn)
+        return tid
+
+    def _intake(self) -> None:
+        pending = [(tid, t) for tid, t in self._tenants.items()
+                   if t.state.phase == TaskPhase.INTAKE]
+        if not pending:
+            return
+        sels = self.provider.select_pools_batch(
+            [t.state.task for _, t in pending])
+        for (tid, t), sel in zip(pending, sels):
+            apply_pool_selection(self.provider, t.state, sel)
+
+    # -- stepping ------------------------------------------------------------
+    @property
+    def active(self) -> list[int]:
+        return [tid for tid, t in self._tenants.items()
+                if not t.state.phase.terminal]
+
+    @property
+    def task_ids(self) -> list[int]:
+        return list(self._tenants)
+
+    def state(self, tid: int) -> TaskState:
+        return self._tenants[tid].state
+
+    def sweep(self) -> dict[int, list[RoundEvent]]:
+        """One scheduler tick: batched intake, then one :func:`step` per
+        active task (round-robin). Returns the events per task id."""
+        self._intake()
+        out: dict[int, list[RoundEvent]] = {}
+        for tid, t in self._tenants.items():
+            if t.state.phase.terminal:
+                continue
+            t.state, ev = step(self.provider, t.state, t.trainer,
+                               availability_fn=t.availability_fn,
+                               stop_fn=t.stop_fn)
+            if ev:
+                out[tid] = ev
+        return out
+
+    def run(self, max_sweeps: int = 1_000_000
+            ) -> dict[int, ServiceRunResult]:
+        """Drive every task to completion; returns per-task results."""
+        sweeps = 0
+        while self.active:
+            self.sweep()
+            sweeps += 1
+            if sweeps >= max_sweeps:
+                raise RuntimeError(f"tasks {self.active} still active "
+                                   f"after {max_sweeps} sweeps")
+        return self.results()
+
+    def results(self) -> dict[int, ServiceRunResult]:
+        return {tid: as_run_result(t.state)
+                for tid, t in self._tenants.items()}
+
+    def retire(self, tid: int) -> ServiceRunResult:
+        """Evict a finished task and return its result. A continuously
+        serving provider must retire completed tenants, or the scheduler
+        retains every task's full round history forever."""
+        t = self._tenants[tid]
+        if not t.state.phase.terminal:
+            raise ValueError(f"task {tid} still {t.state.phase.name}; "
+                             f"only terminal tasks can be retired")
+        del self._tenants[tid]
+        return as_run_result(t.state)

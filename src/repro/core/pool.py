@@ -8,6 +8,15 @@ population: criterion scores ``(n, NUM_CRITERIA)``, label histograms
 representation across selection, scheduling and the service loop, so the
 hot paths are masked array ops instead of per-client Python loops.
 
+The pool is *churnable* (paper §III: a shared, changing client
+population serving many tasks): :meth:`register` appends clients into
+capacity-doubled buffers (amortized O(1), the public arrays are views),
+and :meth:`deregister` tombstones rows in place — positions stay stable
+for in-flight ``TaskState`` cursors, while the ``registered`` mask
+excludes departed clients from selection, ``positions`` lookups, and the
+profile views. Every mutation bumps :attr:`version`, which consumers
+(``FLServiceProvider.registry``, cached id maps) use for invalidation.
+
 The dataclass API stays: ``from_profiles`` / ``to_profiles`` are the
 thin adapters, so anything built on ``ClientProfile`` keeps working.
 """
@@ -38,6 +47,10 @@ class ClientPoolState:
     active: np.ndarray = None     # (n,) bool — available for selection
     participation: np.ndarray = None  # (n,) int64 — selections this period
     reputation: np.ndarray = None     # (n,) float64 — running s_rep
+    registered: np.ndarray = None     # (n,) bool — False = churned out
+    reg_seq: np.ndarray = None        # (n,) int64 — registration event
+    # stamp (see reg_counter): lets in-flight tasks spot rows registered
+    # (or reactivated by a rejoin) after their own watermark
 
     _overall: np.ndarray | None = dataclasses.field(
         default=None, repr=False, compare=False)
@@ -71,11 +84,40 @@ class ClientPoolState:
             self.reputation = np.zeros(n, dtype=np.float64)
         else:
             self.reputation = np.asarray(self.reputation, dtype=np.float64)
+        if self.registered is None:
+            self.registered = np.ones(n, dtype=bool)
+        else:
+            self.registered = np.asarray(self.registered, dtype=bool)
+        if self.reg_seq is None:
+            self.reg_seq = np.zeros(n, dtype=np.int64)
+        else:
+            self.reg_seq = np.asarray(self.reg_seq, dtype=np.int64)
+        self.reg_counter = int(self.reg_seq.max()) if n else 0
+        self._version = 0
+        self._capacity = n            # buffer rows behind the public views
+        self._bufs = None             # lazily adopted on first register()
+        self._pos_all = None          # id -> row incl. tombstones
+        self._sizes = None            # cached data_sizes()
+        self._known = None            # id universe (incl. tombstones)
+
+    _FIELDS = ("client_ids", "scores", "histograms", "costs", "active",
+               "participation", "reputation", "registered", "reg_seq")
 
     # -- shape ---------------------------------------------------------------
     @property
     def n(self) -> int:
         return int(self.client_ids.shape[0])
+
+    @property
+    def n_registered(self) -> int:
+        return int(self.registered.sum())
+
+    @property
+    def version(self) -> int:
+        """Monotone mutation counter: bumped by :meth:`register` /
+        :meth:`deregister`. Consumers caching derived views (e.g. the
+        provider's profile registry) compare against it to invalidate."""
+        return self._version
 
     @property
     def num_classes(self) -> int:
@@ -93,7 +135,11 @@ class ClientPoolState:
         return self._overall
 
     def data_sizes(self) -> np.ndarray:
-        return self.histograms.sum(axis=1)
+        """(n,) per-client data sizes, cached until the pool mutates
+        (the round loop reads this every chunk dispatch)."""
+        if self._sizes is None:
+            self._sizes = self.histograms.sum(axis=1)
+        return self._sizes
 
     def nids(self) -> np.ndarray:
         return nid(self.histograms)
@@ -104,29 +150,208 @@ class ClientPoolState:
         Pure criteria filter — like the legacy ``threshold_filter`` it
         does NOT consult ``active``; availability is a scheduling-period
         concern (paper §V-B step 4). Intersect with ``self.active``
-        explicitly where that semantics is wanted.
+        explicitly where that semantics is wanted. Clients deregistered
+        by churn (``registered == False``) no longer exist to the
+        service, so they ARE excluded here.
         """
         if thresholds is None:
-            return np.ones(self.n, dtype=bool)
+            return self.registered.copy()
         th = np.asarray(thresholds, dtype=np.float64)[: len(THRESHOLDED)]
-        return np.all(self.scores[:, list(THRESHOLDED)] >= th, axis=1)
+        return np.all(self.scores[:, list(THRESHOLDED)] >= th, axis=1) \
+            & self.registered
 
     def budget_floor(self, n_star: int,
                      mask: np.ndarray | None = None) -> float:
         """Eq. (11): sum of the top-``n_star`` costs among ``mask``."""
-        c = self.costs if mask is None else self.costs[mask]
+        c = self.costs[self.registered] if mask is None else self.costs[mask]
         if c.size == 0 or n_star <= 0:
             return 0.0
         k = min(int(n_star), c.size)
         return float(np.sort(c)[-k:].sum())
 
     # -- id <-> position -----------------------------------------------------
-    def positions(self, ids: Sequence[int] | np.ndarray) -> np.ndarray:
-        """Row positions of external ``ids`` (vectorized lookup)."""
+    def _pos_map(self) -> dict:
         if self._pos is None:
-            self._pos = {int(c): i for i, c in enumerate(self.client_ids)}
-        return np.fromiter((self._pos[int(c)] for c in ids), dtype=np.int64,
-                           count=len(ids))
+            self._pos = {int(c): i for i, c in enumerate(self.client_ids)
+                         if self.registered[i]}
+        return self._pos
+
+    def positions(self, ids: Sequence[int] | np.ndarray,
+                  include_deregistered: bool = False) -> np.ndarray:
+        """Row positions of external ``ids`` (vectorized lookup).
+
+        Raises ``KeyError`` for any id that is not currently registered
+        — either never seen, or removed by churn (``deregister``). The
+        pre-churn behavior of silently mapping a stale id would let a
+        churned-out client index garbage rows downstream.
+
+        ``include_deregistered=True`` also resolves tombstoned rows —
+        the mid-period case: a schedule drawn while a client was live
+        keeps training against its (still resident) row until the next
+        period checkpoint drops it.
+        """
+        pos = self._pos_map()
+        if include_deregistered and len(pos) < self.n:
+            if self._pos_all is None:
+                self._pos_all = {int(c): i
+                                 for i, c in enumerate(self.client_ids)}
+            pos = self._pos_all
+        try:
+            return np.fromiter((pos[int(c)] for c in ids),
+                               dtype=np.int64, count=len(ids))
+        except KeyError as e:
+            raise KeyError(
+                f"client id {e.args[0]} is not registered in the pool "
+                f"(unknown, or removed by deregister)") from None
+
+    def is_registered(self, ids: Sequence[int] | np.ndarray) -> np.ndarray:
+        """(len(ids),) bool: which external ids are currently registered
+        (amortized via the cached id->row map)."""
+        pos = self._pos_map()
+        return np.array([int(c) in pos for c in ids], dtype=bool)
+
+    # -- churn (register / deregister) ---------------------------------------
+    def _bump_version(self) -> None:
+        self._version += 1
+
+    def _ensure_capacity(self, extra: int) -> None:
+        """Grow the backing buffers (doubling) so ``extra`` more rows fit;
+        the public arrays stay views into them."""
+        if self._bufs is None:
+            self._bufs = {f: getattr(self, f) for f in self._FIELDS}
+            self._capacity = self.n
+        need = self.n + extra
+        if need <= self._capacity:
+            return
+        cap = max(need, 2 * self._capacity, 4)
+        n = self.n
+        for f in self._FIELDS:
+            a = getattr(self, f)
+            buf = np.zeros((cap,) + a.shape[1:], dtype=a.dtype)
+            buf[:n] = a
+            self._bufs[f] = buf
+        self._capacity = cap
+
+    def register(self, profiles: "ClientProfile | Sequence[ClientProfile]"
+                 ) -> np.ndarray:
+        """Append newly-joined clients (dataclass adapter over
+        :meth:`register_arrays`). Returns the new row positions."""
+        if isinstance(profiles, ClientProfile):
+            profiles = [profiles]
+        add = ClientPoolState.from_profiles(profiles)
+        return self.register_arrays(add.client_ids, add.scores,
+                                    add.histograms, add.costs, add.active)
+
+    def register_arrays(self, client_ids, scores, histograms, costs,
+                        active=None) -> np.ndarray:
+        """Masked append of ``k`` clients with amortized capacity doubling.
+
+        The public arrays become views of larger buffers, so steady-state
+        registration is O(k); cached views (``positions`` map, overall
+        scores, provider registries via :attr:`version`) are invalidated.
+        A previously deregistered id may rejoin: its tombstoned row is
+        reactivated in place with the new profile (positions stay
+        stable). Cached id->row maps are updated incrementally (rows
+        never move), so churn events stay O(k); the derived-score caches
+        and the ``version`` counter are refreshed. Returns the row
+        positions of the registered clients, in input order.
+        """
+        ids = np.asarray(client_ids, dtype=np.int64).reshape(-1)
+        k = ids.size
+        if k == 0:
+            return np.zeros(0, dtype=np.int64)
+        scores = np.asarray(scores, dtype=np.float64).reshape(k, -1)
+        if scores.shape[1] != NUM_CRITERIA:
+            raise ValueError(f"scores must be ({k}, {NUM_CRITERIA})")
+        H = np.asarray(histograms, dtype=np.float64)
+        if H.ndim != 2 or H.shape[0] != k:
+            raise ValueError("histograms must be (k, c)")
+        if self.n == 0 and H.shape[1] != self.num_classes:
+            self.histograms = np.zeros((0, H.shape[1]))  # adopt c on empty
+            if self._bufs is not None:
+                self._bufs["histograms"] = self.histograms
+        if H.shape[1] != self.num_classes:
+            raise ValueError(f"histograms must have {self.num_classes} "
+                             f"classes, got {H.shape[1]}")
+        costs = np.asarray(costs, dtype=np.float64).reshape(k)
+        act = np.ones(k, dtype=bool) if active is None \
+            else np.asarray(active, dtype=bool).reshape(k)
+        if self._known is None:      # built once; updated incrementally
+            self._known = set(int(c) for c in self.client_ids)
+        live = self._pos_map()
+        dup = sorted({int(c) for c in ids if int(c) in live})
+        if dup or len(set(ids.tolist())) != k:
+            vals = ids.tolist()
+            batch_dup = {v for v in vals if vals.count(v) > 1}
+            raise ValueError(f"client ids already registered or duplicated "
+                             f"in batch: {sorted(set(dup) | batch_dup)[:5]}")
+        # split rejoining tombstones (row reactivated in place, position
+        # stable) from genuinely new ids (appended)
+        self.reg_counter += 1
+        rejoin = np.array([int(c) in self._known for c in ids])
+        out = np.empty(k, dtype=np.int64)
+        if rejoin.any():
+            if self._pos_all is None:
+                self._pos_all = {int(c): i
+                                 for i, c in enumerate(self.client_ids)}
+            rows = np.array([self._pos_all[int(c)] for c in ids[rejoin]],
+                            dtype=np.int64)
+            self.scores[rows] = scores[rejoin]
+            self.histograms[rows] = H[rejoin]
+            self.costs[rows] = costs[rejoin]
+            self.active[rows] = act[rejoin]
+            self.participation[rows] = 0
+            self.reputation[rows] = 0.0
+            self.registered[rows] = True
+            self.reg_seq[rows] = self.reg_counter
+            out[rejoin] = rows
+        fresh = ~rejoin
+        kf = int(fresh.sum())
+        if kf:
+            self._known.update(int(c) for c in ids[fresh])
+            self._ensure_capacity(kf)
+            n0, n1 = self.n, self.n + kf
+            b = self._bufs
+            b["client_ids"][n0:n1] = ids[fresh]
+            b["scores"][n0:n1] = scores[fresh]
+            b["histograms"][n0:n1] = H[fresh]
+            b["costs"][n0:n1] = costs[fresh]
+            b["active"][n0:n1] = act[fresh]
+            b["participation"][n0:n1] = 0
+            b["reputation"][n0:n1] = 0.0
+            b["registered"][n0:n1] = True
+            b["reg_seq"][n0:n1] = self.reg_counter
+            for f in self._FIELDS:
+                setattr(self, f, b[f][:n1])
+            out[fresh] = np.arange(n0, n1, dtype=np.int64)
+        # incremental cache maintenance: rows never move, so the id->row
+        # maps just gain the (re)registered entries; score/size caches
+        # are stale (new rows / overwritten profiles) and rebuild lazily
+        for c, r in zip(ids, out):
+            if self._pos is not None:
+                self._pos[int(c)] = int(r)
+            if self._pos_all is not None:
+                self._pos_all[int(c)] = int(r)
+        self._overall = None
+        self._sizes = None
+        self._bump_version()
+        return out
+
+    def deregister(self, ids: Sequence[int] | np.ndarray) -> None:
+        """Churn-out: tombstone clients in place. Rows keep their
+        positions and data, so a task mid-period keeps training its
+        already-drawn schedule (``positions(...,
+        include_deregistered=True)``) until the next period checkpoint
+        drops the client; the ids disappear from plain ``positions``,
+        ``threshold_mask`` and the profile views immediately. Raises
+        ``KeyError`` for ids not registered."""
+        rows = self.positions(ids)
+        self.registered[rows] = False
+        self.active[rows] = False
+        if self._pos is not None:       # incremental: rows never move
+            for c in ids:
+                self._pos.pop(int(c), None)
+        self._bump_version()
 
     def subset(self, index: np.ndarray) -> "ClientPoolState":
         """A new pool state restricted to ``index`` (bool mask or rows)."""
@@ -139,6 +364,8 @@ class ClientPoolState:
             active=self.active[idx],
             participation=self.participation[idx],
             reputation=self.reputation[idx],
+            registered=self.registered[idx],
+            reg_seq=self.reg_seq[idx],
         )
 
     # -- adapters (dataclass API compatibility) ------------------------------
@@ -157,6 +384,8 @@ class ClientPoolState:
         )
 
     def to_profiles(self) -> list[ClientProfile]:
+        """Dataclass view of the *registered* clients (churned-out rows
+        are tombstones, not clients — they are skipped)."""
         return [
             ClientProfile(
                 client_id=int(self.client_ids[i]),
@@ -165,7 +394,7 @@ class ClientPoolState:
                 cost=float(self.costs[i]),
                 available=bool(self.active[i]),
             )
-            for i in range(self.n)
+            for i in range(self.n) if self.registered[i]
         ]
 
     @classmethod

@@ -5,6 +5,16 @@ b_t ∈ {0,1} (Eq. 4) are recorded for each participating client; per-task
 values are the averages over participated rounds (Eqs. 3/5); the
 reputation score is s_rep = q_task + b_task.
 
+``ReputationTracker`` stores everything as struct-of-arrays keyed by
+pool position: per-round q/b histories live in ``(P, C)`` buffers
+(capacity-doubled on both axes) next to the per-client round cursor and
+suspension counter, so the whole tracker serializes to plain numpy
+arrays (``to_arrays``/``from_arrays`` — the ``core.lifecycle`` TaskState
+checkpoint path) with no dataclass pickling. The legacy per-client
+``records`` mapping survives as a live view: ``tracker.records[cid]``
+returns a :class:`ReputationRecord` proxy whose ``q_rounds``/``b_rounds``
+are array slices of the shared buffers.
+
 ``update_pool`` implements step 4 of the scheduling period:
   - remove clients unavailable in the next period;
   - remove clients with bad reputation in the current period (suspend);
@@ -12,19 +22,38 @@ reputation score is s_rep = q_task + b_task.
 """
 from __future__ import annotations
 
-import dataclasses
-from typing import Mapping
+from typing import Iterator, Mapping, Sequence
 
 import numpy as np
 
 from .criteria import cosine_similarity, per_task_average
 
 
-@dataclasses.dataclass
 class ReputationRecord:
-    q_rounds: list = dataclasses.field(default_factory=list)   # per-round q_t
-    b_rounds: list = dataclasses.field(default_factory=list)   # per-round b_t
-    suspended_until: int = -1    # period index until which the client is out
+    """Per-client view into a :class:`ReputationTracker`'s arrays.
+
+    Mirrors the pre-SoA dataclass API (``q_rounds``, ``b_rounds``,
+    ``q_task``, ``b_task``, ``s_rep``, ``suspended_until``) but owns no
+    storage: reads and writes go straight to the tracker's buffers.
+    """
+
+    __slots__ = ("_tracker", "_pos")
+
+    def __init__(self, tracker: "ReputationTracker", pos: int):
+        self._tracker = tracker
+        self._pos = int(pos)
+
+    @property
+    def num_rounds(self) -> int:
+        return int(self._tracker._n[self._pos])
+
+    @property
+    def q_rounds(self) -> np.ndarray:
+        return self._tracker._q[self._pos, : self.num_rounds]
+
+    @property
+    def b_rounds(self) -> np.ndarray:
+        return self._tracker._b[self._pos, : self.num_rounds]
 
     @property
     def q_task(self) -> float:
@@ -39,17 +68,109 @@ class ReputationRecord:
         """s_rep = q_task + b_task (paper §V-B)."""
         return self.q_task + self.b_task
 
+    @property
+    def suspended_until(self) -> int:
+        return int(self._tracker._susp[self._pos])
+
+    @suspended_until.setter
+    def suspended_until(self, period: int) -> None:
+        self._tracker._susp[self._pos] = int(period)
+
+    def __repr__(self) -> str:  # pragma: no cover - debugging aid
+        return (f"ReputationRecord(rounds={self.num_rounds}, "
+                f"s_rep={self.s_rep:.3f}, "
+                f"suspended_until={self.suspended_until})")
+
+
+class _RecordsView(Mapping):
+    """Dict-compatible live view: ``client_id -> ReputationRecord``."""
+
+    __slots__ = ("_tracker",)
+
+    def __init__(self, tracker: "ReputationTracker"):
+        self._tracker = tracker
+
+    def __getitem__(self, client_id: int) -> ReputationRecord:
+        return ReputationRecord(self._tracker,
+                                self._tracker._pos[int(client_id)])
+
+    def __iter__(self) -> Iterator[int]:
+        return iter(self._tracker._pos)
+
+    def __len__(self) -> int:
+        return len(self._tracker._pos)
+
+    def __contains__(self, client_id) -> bool:
+        return int(client_id) in self._tracker._pos
+
 
 class ReputationTracker:
-    """Tracks per-round scores within one FL task and maintains the pool."""
+    """Tracks per-round scores within one FL task and maintains the pool.
+
+    Struct-of-arrays over pool positions: row ``i`` belongs to
+    ``client_ids[i]`` (insertion order — stage-1 selection order, then
+    any churn admissions via :meth:`add_clients`).
+    """
+
+    _ROUNDS_CAP0 = 8     # initial per-client round capacity
 
     def __init__(self, client_ids, suspension_periods: int = 1,
                  rep_threshold: float = 0.5):
-        self.records: dict[int, ReputationRecord] = {
-            int(k): ReputationRecord() for k in client_ids}
+        ids = [int(k) for k in client_ids]
         self.suspension_periods = int(suspension_periods)
         self.rep_threshold = float(rep_threshold)
         self.period = 0
+        P = len(ids)
+        self._ids = np.array(ids, dtype=np.int64)
+        self._q = np.zeros((P, self._ROUNDS_CAP0), dtype=np.float64)
+        self._b = np.zeros((P, self._ROUNDS_CAP0), dtype=np.float64)
+        self._n = np.zeros(P, dtype=np.int64)          # per-client cursor
+        self._susp = np.full(P, -1, dtype=np.int64)    # suspended until
+        self._pos = {cid: i for i, cid in enumerate(ids)}
+        if len(self._pos) != P:
+            raise ValueError("duplicate client ids")
+
+    # -- shape / views -------------------------------------------------------
+    @property
+    def client_ids(self) -> np.ndarray:
+        return self._ids
+
+    @property
+    def records(self) -> _RecordsView:
+        """Legacy ``dict[int, record]`` compatibility view (live)."""
+        return _RecordsView(self)
+
+    def add_clients(self, client_ids) -> None:
+        """Register additional clients (churn admissions between periods).
+
+        New rows start with zero rounds and no suspension, exactly like
+        clients present from stage 1.
+        """
+        new = []
+        for k in client_ids:
+            k = int(k)
+            if k in self._pos:
+                raise ValueError(f"client {k} already tracked")
+            new.append(k)
+        if not new:
+            return
+        P, C = self._q.shape
+        self._ids = np.concatenate([self._ids,
+                                    np.array(new, dtype=np.int64)])
+        grow = np.zeros((len(new), C), dtype=np.float64)
+        self._q = np.concatenate([self._q, grow])
+        self._b = np.concatenate([self._b, grow.copy()])
+        self._n = np.concatenate([self._n, np.zeros(len(new), np.int64)])
+        self._susp = np.concatenate([self._susp,
+                                     np.full(len(new), -1, np.int64)])
+        for j, cid in enumerate(new):
+            self._pos[cid] = P + j
+
+    def _grow_rounds(self) -> None:
+        P, C = self._q.shape
+        pad = np.zeros((P, C), dtype=np.float64)
+        self._q = np.concatenate([self._q, pad], axis=1)
+        self._b = np.concatenate([self._b, pad.copy()], axis=1)
 
     # -- step 2: per-round updates -----------------------------------------
     def record_round(self, client_id: int, returned: bool,
@@ -62,16 +183,22 @@ class ReputationTracker:
         the raw vectors); on a dropped round (returned=False) q_t
         contributes 0 and b_t = 0 per Eq. (4).
         """
-        rec = self.records[int(client_id)]
-        rec.b_rounds.append(1.0 if returned else 0.0)
-        if not returned:
-            rec.q_rounds.append(0.0)
-            return
-        if q_value is None:
-            if local_update is None or global_update is None:
-                raise ValueError("need q_value or (local_update, global_update)")
-            q_value = cosine_similarity(local_update, global_update)
-        rec.q_rounds.append(float(q_value))
+        i = self._pos[int(client_id)]
+        if returned:
+            if q_value is None:
+                if local_update is None or global_update is None:
+                    raise ValueError(
+                        "need q_value or (local_update, global_update)")
+                q_value = cosine_similarity(local_update, global_update)
+            q, b = float(q_value), 1.0
+        else:
+            q, b = 0.0, 0.0
+        j = int(self._n[i])
+        if j >= self._q.shape[1]:
+            self._grow_rounds()
+        self._q[i, j] = q
+        self._b[i, j] = b
+        self._n[i] = j + 1
 
     # -- steps 3-4: period rollover -----------------------------------------
     def update_pool(self, pool: set[int],
@@ -85,7 +212,7 @@ class ReputationTracker:
                 continue  # still suspended
             if not availability.get(cid, True):
                 continue  # unavailable next period (comes back when available)
-            participated = cid in pool and len(rec.b_rounds) > 0
+            participated = cid in pool and rec.num_rounds > 0
             if participated and rec.s_rep < self.rep_threshold:
                 rec.suspended_until = self.period + self.suspension_periods - 1
                 continue  # bad reputation: suspend
@@ -94,6 +221,42 @@ class ReputationTracker:
 
     def scores(self) -> dict[int, float]:
         return {cid: rec.s_rep for cid, rec in self.records.items()}
+
+    # -- serialization (TaskState checkpoint path) ---------------------------
+    def to_arrays(self) -> dict[str, np.ndarray]:
+        """Flat numpy-array form (no dataclasses, no pickle)."""
+        C = int(self._n.max()) if self._n.size else 0
+        return {
+            "ids": self._ids.copy(),
+            "q": self._q[:, :C].copy(),
+            "b": self._b[:, :C].copy(),
+            "n": self._n.copy(),
+            "suspended": self._susp.copy(),
+            "meta": np.array([self.period, self.suspension_periods],
+                             dtype=np.int64),
+            "threshold": np.array([self.rep_threshold], dtype=np.float64),
+        }
+
+    @classmethod
+    def from_arrays(cls, arrays: Mapping[str, np.ndarray]) -> "ReputationTracker":
+        meta = np.asarray(arrays["meta"], dtype=np.int64)
+        tr = cls(np.asarray(arrays["ids"], dtype=np.int64),
+                 suspension_periods=int(meta[1]),
+                 rep_threshold=float(np.asarray(arrays["threshold"])[0]))
+        tr.period = int(meta[0])
+        P = tr._ids.size
+        q = np.asarray(arrays["q"], dtype=np.float64)
+        b = np.asarray(arrays["b"], dtype=np.float64)
+        q = q.reshape(P, -1) if q.size else q.reshape(P, 0)
+        b = b.reshape(P, -1) if b.size else b.reshape(P, 0)
+        C = max(q.shape[1], cls._ROUNDS_CAP0)
+        tr._q = np.zeros((P, C), dtype=np.float64)
+        tr._b = np.zeros((P, C), dtype=np.float64)
+        tr._q[:, : q.shape[1]] = q
+        tr._b[:, : b.shape[1]] = b
+        tr._n = np.asarray(arrays["n"], dtype=np.int64).copy()
+        tr._susp = np.asarray(arrays["suspended"], dtype=np.int64).copy()
+        return tr
 
 
 def model_quality_batch(local_updates: np.ndarray,

@@ -1,89 +1,45 @@
 """FL service provider orchestration (paper §III Fig. 1).
 
-Ties the two stages together the way the deployed service would run
-them: task intake -> stage-1 pool selection -> repeated scheduling
-periods (stage-2 subset generation + reputation-driven pool updates)
-until the training driver reports convergence or the round budget is
-exhausted.
+The provider owns the shared, churnable client registry
+(``ClientPoolState`` struct-of-arrays; the ``ClientProfile`` dict
+remains as a compatibility view) and the two-stage pipeline: stage-1
+pool selection (single-task ``select_pool`` or the batched multi-tenant
+``select_pools_batch``) and stage-2 per-period scheduling
+(``schedule_period``).
 
-Internally the provider keeps the registry as an array-native
-``ClientPoolState`` (struct-of-arrays), so stage-1 filtering/selection
-and the per-round bookkeeping are masked array ops; the
-``ClientProfile`` registry dict remains as a compatibility view.
-``select_pools_batch`` serves many concurrent tasks in one jit+vmap
-sweep over the shared pool (multi-tenant stage 1).
+Task orchestration itself lives in :mod:`repro.core.lifecycle`: a task
+is an explicit :class:`~repro.core.lifecycle.TaskState` advanced by
+``submit`` / ``step`` / ``drain`` (resumable, multi-tenant via
+``ServiceScheduler``). The blocking :meth:`FLServiceProvider.run_task`
+survives as a deprecated shim over ``submit`` + ``drain`` that
+reproduces the pre-redesign results bit-for-bit;
+:meth:`run_task_legacy` preserves the original loop as the equivalence
+reference (tests/test_lifecycle.py), not a production path.
 
-The actual model training is injected as a callback so the same
-orchestration drives the paper's CNN experiments, the LM federated runs
-and unit tests with stub trainers.
+Model training is injected as a :class:`~repro.core.lifecycle.Trainer`
+(``run_rounds``) — or a legacy per-round callback, wrapped via
+``single_round_adapter`` — so the same orchestration drives the paper's
+CNN experiments, the LM federated runs and unit tests with stub
+trainers.
 """
 from __future__ import annotations
 
-import dataclasses
-from typing import Callable, Mapping, Sequence
+import warnings
+from typing import Callable, Sequence
 
 import numpy as np
 
-from . import engine
+from . import engine, lifecycle
 from .criteria import ClientProfile
+from .lifecycle import RoundLog, ServiceRunResult, TaskRequest
 from .pool import ClientPoolState
 from .reputation import ReputationTracker
 from .scheduling import ScheduleResult, generate_subsets, random_subsets
 from .selection import SelectionResult, select_initial_pool
 
-
-@dataclasses.dataclass
-class TaskRequest:
-    """An FL task as submitted by a task requester."""
-    budget: float
-    n_star: int = 1                       # minimum pool size (Eq. 8c)
-    thresholds: np.ndarray | None = None  # per-criterion minimums (Eq. 8d)
-    subset_size: int = 10                 # n
-    subset_delta: int = 3                 # δ
-    x_star: int = 3                       # max selections per period
-    max_periods: int = 20
-    max_rounds: int | None = None         # hard round budget; chunked
-    # dispatch never trains past it (unlike a stop_fn, which a chunk can
-    # only observe at its host checkpoint)
-    rep_threshold: float = 0.5
-    suspension_periods: int = 1
-    scheduler: str = "mkp"                # "mkp" (ours) | "random" (baseline)
-    nid_threshold: float = 0.35
-    seed: int = 0
-    round_chunk: int = 1                  # rounds per device dispatch (>1 =
-    # chunked driver; requires a trainer exposing ``run_rounds``)
-
-
-@dataclasses.dataclass
-class RoundLog:
-    period: int
-    round_index: int
-    subset: list[int]
-    weights: np.ndarray
-    nid: float
-    metrics: dict
-
-
-@dataclasses.dataclass
-class ServiceRunResult:
-    pool: SelectionResult
-    rounds: list[RoundLog]
-    schedules: list[ScheduleResult]
-    reputation: dict[int, float]
-
-    @property
-    def num_rounds(self) -> int:
-        return len(self.rounds)
-
-
-# A trainer callback runs one FL round for the given subset and returns
-# (per-client returned flags, per-client q_t values, metrics dict).
-TrainerFn = Callable[[int, Sequence[int], np.ndarray], tuple[np.ndarray, np.ndarray, dict]]
-
-# Chunk-capable trainers additionally expose
-#   run_rounds(start_round, subsets, weights) -> list of per-round tuples
-# running several consecutive rounds in one device dispatch
-# (fl.simulation.DeviceFLSim); run_task uses it when task.round_chunk > 1.
+# Legacy alias: a per-round trainer callback
+# (round, subset, weights) -> (returned flags, q values, metrics).
+TrainerFn = Callable[[int, Sequence[int], np.ndarray], tuple]
 
 
 class FLServiceProvider:
@@ -91,20 +47,36 @@ class FLServiceProvider:
 
     def __init__(self, profiles: Sequence[ClientProfile] | ClientPoolState):
         if isinstance(profiles, ClientPoolState):
-            self.pool_state = profiles
+            self._pool_state = profiles
         else:
-            self.pool_state = ClientPoolState.from_profiles(profiles)
+            self._pool_state = ClientPoolState.from_profiles(profiles)
         self._registry: dict[int, ClientProfile] | None = None
+        self._registry_version: int | None = None
+
+    @property
+    def pool_state(self) -> ClientPoolState:
+        return self._pool_state
+
+    @pool_state.setter
+    def pool_state(self, pool: ClientPoolState) -> None:
+        """Replacing the pool drops every cached view derived from it."""
+        self._pool_state = pool
+        self._registry = None
+        self._registry_version = None
 
     @property
     def registry(self) -> dict[int, ClientProfile]:
         """Dataclass compatibility view of the pool (built lazily so a
         100k-client ``ClientPoolState`` provider never materializes
-        profiles unless asked). A read-only snapshot: mutate
-        ``pool_state``, not these profiles, to affect selection."""
-        if self._registry is None:
+        profiles unless asked). A read-only snapshot, rebuilt whenever
+        the pool is replaced or mutated (churn — the pool's ``version``
+        counter is the staleness signal): mutate ``pool_state``, not
+        these profiles, to affect selection."""
+        version = self._pool_state.version
+        if self._registry is None or self._registry_version != version:
             self._registry = {
-                p.client_id: p for p in self.pool_state.to_profiles()}
+                p.client_id: p for p in self._pool_state.to_profiles()}
+            self._registry_version = version
         return self._registry
 
     # -- Stage 1 -------------------------------------------------------------
@@ -121,7 +93,10 @@ class FLServiceProvider:
         Per-task threshold masks are computed vectorized over the shared
         pool, then a single jit+vmap greedy (engine.greedy_knapsack_batch)
         solves every task's knapsack at once — the multi-tenant serving
-        path. Per-task feasibility (n*, Eq. 11) is applied afterwards.
+        path (``ServiceScheduler`` intake). Per-task feasibility (n*,
+        Eq. 11) is applied afterwards. Selected ids come back in pool
+        order (same set, totals and feasibility as per-task
+        ``select_pool``, which returns greedy pick order).
         """
         if not tasks:
             return []
@@ -156,6 +131,8 @@ class FLServiceProvider:
     # -- Stage 2 (one period) --------------------------------------------------
     def schedule_period(self, pool_ids: Sequence[int], task: TaskRequest,
                         rng: np.random.Generator) -> ScheduleResult:
+        """Algorithm 1 over the task's current pool. Raises ``KeyError``
+        if any id is not registered (e.g. churned out mid-task)."""
         rows = self.pool_state.positions(sorted(pool_ids))
         if task.scheduler == "random":
             hists = {int(self.pool_state.client_ids[r]):
@@ -168,12 +145,39 @@ class FLServiceProvider:
                                 delta=task.subset_delta, x_star=task.x_star,
                                 nid_threshold=task.nid_threshold)
 
-    # -- Full service loop -----------------------------------------------------
-    def run_task(self, task: TaskRequest, trainer: TrainerFn,
+    # -- Full service loop (deprecated shim over the lifecycle) ----------------
+    def run_task(self, task: TaskRequest, trainer,
                  availability_fn: Callable[[int, int], bool] | None = None,
                  stop_fn: Callable[[dict], bool] | None = None,
                  method: str = "greedy") -> ServiceRunResult:
-        """Run stage 1 then scheduling periods until stop/max_periods.
+        """Deprecated: blocking convenience wrapper over the stepped
+        lifecycle (``lifecycle.submit`` + ``lifecycle.drain``).
+
+        Produces results bit-for-bit identical to the pre-redesign
+        blocking loop (kept as :meth:`run_task_legacy`; equivalence is
+        tested). New code should drive the lifecycle directly — it adds
+        checkpoint/resume (``TaskState.to_arrays``), multi-tenant
+        serving (``ServiceScheduler``) and churn, which this blocking
+        call structurally cannot express.
+        """
+        warnings.warn(
+            "FLServiceProvider.run_task is deprecated; use "
+            "repro.core.lifecycle (submit/step/drain, or ServiceScheduler "
+            "for multi-tenant serving) instead",
+            DeprecationWarning, stacklevel=2)
+        state = lifecycle.submit(self, task, method=method)
+        state, _ = lifecycle.drain(self, state, trainer,
+                                   availability_fn=availability_fn,
+                                   stop_fn=stop_fn)
+        return lifecycle.as_run_result(state)
+
+    def run_task_legacy(self, task: TaskRequest, trainer,
+                        availability_fn: Callable[[int, int], bool] | None = None,
+                        stop_fn: Callable[[dict], bool] | None = None,
+                        method: str = "greedy") -> ServiceRunResult:
+        """The pre-redesign blocking loop, verbatim — the reference the
+        ``submit``/``step``/``drain`` lifecycle is equivalence-tested
+        against (tests/test_lifecycle.py). Not a production path.
 
         availability_fn(client_id, period) -> bool models clients going
         offline (paper: conflicting schedules / battery / network).

@@ -1,19 +1,22 @@
-"""End-to-end FL simulation: glues core.service (selection/scheduling)
-to real JAX training (fl.round) over partitioned synthetic data —
-the machinery behind the paper's Figs. 5/6 experiments.
+"""End-to-end FL simulation: glues the core service lifecycle
+(selection/scheduling, ``core.lifecycle``) to real JAX training
+(fl.round) over partitioned synthetic data — the machinery behind the
+paper's Figs. 5/6 experiments.
 
-Two trainers implement the ``core.service`` trainer protocol:
+Two trainers implement the explicit ``core.lifecycle.Trainer`` protocol
+(``run_rounds`` — no more ``hasattr`` duck typing):
 
 - :class:`FLClassificationSim` — the legacy host-loop data plane: every
   round assembles client batches on the host (numpy fancy-indexing per
-  client) and ships them to the device, one dispatch per round. Kept as
-  the equivalence/benchmark baseline.
+  client) and ships them to the device, one dispatch per round
+  (``run_rounds`` loops internally, so chunked schedules work but gain
+  nothing). Kept as the equivalence/benchmark baseline.
 - :class:`DeviceFLSim` — the device-resident data plane: the partitioned
   dataset is staged on device once (fl.device_data.DeviceDataset) and
   ``run_rounds`` drives S rounds per dispatch through the chunked
   ``lax.scan`` driver (fl.round.make_fl_rounds_scan) with on-device
   batch gather, dropout masks, and the fused aggregation+quality pass.
-  Wired into ``FLServiceProvider.run_task`` via ``TaskRequest.round_chunk``.
+  Driven with ``TaskRequest.round_chunk > 1`` rounds per dispatch.
 
 Both trainers draw batch positions and dropout from the same
 slot-keyed PRNG stream (fl.device_data.sample_positions), so with equal
@@ -30,7 +33,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import (ClientPoolState, ClientProfile, FLServiceProvider,
-                        TaskRequest)
+                        TaskRequest, lifecycle)
 from repro.core.criteria import NUM_CRITERIA, data_dist_score, overall_score, linear_cost
 from repro.data.synthetic import ClassificationData
 from repro.fl import device_data
@@ -109,7 +112,11 @@ class _EvalCache:
 class FLClassificationSim(_EvalCache):
     """Federated CNN training over a partitioned synthetic dataset —
     the legacy host-loop data plane (per-round host batch assembly +
-    host→device transfer; one jit dispatch per round)."""
+    host→device transfer; one jit dispatch per round).
+
+    Implements the ``core.lifecycle.Trainer`` protocol: ``run_rounds``
+    processes a chunk sequentially (one dispatch per round, so chunking
+    changes nothing but the grouping of trainer calls)."""
 
     def __init__(self, model_cfg: cnn.CNNConfig, data: ClassificationData,
                  parts: list[np.ndarray], test: ClassificationData,
@@ -147,8 +154,8 @@ class FLClassificationSim(_EvalCache):
         return {"images": jnp.asarray(np.stack(imgs)),
                 "labels": jnp.asarray(np.stack(labs))}
 
-    # -- TrainerFn for core.service.FLServiceProvider -----------------------
-    def trainer(self, rnd: int, subset, weights) -> tuple:
+    # -- core.lifecycle.Trainer protocol -------------------------------------
+    def __call__(self, rnd: int, subset, weights) -> tuple:
         K = len(subset)
         mask_u, pos_u = self._round_draws(rnd, K)
         mask_np = np.asarray(device_data.dropout_mask(
@@ -161,13 +168,25 @@ class FLClassificationSim(_EvalCache):
         q = np.asarray(info["q_values"])
         return mask_np > 0, q, metrics
 
+    def run_rounds(self, start_round: int, subsets: Sequence[Sequence[int]],
+                   weights: Sequence[np.ndarray]) -> list[tuple]:
+        """Sequential host loop over the chunk (one dispatch per round)."""
+        return [self(start_round + j, subset, np.asarray(w))
+                for j, (subset, w) in enumerate(zip(subsets, weights))]
+
+    @property
+    def trainer(self):
+        """The object itself (callable per-round AND a Trainer), kept
+        for source compatibility with the pre-protocol API."""
+        return self
+
 
 class DeviceFLSim(_EvalCache):
     """Device-resident trainer: staged dataset + chunked scan driver.
 
-    Implements both the per-round ``TrainerFn`` protocol (``__call__``)
-    and the chunked ``run_rounds`` protocol that
-    ``FLServiceProvider.run_task`` uses when ``task.round_chunk > 1``.
+    Implements the ``core.lifecycle.Trainer`` protocol (chunked
+    ``run_rounds``, driven with ``task.round_chunk > 1``) plus the
+    legacy per-round callable form (``__call__``).
 
     Subsets sized n±δ share one static client axis K per dispatch
     (padding is semantics-free thanks to slot-keyed randomness), and a
@@ -297,8 +316,8 @@ class DeviceFLSim(_EvalCache):
 
     @property
     def trainer(self):
-        """The object itself: callable per-round AND chunk-capable, so
-        ``run_task`` can discover ``run_rounds`` via ``hasattr``."""
+        """The object itself: a chunk-capable ``core.lifecycle.Trainer``
+        (and still callable per-round for legacy call sites)."""
         return self
 
 
@@ -341,9 +360,10 @@ def run_fl_experiment(kind: str, noniid: str, n_clients: int = 100,
                        subset_delta=subset_delta, x_star=3, max_periods=10_000,
                        scheduler=scheduler, seed=seed,
                        round_chunk=round_chunk, max_rounds=rounds)
-    result = provider.run_task(
-        task, simul.trainer,
-        stop_fn=lambda m: m["round"] + 1 >= rounds)
-    return {"history": simul.history, "service": result,
+    state = lifecycle.submit(provider, task)
+    state, _ = lifecycle.drain(provider, state, simul.trainer,
+                               stop_fn=lambda m: m["round"] + 1 >= rounds)
+    result = lifecycle.as_run_result(state)
+    return {"history": simul.history, "service": result, "state": state,
             "final_accuracy": simul.evaluate(), "scheduler": scheduler,
             "noniid": noniid, "kind": kind}

@@ -1,10 +1,13 @@
-"""Reputation, fairness guarantees, and end-to-end service orchestration."""
+"""Reputation, fairness guarantees, and end-to-end service orchestration
+(driven through the lifecycle API; the deprecated run_task shim has its
+own equivalence suite in test_lifecycle.py)."""
 import numpy as np
 import pytest
 
 from repro.core import (ClientProfile, FLServiceProvider, ReputationTracker,
-                        TaskRequest, fairness_report, jain_index,
-                        model_quality_batch, random_profiles)
+                        TaskRequest, as_run_result, drain, fairness_report,
+                        jain_index, model_quality_batch, random_profiles,
+                        submit)
 from repro.core import generate_subsets
 from test_core_scheduling import make_pool
 
@@ -73,6 +76,13 @@ def _stub_trainer(fail_ids=(), q=0.9):
     return trainer
 
 
+def _serve(sp, task, trainer, **kw):
+    """submit + drain + result (the run_task replacement)."""
+    state = submit(sp, task)
+    state, _ = drain(sp, state, trainer, **kw)
+    return as_run_result(state)
+
+
 class TestService:
     def _provider(self, n=60, seed=0):
         return FLServiceProvider(random_profiles(n, 10, np.random.default_rng(seed)))
@@ -81,7 +91,7 @@ class TestService:
         sp = self._provider()
         task = TaskRequest(budget=400.0, n_star=10, subset_size=5,
                            subset_delta=2, max_periods=3)
-        res = sp.run_task(task, _stub_trainer())
+        res = _serve(sp, task, _stub_trainer())
         assert res.pool.feasible
         assert res.num_rounds > 0
         # every pool client participated in period 0
@@ -97,7 +107,7 @@ class TestService:
                            subset_delta=2, max_periods=2, rep_threshold=0.5)
         bad = set(sp.registry)  # fail everyone? no — fail three specific ids
         bad = set(list(sp.registry)[:3])
-        res = sp.run_task(task, _stub_trainer(fail_ids=bad))
+        res = _serve(sp, task, _stub_trainer(fail_ids=bad))
         p0 = {cid for r in res.rounds if r.period == 0 for cid in r.subset}
         p1 = {cid for r in res.rounds if r.period == 1 for cid in r.subset}
         for cid in bad & p0:
@@ -108,8 +118,8 @@ class TestService:
         task = TaskRequest(budget=400.0, n_star=10, subset_size=5,
                            subset_delta=2, max_periods=2)
         gone = set(list(sp.registry)[:5])
-        res = sp.run_task(task, _stub_trainer(),
-                          availability_fn=lambda cid, period: cid not in gone)
+        res = _serve(sp, task, _stub_trainer(),
+                     availability_fn=lambda cid, period: cid not in gone)
         p1 = {cid for r in res.rounds if r.period == 1 for cid in r.subset}
         assert not (gone & p1)
 
@@ -117,19 +127,27 @@ class TestService:
         sp = self._provider()
         task = TaskRequest(budget=400.0, n_star=10, subset_size=5,
                            subset_delta=2, max_periods=5)
-        res = sp.run_task(task, _stub_trainer(),
-                          stop_fn=lambda m: m["round"] >= 3)
+        res = _serve(sp, task, _stub_trainer(),
+                     stop_fn=lambda m: m["round"] >= 3)
         assert res.num_rounds == 4
 
     def test_infeasible_task(self):
         sp = self._provider()
         task = TaskRequest(budget=1.0, n_star=50)
-        res = sp.run_task(task, _stub_trainer())
+        res = _serve(sp, task, _stub_trainer())
         assert not res.pool.feasible and res.num_rounds == 0
 
     def test_random_scheduler_baseline(self):
         sp = self._provider()
         task = TaskRequest(budget=400.0, n_star=10, subset_size=5,
                            subset_delta=2, max_periods=1, scheduler="random")
-        res = sp.run_task(task, _stub_trainer())
+        res = _serve(sp, task, _stub_trainer())
+        assert res.num_rounds > 0
+
+    def test_run_task_shim_still_works(self):
+        sp = self._provider()
+        task = TaskRequest(budget=400.0, n_star=10, subset_size=5,
+                           subset_delta=2, max_periods=2)
+        with pytest.warns(DeprecationWarning, match="run_task"):
+            res = sp.run_task(task, _stub_trainer())
         assert res.num_rounds > 0

@@ -183,6 +183,24 @@ class TestCheckpoint:
             np.testing.assert_array_equal(np.asarray(x, np.float32),
                                           np.asarray(y, np.float32))
 
+    def test_restore_dict_exact_numpy_dtypes(self, tmp_path):
+        from repro.checkpoint import restore_dict
+        tree = {"f64": np.arange(4, dtype=np.float64),
+                "i64": np.array([2**60 + 1], dtype=np.int64),
+                "u64": np.array([2**64 - 1], dtype=np.uint64),
+                "bf16": jnp.ones(3, jnp.bfloat16)}
+        p = str(tmp_path / "flat.ckpt")
+        save(p, tree)
+        back = restore_dict(p)
+        # exact dtypes, mutable numpy leaves (no jnp truncation to 32 bit)
+        assert back["f64"].dtype == np.float64
+        assert int(back["i64"][0]) == 2**60 + 1
+        assert int(back["u64"][0]) == 2**64 - 1
+        assert isinstance(back["f64"], np.ndarray)
+        assert isinstance(back["bf16"], np.ndarray)
+        assert str(back["bf16"].dtype) == "bfloat16"
+        back["f64"][0] = -1.0          # numpy contract: writable
+
     def test_shape_mismatch_raises(self, tmp_path):
         p = str(tmp_path / "x.ckpt")
         save(p, {"a": jnp.zeros(3)})

@@ -1,0 +1,677 @@
+"""ISSUE-3 resumable service API: submit/step/drain lifecycle vs the
+legacy blocking loop (bit-for-bit), checkpoint/resume, multi-tenant
+ServiceScheduler, client churn, and the satellite fixes (registry
+invalidation, positions KeyError, select_pools_batch edges, run_task
+deprecation, struct-of-arrays reputation)."""
+import os
+import warnings
+
+import numpy as np
+import pytest
+
+from repro.core import (FLServiceProvider, ReputationTracker, ServiceScheduler,
+                        TaskPhase, TaskRequest, TaskState, Trainer,
+                        apply_pool_selection, as_run_result, drain, load_state,
+                        random_profiles, resolve_trainer, save_state,
+                        single_round_adapter, step, submit)
+from repro.core.pool import ClientPoolState
+
+
+# ---------------------------------------------------------------------------
+# deterministic stub trainers (stateless -> resumable)
+# ---------------------------------------------------------------------------
+
+def _round_result(rnd, subset, fail_mod=7):
+    subset = np.asarray(subset)
+    returned = (subset + rnd) % fail_mod != 0
+    q = np.where(returned, 0.5 + 0.4 * np.cos(subset + rnd), 0.0)
+    return returned, q, {"round": rnd, "loss": 1.0 / (rnd + 1)}
+
+
+def _stub(rnd, subset, weights):
+    return _round_result(rnd, subset)
+
+
+class ChunkStub:
+    """Chunk-capable deterministic Trainer (protocol implementation;
+    also callable per-round, like DeviceFLSim, so the legacy reference
+    loop can drive it at chunk size 1)."""
+
+    def run_rounds(self, start_round, subsets, weights):
+        return [_round_result(start_round + j, s)
+                for j, s in enumerate(subsets)]
+
+    def __call__(self, rnd, subset, weights):
+        return self.run_rounds(rnd, [subset], [weights])[0]
+
+
+def _profiles(n=60, seed=0):
+    return random_profiles(n, 10, np.random.default_rng(seed))
+
+
+def _assert_results_equal(a, b, *, order_insensitive_pool=False):
+    if order_insensitive_pool:
+        assert sorted(a.pool.selected) == sorted(b.pool.selected)
+        assert a.pool.total_score == pytest.approx(b.pool.total_score)
+        assert a.pool.total_cost == pytest.approx(b.pool.total_cost)
+    else:
+        assert a.pool.selected == b.pool.selected
+        assert a.pool.total_score == b.pool.total_score
+        assert a.pool.total_cost == b.pool.total_cost
+    assert a.pool.feasible == b.pool.feasible
+    assert len(a.rounds) == len(b.rounds)
+    for ra, rb in zip(a.rounds, b.rounds):
+        assert (ra.period, ra.round_index) == (rb.period, rb.round_index)
+        assert ra.subset == rb.subset
+        np.testing.assert_array_equal(ra.weights, rb.weights)
+        assert ra.nid == rb.nid
+    assert [s.subsets for s in a.schedules] == [s.subsets for s in b.schedules]
+    assert [s.nids for s in a.schedules] == [s.nids for s in b.schedules]
+    assert a.reputation == b.reputation        # bit-for-bit values
+
+
+# ---------------------------------------------------------------------------
+# Equivalence: run_task shim (submit/step/drain) vs the legacy loop
+# ---------------------------------------------------------------------------
+
+class TestShimEquivalence:
+    @pytest.mark.parametrize("scheduler", ["mkp", "random"])
+    @pytest.mark.parametrize("chunked,round_chunk",
+                             [(False, 1), (True, 1), (True, 3)])
+    @pytest.mark.parametrize("max_rounds", [None, 7])
+    @pytest.mark.parametrize("stop_at", [None, 5])
+    def test_matrix(self, scheduler, chunked, round_chunk, max_rounds,
+                    stop_at):
+        sp = FLServiceProvider(_profiles())
+        task = TaskRequest(budget=400.0, n_star=10, subset_size=5,
+                           subset_delta=2, max_periods=3, scheduler=scheduler,
+                           max_rounds=max_rounds, round_chunk=round_chunk,
+                           seed=3)
+        trainer = ChunkStub() if chunked else _stub
+        stop_fn = (lambda m: m["round"] >= stop_at) if stop_at else None
+        legacy = sp.run_task_legacy(task, trainer, stop_fn=stop_fn)
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore", DeprecationWarning)
+            shim = sp.run_task(task, trainer, stop_fn=stop_fn)
+        _assert_results_equal(legacy, shim)
+
+    def test_availability_fn(self):
+        sp = FLServiceProvider(_profiles())
+        task = TaskRequest(budget=400.0, n_star=10, subset_size=5,
+                           subset_delta=2, max_periods=3)
+        gone = set(list(sp.registry)[:5])
+        fn = lambda cid, period: cid not in gone
+        legacy = sp.run_task_legacy(task, _stub, availability_fn=fn)
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore", DeprecationWarning)
+            shim = sp.run_task(task, _stub, availability_fn=fn)
+        _assert_results_equal(legacy, shim)
+
+    def test_random_stage1_method_threads_rng(self):
+        sp = FLServiceProvider(_profiles())
+        task = TaskRequest(budget=300.0, n_star=5, subset_size=5,
+                           subset_delta=2, max_periods=2, scheduler="random",
+                           seed=11)
+        legacy = sp.run_task_legacy(task, _stub, method="random")
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore", DeprecationWarning)
+            shim = sp.run_task(task, _stub, method="random")
+        _assert_results_equal(legacy, shim)
+
+    def test_infeasible(self):
+        sp = FLServiceProvider(_profiles())
+        task = TaskRequest(budget=1.0, n_star=50)
+        state = submit(sp, task)
+        assert state.phase == TaskPhase.INFEASIBLE
+        state, events = drain(sp, state, _stub)
+        assert events == [] and state.phase == TaskPhase.INFEASIBLE
+        res = as_run_result(state)
+        assert not res.pool.feasible and res.num_rounds == 0 \
+            and res.reputation == {}
+
+    def test_step_emits_events_only_while_training(self):
+        sp = FLServiceProvider(_profiles())
+        task = TaskRequest(budget=400.0, n_star=10, subset_size=5,
+                           subset_delta=2, max_periods=1)
+        state = submit(sp, task)
+        phases = [state.phase]
+        while not state.phase.terminal:
+            state, ev = step(sp, state, _stub)
+            phases.append(state.phase)
+            if ev:
+                assert state.phase in (TaskPhase.TRAINING,
+                                       TaskPhase.PERIOD_CHECKPOINT)
+        assert phases[0] == TaskPhase.POOL_SELECTED
+        assert TaskPhase.SCHEDULED in phases
+        assert TaskPhase.PERIOD_CHECKPOINT in phases
+        assert phases[-1] == TaskPhase.DONE
+
+
+# ---------------------------------------------------------------------------
+# Trainer protocol
+# ---------------------------------------------------------------------------
+
+class TestTrainerProtocol:
+    def test_chunkstub_is_trainer(self):
+        assert isinstance(ChunkStub(), Trainer)
+        assert resolve_trainer(ChunkStub()) .__class__ is ChunkStub
+
+    def test_callable_wrapped(self):
+        t = resolve_trainer(_stub)
+        assert isinstance(t, single_round_adapter)
+        assert t.chunkable is False
+        out = t.run_rounds(4, [[1, 2], [3, 4]], [np.ones(2), np.ones(2)])
+        ref = [_round_result(4, [1, 2]), _round_result(5, [3, 4])]
+        for (ra, qa, ma), (rb, qb, mb) in zip(out, ref):
+            np.testing.assert_array_equal(ra, rb)
+            np.testing.assert_array_equal(qa, qb)
+            assert ma == mb
+
+    def test_non_trainer_rejected(self):
+        with pytest.raises(TypeError):
+            resolve_trainer(object())
+
+
+# ---------------------------------------------------------------------------
+# Checkpoint / resume
+# ---------------------------------------------------------------------------
+
+class TestCheckpointResume:
+    def _reference(self, profiles, task):
+        sp = FLServiceProvider(profiles)
+        state = submit(sp, task)
+        state, events = drain(sp, state, ChunkStub())
+        return events, as_run_result(state).reputation
+
+    @pytest.mark.parametrize("scheduler", ["mkp", "random"])
+    def test_resume_mid_period(self, tmp_path, scheduler):
+        profiles = _profiles()
+        task = TaskRequest(budget=400.0, n_star=10, subset_size=5,
+                           subset_delta=2, max_periods=4, scheduler=scheduler,
+                           round_chunk=2, seed=3)
+        ref_events, ref_rep = self._reference(profiles, task)
+
+        sp = FLServiceProvider(profiles)
+        state = submit(sp, task)
+        pre = []
+        # step into the middle of period 1 (TRAINING with a chunk done)
+        while not (state.phase == TaskPhase.TRAINING and state.period == 1
+                   and state.subset_index >= 1):
+            state, ev = step(sp, state, ChunkStub())
+            pre.extend(ev)
+            assert not state.phase.terminal
+        path = os.path.join(tmp_path, "task.ckpt")
+        save_state(path, state)
+
+        restored = load_state(path)            # "fresh process"
+        assert restored.phase == state.phase
+        assert restored.pool == state.pool
+        assert restored.subset_index == state.subset_index
+        sp2 = FLServiceProvider(profiles)      # fresh provider
+        restored, post = drain(sp2, restored, ChunkStub())
+        got = pre + post
+        assert len(got) == len(ref_events)
+        for a, b in zip(got, ref_events):
+            assert (a.period, a.round_index, a.subset) == \
+                (b.period, b.round_index, b.subset)
+            np.testing.assert_array_equal(a.weights, b.weights)
+            assert a.nid == b.nid
+        assert as_run_result(restored).reputation == ref_rep
+
+    def test_resume_at_period_checkpoint(self, tmp_path):
+        profiles = _profiles()
+        task = TaskRequest(budget=400.0, n_star=10, subset_size=5,
+                           subset_delta=2, max_periods=3, seed=5)
+        ref_events, ref_rep = self._reference(profiles, task)
+
+        sp = FLServiceProvider(profiles)
+        state = submit(sp, task)
+        pre = []
+        while state.phase != TaskPhase.PERIOD_CHECKPOINT:
+            state, ev = step(sp, state, ChunkStub())
+            pre.extend(ev)
+        path = os.path.join(tmp_path, "ckpt.ckpt")
+        save_state(path, state)
+        restored = load_state(path)
+        sp2 = FLServiceProvider(profiles)
+        restored, post = drain(sp2, restored, ChunkStub())
+        assert [(e.period, e.round_index, e.subset) for e in pre + post] == \
+            [(e.period, e.round_index, e.subset) for e in ref_events]
+        assert as_run_result(restored).reputation == ref_rep
+
+    def test_taskstate_array_roundtrip(self):
+        sp = FLServiceProvider(_profiles())
+        task = TaskRequest(budget=400.0, n_star=10, subset_size=5,
+                           subset_delta=2, max_periods=3, max_rounds=9,
+                           thresholds=np.full(9, 0.02), round_chunk=2,
+                           scheduler="random", seed=7)
+        state = submit(sp, task)
+        state, _ = step(sp, state, _stub)      # generate a schedule
+        state, _ = step(sp, state, _stub)      # train one chunk
+        back = TaskState.from_arrays(state.to_arrays())
+        assert back.phase == state.phase
+        assert back.pool == state.pool
+        assert back.global_round == state.global_round
+        assert back.task.max_rounds == task.max_rounds
+        assert back.task.scheduler == task.scheduler
+        np.testing.assert_array_equal(back.task.thresholds, task.thresholds)
+        assert back.schedule.subsets == state.schedule.subsets
+        assert back.tracker.scores() == state.tracker.scores()
+        # rng stream continues identically
+        np.testing.assert_array_equal(back.rng.random(8), state.rng.random(8))
+
+    def test_large_seed_roundtrips_exactly(self):
+        # seeds are integers, not float64: 2**60 + 1 must survive
+        task = TaskRequest(budget=100.0, seed=2**60 + 1, max_rounds=2**55)
+        state = TaskState(task=task)
+        back = TaskState.from_arrays(state.to_arrays())
+        assert back.task.seed == 2**60 + 1
+        assert back.task.max_rounds == 2**55
+
+
+# ---------------------------------------------------------------------------
+# Multi-tenant ServiceScheduler
+# ---------------------------------------------------------------------------
+
+class TestServiceScheduler:
+    def _tasks(self, T):
+        return [TaskRequest(budget=300.0 + 20 * t, n_star=5, subset_size=4,
+                            subset_delta=2, max_periods=2,
+                            scheduler="mkp" if t % 2 else "random", seed=t)
+                for t in range(T)]
+
+    def test_concurrent_equals_serial(self):
+        profiles = _profiles()
+        tasks = self._tasks(8)
+        serial = {}
+        for tid, task in enumerate(tasks):
+            sp = FLServiceProvider(profiles)
+            st = submit(sp, task)
+            st, _ = drain(sp, st, _stub)
+            serial[tid] = as_run_result(st)
+
+        sched = ServiceScheduler(FLServiceProvider(profiles))
+        for task in tasks:
+            sched.submit(task, _stub)
+        conc = sched.run()
+        assert set(conc) == set(serial)
+        for tid in serial:
+            # batched intake returns the same pool set (pool order is
+            # greedy-pick vs pool order — documented); rounds and
+            # reputation must be bitwise identical
+            _assert_results_equal(serial[tid], conc[tid],
+                                  order_insensitive_pool=True)
+
+    def test_rounds_interleave_across_tasks(self):
+        sched = ServiceScheduler(FLServiceProvider(_profiles()))
+        for task in self._tasks(4):
+            sched.submit(task, _stub)
+        order = []
+        for _ in range(10_000):
+            if not sched.active:
+                break
+            for tid, evs in sched.sweep().items():
+                order.extend([tid] * len(evs))
+        assert not sched.active
+        # every task trains before any task finishes its full run
+        first_complete = min(max(i for i, t in enumerate(order) if t == tid)
+                             for tid in set(order))
+        assert set(order[:first_complete]) == set(order)
+
+    def test_infeasible_tenant_terminates(self):
+        sched = ServiceScheduler(FLServiceProvider(_profiles()))
+        good = sched.submit(self._tasks(1)[0], _stub)
+        bad = sched.submit(TaskRequest(budget=1.0, n_star=50), _stub)
+        results = sched.run()
+        assert results[bad].pool.feasible is False
+        assert results[bad].num_rounds == 0
+        assert results[good].num_rounds > 0
+
+    def test_retire_evicts_finished_task(self):
+        sched = ServiceScheduler(FLServiceProvider(_profiles()))
+        tid = sched.submit(self._tasks(1)[0], _stub)
+        with pytest.raises(ValueError, match="only terminal"):
+            sched.retire(tid)                  # still queued
+        sched.run()
+        res = sched.retire(tid)
+        assert res.num_rounds > 0
+        assert tid not in sched.task_ids
+        with pytest.raises(KeyError):
+            sched.retire(tid)
+
+    def test_adopt_restored_state(self, tmp_path):
+        profiles = _profiles()
+        task = self._tasks(1)[0]
+        sp = FLServiceProvider(profiles)
+        st = submit(sp, task)
+        st, pre = drain(sp, st, _stub, max_steps=4)
+        path = os.path.join(tmp_path, "adopt.ckpt")
+        save_state(path, st)
+        sched = ServiceScheduler(FLServiceProvider(profiles))
+        tid = sched.adopt(load_state(path), _stub)
+        res = sched.run()[tid]
+        ref_sp = FLServiceProvider(profiles)
+        ref_st = submit(ref_sp, task)
+        ref_st, ref_events = drain(ref_sp, ref_st, _stub)
+        assert [(e.round_index, e.subset) for e in pre] + \
+            [(e.round_index, e.subset) for e in res.rounds] == \
+            [(e.round_index, e.subset) for e in ref_events]
+
+
+# ---------------------------------------------------------------------------
+# Client churn
+# ---------------------------------------------------------------------------
+
+class TestChurn:
+    def _run_to_checkpoint(self, sp, task):
+        state = submit(sp, task)
+        while state.phase != TaskPhase.PERIOD_CHECKPOINT:
+            assert not state.phase.terminal, state.phase
+            state, _ = step(sp, state, _stub)
+        return state
+
+    def test_joiners_admitted_at_checkpoint(self):
+        sp = FLServiceProvider(_profiles(40, seed=1))
+        task = TaskRequest(budget=1e6, n_star=10, subset_size=5,
+                           subset_delta=2, max_periods=3, seed=0)
+        state = self._run_to_checkpoint(sp, task)
+        extra = ClientPoolState.random(3, 10, np.random.default_rng(9))
+        sp.pool_state.register_arrays(extra.client_ids + 1000, extra.scores,
+                                      extra.histograms, extra.costs)
+        state, _ = step(sp, state, _stub)      # the checkpoint transition
+        assert {1000, 1001, 1002} <= state.pool
+        assert set(state.admitted) == {1000, 1001, 1002}
+        state, _ = drain(sp, state, _stub)
+        p1 = {c for r in as_run_result(state).rounds
+              if r.period == 1 for c in r.subset}
+        assert {1000, 1001, 1002} <= p1       # schedulable next period
+        # reputation tracked for admitted clients too
+        assert 1000 in as_run_result(state).reputation
+
+    def test_joiners_respect_budget_and_thresholds(self):
+        sp = FLServiceProvider(_profiles(40, seed=1))
+        task = TaskRequest(budget=1e6, n_star=10, subset_size=5,
+                           subset_delta=2, max_periods=2, seed=0,
+                           thresholds=np.full(9, 0.05))
+        state = self._run_to_checkpoint(sp, task)
+        spent = state.pool_selected.total_cost
+        extra = ClientPoolState.random(2, 10, np.random.default_rng(3))
+        scores = extra.scores.copy()
+        scores[0, :] = 0.9                     # passes thresholds
+        scores[1, :] = 0.01                    # fails thresholds
+        costs = np.array([task.budget - spent + 1.0, 1.0])
+        # client 2000 passes thresholds but exceeds the leftover budget;
+        # client 2001 is cheap but fails thresholds -> neither admitted
+        sp.pool_state.register_arrays([2000, 2001], scores,
+                                      extra.histograms, costs)
+        state, _ = step(sp, state, _stub)
+        assert 2000 not in state.pool and 2001 not in state.pool
+
+    def test_admit_joiners_opt_out(self):
+        sp = FLServiceProvider(_profiles(40, seed=1))
+        task = TaskRequest(budget=1e6, n_star=10, subset_size=5,
+                           subset_delta=2, max_periods=2, seed=0,
+                           admit_joiners=False)
+        state = self._run_to_checkpoint(sp, task)
+        extra = ClientPoolState.random(2, 10, np.random.default_rng(4))
+        sp.pool_state.register_arrays(extra.client_ids + 3000, extra.scores,
+                                      extra.histograms, extra.costs)
+        state, _ = step(sp, state, _stub)
+        assert not ({3000, 3001} & state.pool) and state.admitted == []
+
+    def test_deregister_mid_period_finishes_schedule(self):
+        # churning a client out mid-period must not crash the task: the
+        # drawn schedule completes against the tombstoned row, and the
+        # client is dropped at the next PERIOD_CHECKPOINT
+        sp = FLServiceProvider(_profiles(40, seed=1))
+        task = TaskRequest(budget=1e6, n_star=10, subset_size=5,
+                           subset_delta=2, max_periods=2, seed=0)
+        state = submit(sp, task)
+        state, _ = step(sp, state, _stub)      # schedule period 0
+        assert state.phase == TaskPhase.SCHEDULED
+        victim = state.schedule.subsets[-1][0]  # appears in a later round
+        sp.pool_state.deregister([victim])
+        state, events = drain(sp, state, _stub)
+        res = as_run_result(state)
+        p0 = {c for r in res.rounds if r.period == 0 for c in r.subset}
+        p1 = {c for r in res.rounds if r.period == 1 for c in r.subset}
+        assert victim in p0 and victim not in p1
+
+    def test_deregister_before_first_schedule_does_not_crash(self):
+        # churn in the POOL_SELECTED window (right after submit, or
+        # between a checkpoint and the next schedule draw) must drop the
+        # client, not KeyError out of schedule_period
+        sp = FLServiceProvider(_profiles(40, seed=1))
+        task = TaskRequest(budget=1e6, n_star=10, subset_size=5,
+                           subset_delta=2, max_periods=2, seed=0)
+        state = submit(sp, task)
+        victim = sorted(state.pool)[0]
+        sp.pool_state.deregister([victim])
+        state, _ = drain(sp, state, _stub)
+        assert state.phase == TaskPhase.DONE
+        participants = {c for r in as_run_result(state).rounds
+                        for c in r.subset}
+        assert victim not in participants
+
+    def test_rejoining_new_client_is_admitted(self):
+        # a client that registered, churned out, and rejoins reactivates
+        # its old row (below the old row count) — the reg_seq watermark
+        # must still surface it to the joiner scan
+        sp = FLServiceProvider(_profiles(40, seed=1))
+        task = TaskRequest(budget=1e6, n_star=10, subset_size=5,
+                           subset_delta=2, max_periods=3, seed=0)
+        extra = ClientPoolState.random(1, 10, np.random.default_rng(9))
+        sp.pool_state.register_arrays([1000], extra.scores,
+                                      extra.histograms, extra.costs)
+        sp.pool_state.deregister([1000])   # leaves before the task starts
+        state = self._run_to_checkpoint(sp, task)
+        assert 1000 not in state.pool
+        sp.pool_state.register_arrays([1000], extra.scores,
+                                      extra.histograms, extra.costs)
+        state, _ = step(sp, state, _stub)  # checkpoint: joiner scan
+        assert 1000 in state.pool and 1000 in state.admitted
+
+    def test_rejoining_stage1_client_reenters_without_second_charge(self):
+        sp = FLServiceProvider(_profiles(40, seed=1))
+        task = TaskRequest(budget=1e6, n_star=10, subset_size=5,
+                           subset_delta=2, max_periods=3, seed=0)
+        state = self._run_to_checkpoint(sp, task)
+        member = sorted(state.pool)[0]
+        row = int(sp.pool_state.positions([member])[0])
+        profile = sp.pool_state.to_profiles()[row]
+        sp.pool_state.deregister([member])
+        state, _ = step(sp, state, _stub)          # checkpoint drops it
+        assert member not in state.pool
+        sp.pool_state.register([profile])          # rejoins next period
+        # run period 1 to its checkpoint, then roll over
+        while state.phase != TaskPhase.PERIOD_CHECKPOINT:
+            state, _ = step(sp, state, _stub)
+        state, _ = step(sp, state, _stub)
+        assert member in state.pool                # re-admitted
+        assert member not in state.admitted        # seat already paid
+        assert state.admitted_cost == 0.0
+
+    def test_deregistered_dropped_from_pool(self):
+        sp = FLServiceProvider(_profiles(40, seed=1))
+        task = TaskRequest(budget=1e6, n_star=10, subset_size=5,
+                           subset_delta=2, max_periods=3, seed=0)
+        state = self._run_to_checkpoint(sp, task)
+        victim = sorted(state.pool)[0]
+        sp.pool_state.deregister([victim])
+        state, _ = step(sp, state, _stub)
+        assert victim not in state.pool
+        state, _ = drain(sp, state, _stub)
+        later = {c for r in as_run_result(state).rounds
+                 if r.period >= 1 for c in r.subset}
+        assert victim not in later
+
+
+# ---------------------------------------------------------------------------
+# Satellites
+# ---------------------------------------------------------------------------
+
+class TestRejoin:
+    def test_deregistered_client_can_rejoin(self):
+        pool = ClientPoolState.random(6, 10, np.random.default_rng(0))
+        pool.deregister([2])
+        with pytest.raises(KeyError):
+            pool.positions([2])
+        add = ClientPoolState.random(2, 10, np.random.default_rng(1))
+        pos = pool.register_arrays([2, 50], add.scores, add.histograms,
+                                   add.costs)
+        assert pos[0] == 2 and pos[1] == 6     # row reused; new appended
+        assert int(pool.positions([2])[0]) == 2
+        np.testing.assert_array_equal(pool.histograms[2], add.histograms[0])
+        assert pool.n == 7
+
+    def test_batch_dup_named_in_error(self):
+        pool = ClientPoolState.random(3, 10, np.random.default_rng(0))
+        add = ClientPoolState.random(2, 10, np.random.default_rng(1))
+        with pytest.raises(ValueError, match=r"\[7\]"):
+            pool.register_arrays([7, 7], add.scores, add.histograms,
+                                 add.costs)
+        with pytest.raises(ValueError, match=r"\[1\]"):
+            pool.register_arrays([1, 9], add.scores, add.histograms,
+                                 add.costs)
+
+
+class TestRegistryInvalidation:
+    def test_registry_refreshes_on_mutation(self):
+        sp = FLServiceProvider(_profiles(20))
+        before = set(sp.registry)
+        extra = ClientPoolState.random(2, 10, np.random.default_rng(2))
+        sp.pool_state.register_arrays(extra.client_ids + 500, extra.scores,
+                                      extra.histograms, extra.costs)
+        after = set(sp.registry)               # regression: was stale
+        assert after == before | {500, 501}
+        sp.pool_state.deregister([500])
+        assert 500 not in sp.registry
+
+    def test_registry_refreshes_on_replacement(self):
+        sp = FLServiceProvider(_profiles(20))
+        _ = sp.registry
+        sp.pool_state = ClientPoolState.random(5, 10,
+                                               np.random.default_rng(1))
+        assert set(sp.registry) == set(range(5))
+
+    def test_registry_cached_between_reads(self):
+        sp = FLServiceProvider(_profiles(20))
+        assert sp.registry is sp.registry      # no rebuild without mutation
+
+
+class TestPositionsKeyError:
+    def test_unknown_id_raises(self):
+        pool = ClientPoolState.random(5, 10, np.random.default_rng(0))
+        with pytest.raises(KeyError, match="not registered"):
+            pool.positions([99])
+
+    def test_deregistered_id_raises(self):
+        pool = ClientPoolState.random(5, 10, np.random.default_rng(0))
+        pool.deregister([2])
+        with pytest.raises(KeyError, match="not registered"):
+            pool.positions([2])
+
+    def test_schedule_period_surfaces_churned_id(self):
+        sp = FLServiceProvider(_profiles(20))
+        task = TaskRequest(budget=1e6, n_star=5, subset_size=4)
+        with pytest.raises(KeyError, match="not registered"):
+            sp.schedule_period([0, 1, 10_000], task,
+                               np.random.default_rng(0))
+
+
+class TestSelectPoolsBatchEdges:
+    def test_empty_task_list(self):
+        sp = FLServiceProvider(_profiles(20))
+        assert sp.select_pools_batch([]) == []
+
+    def test_all_infeasible_thresholds(self):
+        sp = FLServiceProvider(_profiles(20))
+        tasks = [TaskRequest(budget=1e6, n_star=1,
+                             thresholds=np.full(9, 1.1)) for _ in range(3)]
+        res = sp.select_pools_batch(tasks)
+        assert all(not r.feasible for r in res)
+        assert all("pass thresholds" in r.note for r in res)
+
+    def test_budget_floor_note_fires(self):
+        sp = FLServiceProvider(_profiles(20))
+        task = TaskRequest(budget=3.0, n_star=10)
+        (res,) = sp.select_pools_batch([task])
+        assert not res.feasible and "floor" in res.note
+
+    def test_parity_with_select_pool(self):
+        sp = FLServiceProvider(_profiles(50, seed=4))
+        tasks = [TaskRequest(budget=b, n_star=n,
+                             thresholds=th)
+                 for b, n, th in [(150.0, 5, None),
+                                  (80.0, 3, np.full(9, 0.2)),
+                                  (3.0, 10, None),
+                                  (1e6, 60, np.full(9, 0.9))]]
+        batch = sp.select_pools_batch(tasks)
+        for task, b in zip(tasks, batch):
+            s = sp.select_pool(task)
+            assert sorted(s.selected) == sorted(b.selected)
+            assert s.total_score == pytest.approx(b.total_score)
+            assert s.total_cost == pytest.approx(b.total_cost)
+            assert s.feasible == b.feasible
+            assert s.note == b.note
+
+
+class TestDeprecation:
+    def test_run_task_warns_once_per_call_site(self):
+        sp = FLServiceProvider(_profiles(30))
+        task = TaskRequest(budget=200.0, n_star=5, subset_size=4,
+                           subset_delta=2, max_periods=1)
+        with warnings.catch_warnings(record=True) as caught:
+            warnings.simplefilter("default")   # once-per-location filter
+            for _ in range(3):                 # one call site, three calls
+                sp.run_task(task, _stub)
+        dep = [w for w in caught
+               if issubclass(w.category, DeprecationWarning)
+               and "run_task" in str(w.message)]
+        assert len(dep) == 1
+
+    def test_lifecycle_api_does_not_warn(self):
+        sp = FLServiceProvider(_profiles(30))
+        task = TaskRequest(budget=200.0, n_star=5, subset_size=4,
+                           subset_delta=2, max_periods=1)
+        with warnings.catch_warnings(record=True) as caught:
+            warnings.simplefilter("error", DeprecationWarning)
+            state = submit(sp, task)
+            drain(sp, state, _stub)
+        assert not caught
+
+
+class TestReputationSoA:
+    def test_records_view_and_arrays_roundtrip(self):
+        tr = ReputationTracker([3, 7, 9], rep_threshold=0.4)
+        tr.record_round(3, True, q_value=0.8)
+        tr.record_round(3, False)
+        tr.record_round(7, True, q_value=0.6)
+        tr.update_pool({3, 7, 9})
+        back = ReputationTracker.from_arrays(tr.to_arrays())
+        assert back.scores() == tr.scores()
+        assert back.period == tr.period
+        assert back.records[3].suspended_until == tr.records[3].suspended_until
+        np.testing.assert_array_equal(back.records[3].q_rounds,
+                                      tr.records[3].q_rounds)
+        # and the restored tracker keeps accepting rounds
+        back.record_round(9, True, q_value=1.0)
+        assert back.records[9].num_rounds == 1
+
+    def test_add_clients(self):
+        tr = ReputationTracker([0, 1])
+        tr.record_round(0, True, q_value=0.9)
+        tr.add_clients([5])
+        assert set(tr.records) == {0, 1, 5}
+        tr.record_round(5, True, q_value=0.7)
+        assert tr.records[5].s_rep == pytest.approx(1.7)
+        assert tr.records[0].s_rep == pytest.approx(1.9)
+        with pytest.raises(ValueError):
+            tr.add_clients([0])
+
+    def test_round_buffer_growth(self):
+        tr = ReputationTracker([0])
+        for r in range(50):                    # > initial capacity
+            tr.record_round(0, True, q_value=0.5)
+        assert tr.records[0].num_rounds == 50
+        assert tr.records[0].s_rep == pytest.approx(1.5)
