@@ -16,7 +16,8 @@ Demonstrates the redesigned service API end to end:
    "the provider dies", and a fresh provider resumes it to completion
    (``lifecycle.save_state`` / ``load_state``);
 5. multi-tenant serving: a ServiceScheduler drives several tasks
-   concurrently over the one shared pool with batched stage-1 intake.
+   concurrently over the one shared pool with batched stage-1 intake
+   and the overlapped dispatch/collect pump (docs/service_api.md).
 
 Run:  PYTHONPATH=src python examples/fl_service_demo.py
 """
@@ -126,7 +127,7 @@ for i in range(4):
     scheduler.submit(t, trainer)
 results = scheduler.run()
 print(f"\nServiceScheduler served {len(results)} concurrent tasks "
-      f"(batched stage-1 intake, round-robin stepping):")
+      f"(batched stage-1 intake, overlapped dispatch/collect pump):")
 for tid, res in results.items():
     print(f"  task {tid}: {res.num_rounds:2d} rounds over "
           f"{len(res.schedules)} periods, pool {len(res.pool.selected)}")

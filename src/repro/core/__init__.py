@@ -13,11 +13,12 @@ Data flow (post array-native refactor):
   histograms) keep working through thin adapters
   (``ClientPoolState.from_profiles`` / ``from_histograms``).
 - ``lifecycle`` is the service orchestration layer: an explicit
-  ``TaskState`` machine (``submit`` / ``step`` / ``drain``) with
+  ``TaskState`` machine (``submit`` / ``step`` / ``drain``, with the
+  TRAINING transition split into async ``dispatch`` / ``collect``) with
   checkpoint/resume (``save_state``/``load_state``), client churn, and
-  a multi-tenant ``ServiceScheduler`` round-robining many tasks over
-  one shared pool. ``FLServiceProvider.run_task`` is a deprecated shim
-  over it.
+  a multi-tenant ``ServiceScheduler`` overlapping many tasks' device
+  dispatches over one shared pool. ``FLServiceProvider.run_task`` is a
+  deprecated shim over it.
 - The pre-refactor loop implementations survive as
   ``select_greedy_legacy``, ``generate_subsets_legacy`` and
   ``FLServiceProvider.run_task_legacy`` — reference paths for
@@ -33,9 +34,10 @@ from .criteria import (CRITERIA, NUM_CRITERIA, ClientProfile, build_profiles,
                        random_histograms, random_profiles, resource_scores)
 from .fairness import (bounded_participation, coverage, fairness_report,
                        jain_index, over_selection_fraction)
-from .lifecycle import (RoundEvent, ServiceScheduler, ServiceState, TaskPhase,
-                        TaskState, Trainer, apply_pool_selection,
-                        as_run_result, drain, load_state, resolve_trainer,
+from .lifecycle import (AsyncTrainer, InFlightError, PendingChunk, RoundEvent,
+                        ServiceScheduler, ServiceState, TaskPhase, TaskState,
+                        Trainer, apply_pool_selection, as_run_result, collect,
+                        dispatch, drain, load_state, resolve_trainer,
                         save_state, single_round_adapter, step, submit)
 from .mkp import MKPResult, solve_mkp, solve_mkp_bnb, solve_mkp_greedy
 from .pool import ClientPoolState
@@ -65,8 +67,9 @@ __all__ = [
     "threshold_filter", "FLServiceProvider", "RoundLog", "ServiceRunResult",
     "TaskRequest",
     # lifecycle (resumable service API)
-    "RoundEvent", "ServiceScheduler", "ServiceState", "TaskPhase",
-    "TaskState", "Trainer", "apply_pool_selection", "as_run_result", "drain",
+    "AsyncTrainer", "InFlightError", "PendingChunk", "RoundEvent",
+    "ServiceScheduler", "ServiceState", "TaskPhase", "TaskState", "Trainer",
+    "apply_pool_selection", "as_run_result", "collect", "dispatch", "drain",
     "load_state", "resolve_trainer", "save_state", "single_round_adapter",
     "step", "submit",
 ]

@@ -21,13 +21,32 @@ transition functions::
   ``run_task`` is now a deprecated shim over ``submit`` + ``drain`` that
   reproduces the pre-redesign results bit-for-bit.
 
+The TRAINING transition additionally splits into an asynchronous half
+pair (ISSUE-4 overlapped dispatch):
+
+- :func:`dispatch` *enqueues* one round chunk — an
+  :class:`AsyncTrainer` returns an opaque handle over still-unmaterialized
+  device arrays (JAX async dispatch), a plain :class:`Trainer` falls
+  back to running the chunk eagerly — and parks it on
+  ``TaskState.pending``;
+- :func:`collect` materializes the pending handle into
+  :class:`RoundEvent` s and advances the phase exactly as a blocking
+  step would have.
+
+``step`` on a SCHEDULED/TRAINING state is literally ``dispatch`` +
+``collect``, so stepping stays bit-identical to the pre-split code;
+:class:`ServiceScheduler` exploits the split to overlap device work
+across tasks (dispatch every runnable task, then collect in completion
+order) while host-only transitions fill the gaps.
+
 Because the state between steps is explicit, the API expresses the three
 things the blocking loop structurally could not:
 
 - **multi-tenant serving** — :class:`ServiceScheduler` holds N in-flight
   TaskStates against one shared ``ClientPoolState``, batches stage-1
-  intake through ``select_pools_batch`` and round-robins ``step`` so
-  device dispatches from different tasks interleave;
+  intake through ``select_pools_batch`` and pumps the dispatch/collect
+  split so device work from different tasks overlaps (round-robin
+  blocking sweeps remain available via ``overlap=False``);
 - **client churn** — clients joining the shared pool between periods
   (``ClientPoolState.register``) are admitted into running tasks at
   their next PERIOD_CHECKPOINT (budget permitting, same score/cost-ratio
@@ -134,12 +153,44 @@ class Trainer(Protocol):
     chunk; a sequential trainer loops internally. Set the class
     attribute ``chunkable = False`` to force one-round chunks regardless
     of ``TaskRequest.round_chunk`` (the default is chunk-capable).
+
+    A trainer may additionally implement the :class:`AsyncTrainer` pair
+    (``dispatch_rounds`` / ``collect``) to let the service overlap its
+    device work with other tasks; ``run_rounds`` alone is always enough
+    (the lifecycle falls back to eager execution at dispatch time).
     """
 
     def run_rounds(self, start_round: int,
                    subsets: Sequence[Sequence[int]],
                    weights: Sequence[np.ndarray]
                    ) -> list[tuple[np.ndarray, np.ndarray, dict]]: ...
+
+
+@runtime_checkable
+class AsyncTrainer(Trainer, Protocol):
+    """Optional asynchronous extension of :class:`Trainer`.
+
+    ``dispatch_rounds(start_round, subsets, weights)`` *enqueues* the
+    chunk and returns an opaque handle without blocking on the device
+    (with JAX this means returning unmaterialized device arrays);
+    ``collect(handle)`` blocks, materializes, and returns exactly what
+    ``run_rounds`` would have: one ``(returned_flags, q_values,
+    metrics)`` tuple per round. The contract is
+    ``collect(dispatch_rounds(*a)) == run_rounds(*a)`` bit-for-bit —
+    ``fl.simulation.DeviceFLSim`` implements ``run_rounds`` as exactly
+    that composition.
+
+    Handles must tolerate interleaving: between a task's
+    ``dispatch_rounds`` and its ``collect``, other trainers (other
+    tasks) may dispatch and collect their own chunks.
+    """
+
+    def dispatch_rounds(self, start_round: int,
+                        subsets: Sequence[Sequence[int]],
+                        weights: Sequence[np.ndarray]) -> Any: ...
+
+    def collect(self, handle: Any
+                ) -> list[tuple[np.ndarray, np.ndarray, dict]]: ...
 
 
 class single_round_adapter:
@@ -171,6 +222,33 @@ def resolve_trainer(trainer) -> Trainer:
 def _chunk_size(task: TaskRequest, trainer: Trainer) -> int:
     return max(1, int(task.round_chunk)) \
         if getattr(trainer, "chunkable", True) else 1
+
+
+class InFlightError(RuntimeError):
+    """Raised when an operation that needs a settled :class:`TaskState`
+    (serialization, a fresh dispatch) meets an un-collected in-flight
+    chunk. Call :func:`collect` first, or ``save_state(..., flush=True)``."""
+
+
+@dataclasses.dataclass
+class PendingChunk:
+    """An in-flight TRAINING chunk: everything :func:`collect` needs to
+    turn the trainer's handle into :class:`RoundEvent` s.
+
+    ``handle`` is whatever ``AsyncTrainer.dispatch_rounds`` returned
+    (unmaterialized device arrays), or — for a plain sync
+    :class:`Trainer` — the already-computed ``run_rounds`` result list
+    (``sync=True``). Transient by design: never serialized
+    (``TaskState.to_arrays`` refuses while one is pending).
+    """
+
+    trainer: Trainer
+    handle: Any
+    chunk: list[list[int]]          # the dispatched subsets
+    ws: list[np.ndarray]            # their FedAvg weights
+    t: int                          # subset_index at dispatch time
+    stop_fn: Callable[[dict], bool] | None
+    sync: bool                      # handle already holds results
 
 
 # ---------------------------------------------------------------------------
@@ -220,6 +298,9 @@ class TaskState:
     # tombstone-reactivating rejoins are seen too)
     rounds: list[RoundEvent] = dataclasses.field(default_factory=list)
     schedules: list[ScheduleResult] = dataclasses.field(default_factory=list)
+    pending: PendingChunk | None = None        # in-flight dispatched chunk
+    # (transient — set by dispatch(), cleared by collect(), never
+    # serialized; to_arrays() refuses while one is outstanding)
 
     def __post_init__(self):
         if self.rng is None:
@@ -235,7 +316,18 @@ class TaskState:
     # -- serialization -------------------------------------------------------
     def to_arrays(self) -> dict[str, np.ndarray]:
         """Flat ``{key: numpy array}`` form of the control state, ready
-        for ``repro.checkpoint.save`` (msgpack; no pickle anywhere)."""
+        for ``repro.checkpoint.save`` (msgpack; no pickle anywhere).
+
+        Raises :class:`InFlightError` while a dispatched chunk is
+        pending — device handles are not serializable, so an in-flight
+        state must be settled first (``lifecycle.collect(state)``, or
+        ``save_state(..., flush=True)`` which does it for you).
+        """
+        if self.pending is not None:
+            raise InFlightError(
+                "TaskState has an in-flight dispatched chunk; call "
+                "lifecycle.collect(state) (or save_state(..., flush=True)) "
+                "before serializing")
         a: dict[str, np.ndarray] = {}
         t = self.task
         a["format"] = np.array([_STATE_FORMAT], dtype=np.int64)
@@ -395,11 +487,26 @@ def _decode_schedule(a: Mapping[str, np.ndarray]) -> ScheduleResult:
                           np.asarray(a["capacities"], dtype=np.float64))
 
 
-def save_state(path: str, state: TaskState) -> None:
+def save_state(path: str, state: TaskState,
+               flush: bool = False) -> list[RoundEvent]:
     """Serialize ``state`` through the repo checkpoint path (msgpack,
-    zstd when available)."""
+    zstd when available).
+
+    A state captured between :func:`dispatch` and :func:`collect` holds
+    unmaterialized device arrays and cannot be serialized as-is:
+    ``flush=False`` (default) raises :class:`InFlightError`;
+    ``flush=True`` collects the pending chunk first (blocking on the
+    device) and returns its :class:`RoundEvent` s — they are also
+    appended to ``state.rounds``, so a caller that streams events should
+    take them from the return value exactly once. Returns ``[]`` when
+    nothing was in flight.
+    """
     from repro import checkpoint
+    events: list[RoundEvent] = []
+    if state.pending is not None and flush:
+        _, events = collect(state)
     checkpoint.save(path, state.to_arrays())
+    return events
 
 
 def load_state(path: str) -> TaskState:
@@ -413,9 +520,18 @@ def load_state(path: str) -> TaskState:
 # ---------------------------------------------------------------------------
 
 def submit(provider, task: TaskRequest, method: str = "greedy") -> TaskState:
-    """Task intake + stage 1: returns a POOL_SELECTED (or INFEASIBLE)
-    state. ``provider`` is an ``FLServiceProvider``; ``method`` picks the
-    stage-1 knapsack ("greedy" | "dp" | "random")."""
+    """Task intake + stage 1 (paper Eq. 8): select the task's client
+    pool from the provider's shared registry under the budget,
+    ``n_star`` and per-criterion thresholds, and return the resulting
+    :class:`TaskState` — POOL_SELECTED on success, INFEASIBLE when the
+    budget/thresholds cannot seat ``n_star`` clients (then the state is
+    terminal and :func:`step` is a no-op).
+
+    ``provider`` is an ``FLServiceProvider``; ``method`` picks the
+    stage-1 knapsack ("greedy" | "dp" | "random"). For many concurrent
+    tasks, prefer ``ServiceScheduler.submit`` — its intake batches all
+    queued tasks through one vectorized knapsack sweep.
+    """
     state = TaskState(task=task)
     sel = provider.select_pool(task, method=method, rng=state.rng)
     return apply_pool_selection(provider, state, sel)
@@ -457,7 +573,13 @@ def step(provider, state: TaskState, trainer,
     (wrapped via :func:`single_round_adapter`); ``availability_fn`` /
     ``stop_fn`` keep their ``run_task`` semantics. The state is mutated
     in place and also returned.
+
+    A SCHEDULED/TRAINING step is exactly :func:`dispatch` followed by
+    :func:`collect`; stepping a state that already has an in-flight
+    chunk simply collects it (finishing the half-done transition).
     """
+    if state.pending is not None:
+        return collect(state)
     if state.phase.terminal:
         return state, []
     if state.phase == TaskPhase.INTAKE:
@@ -466,10 +588,62 @@ def step(provider, state: TaskState, trainer,
     if state.phase == TaskPhase.POOL_SELECTED:
         return _schedule_next_period(provider, state), []
     if state.phase in (TaskPhase.SCHEDULED, TaskPhase.TRAINING):
-        return _train_chunk(provider, state, resolve_trainer(trainer),
-                            stop_fn)
+        dispatch(provider, state, trainer, stop_fn=stop_fn)
+        return collect(state)
     # PERIOD_CHECKPOINT
     return _period_checkpoint(provider, state, availability_fn), []
+
+
+def dispatch(provider, state: TaskState, trainer,
+             stop_fn: Callable[[dict], bool] | None = None) -> TaskState:
+    """Asynchronous half of a TRAINING transition: *enqueue* the next
+    round chunk without waiting for its results.
+
+    Valid on SCHEDULED/TRAINING states only (terminal states are
+    no-ops). If the period is already exhausted (or ``max_rounds`` /
+    ``stop`` fired) this performs the host-side phase advance to
+    PERIOD_CHECKPOINT and leaves nothing in flight; otherwise it
+    computes the chunk's subsets/weights on the host, hands them to the
+    trainer — ``AsyncTrainer.dispatch_rounds`` enqueues and returns
+    immediately; a plain :class:`Trainer` runs eagerly as a sync
+    fallback — and parks the handle on ``state.pending``.
+
+    Until :func:`collect` settles the chunk, the state is *in flight*:
+    ``to_arrays``/``save_state`` refuse it and a second ``dispatch``
+    raises :class:`InFlightError`. :class:`ServiceScheduler` uses this
+    split to enqueue every runnable task's chunk back-to-back, so task
+    B's device work overlaps task A's (JAX async dispatch), then
+    collects in completion order.
+    """
+    if state.pending is not None:
+        raise InFlightError("a chunk is already in flight for this task; "
+                            "collect() it before dispatching another")
+    if state.phase.terminal:
+        return state
+    if state.phase not in (TaskPhase.SCHEDULED, TaskPhase.TRAINING):
+        raise ValueError(f"dispatch needs a SCHEDULED/TRAINING state, "
+                         f"got {state.phase.name}")
+    return _dispatch_chunk(provider, state, resolve_trainer(trainer),
+                           stop_fn)
+
+
+def collect(state: TaskState) -> tuple[TaskState, list[RoundEvent]]:
+    """Blocking half of a TRAINING transition: materialize the in-flight
+    chunk into :class:`RoundEvent` s and advance the phase.
+
+    Needs no provider — everything host-side was captured at
+    :func:`dispatch` time. Settles reputation bookkeeping, appends the
+    events to ``state.rounds``, advances ``subset_index`` /
+    ``global_round``, runs ``stop_fn`` per round, and moves the phase to
+    TRAINING or PERIOD_CHECKPOINT exactly as the blocking step did.
+    A state with nothing in flight is a no-op returning ``[]``.
+    """
+    p = state.pending
+    if p is None:
+        return state, []
+    results = p.handle if p.sync else p.trainer.collect(p.handle)
+    state.pending = None
+    return _settle_chunk(state, p, results)
 
 
 def drain(provider, state: TaskState, trainer,
@@ -479,7 +653,10 @@ def drain(provider, state: TaskState, trainer,
           ) -> tuple[TaskState, list[RoundEvent]]:
     """Step until the task reaches DONE/INFEASIBLE (the convenience
     loop ``run_task`` shims over). Returns the final state and every
-    event produced along the way."""
+    :class:`RoundEvent` produced along the way; ``max_steps`` bounds
+    the loop for callers that want to pause mid-task (the state can be
+    resumed by another ``drain``/``step``, checkpointed via
+    :func:`save_state`, or handed to ``ServiceScheduler.adopt``)."""
     events: list[RoundEvent] = []
     steps = 0
     while not state.phase.terminal:
@@ -533,20 +710,22 @@ def _schedule_next_period(provider, state: TaskState) -> TaskState:
     return state
 
 
-def _train_chunk(provider, state: TaskState, trainer: Trainer,
-                 stop_fn) -> tuple[TaskState, list[RoundEvent]]:
+def _dispatch_chunk(provider, state: TaskState, trainer: Trainer,
+                    stop_fn) -> TaskState:
+    """Host half of the TRAINING transition: pick the chunk, compute its
+    weights, hand it to the trainer, park the handle on ``pending``."""
     task, sched = state.task, state.schedule
     t = state.subset_index
     if sched is None or t >= len(sched.subsets) or state.stop:
         state.phase = TaskPhase.PERIOD_CHECKPOINT   # defensive guard
-        return state, []
+        return state
     limit = _chunk_size(task, trainer)
     if task.max_rounds is not None:
         remaining = task.max_rounds - state.global_round
         if remaining <= 0:
             state.stop = True
             state.phase = TaskPhase.PERIOD_CHECKPOINT
-            return state, []
+            return state
         limit = min(limit, remaining)
     chunk = sched.subsets[t: t + limit]
     data_sizes = provider.pool_state.data_sizes()
@@ -559,22 +738,38 @@ def _train_chunk(provider, state: TaskState, trainer: Trainer,
                                              include_deregistered=True)
         sizes = data_sizes[rows]
         ws.append(sizes / np.maximum(sizes.sum(), 1e-12))
-    results = trainer.run_rounds(state.global_round, chunk, ws)
+    if isinstance(trainer, AsyncTrainer):
+        handle = trainer.dispatch_rounds(state.global_round, chunk, ws)
+        sync = False
+    else:                                           # eager sync fallback
+        handle = trainer.run_rounds(state.global_round, chunk, ws)
+        sync = True
+    state.pending = PendingChunk(trainer, handle, chunk, ws, t, stop_fn,
+                                 sync)
+    state.phase = TaskPhase.TRAINING                # mid-period, in flight
+    return state
+
+
+def _settle_chunk(state: TaskState, p: PendingChunk, results
+                  ) -> tuple[TaskState, list[RoundEvent]]:
+    """Bookkeeping half of the TRAINING transition, shared by the
+    blocking step and the overlapped collect path."""
+    sched, t = state.schedule, p.t
     events: list[RoundEvent] = []
     for j, (returned, q_vals, metrics) in enumerate(results):
-        subset = chunk[j]
+        subset = p.chunk[j]
         for i, cid in enumerate(subset):
             state.tracker.record_round(cid, bool(returned[i]),
                                        q_value=float(q_vals[i]))
         ev = RoundEvent(state.period, state.global_round, list(subset),
-                        ws[j], sched.nids[t + j], metrics)
+                        p.ws[j], sched.nids[t + j], metrics)
         state.rounds.append(ev)
         events.append(ev)
         state.global_round += 1
-        if stop_fn is not None and stop_fn(metrics):
+        if p.stop_fn is not None and p.stop_fn(metrics):
             state.stop = True
             break
-    state.subset_index = t + len(chunk)
+    state.subset_index = t + len(p.chunk)
     state.phase = TaskPhase.TRAINING
     if state.stop or state.subset_index >= len(sched.subsets):
         state.phase = TaskPhase.PERIOD_CHECKPOINT
@@ -662,21 +857,54 @@ class ServiceScheduler:
     ``submit`` queues a task in INTAKE; each ``sweep`` first serves every
     queued intake through the provider's *batched* stage 1
     (``select_pools_batch`` — one vectorized knapsack sweep for all new
-    tasks), then round-robins :func:`step` across the active tasks, so
-    trainer dispatches from different tasks interleave. Per-task results
-    are identical to serial execution: each task owns its rng,
+    tasks), then pumps every active task one transition. Per-task
+    results are identical to serial execution: each task owns its rng,
     reputation arrays and cursors, and the shared pool is only read by
     selection/scheduling.
+
+    With ``overlap=True`` (the default) a sweep is a **two-phase pump**
+    over the dispatch/collect split of the TRAINING transition: phase 1
+    fills a bounded in-flight window by *enqueueing* runnable tasks'
+    round chunks (:func:`dispatch` — task B's device work is in the
+    queue while task A's still computes, courtesy of JAX async
+    dispatch); phase 2 :func:`collect` s the window in completion order
+    (on a single device the FIFO execution stream makes dispatch order
+    completion order), and each collected task is immediately pumped
+    back into flight — its host-only transitions (POOL_SELECTED
+    scheduling, PERIOD_CHECKPOINT reputation/churn sync) and its next
+    enqueue run while the rest of the window is still computing, so the
+    device never idles behind host bookkeeping and vice versa.
+    ``max_inflight`` bounds how many un-collected chunks may be
+    outstanding at once, so host/device memory for pending handles
+    stays flat no matter how many tenants are served; when tenants
+    outnumber the window, a FIFO ready queue rotates them through it
+    (each sweep still collects at most one chunk per task, so round
+    pacing across tasks stays fair). ``overlap=False`` restores the
+    ISSUE-3 round-robin behaviour (one blocking :func:`step` per task
+    per sweep); both modes produce bit-identical per-task results,
+    overlapped is just faster (benchmarks/bench_service_multitask.py).
+    The one observable difference: overlapped dispatches are issued one
+    sweep early, so shared-pool churn between sweeps lands one chunk
+    later than under round-robin stepping.
 
     A continuously serving provider should :meth:`retire` finished
     tasks; completed tenants are otherwise retained (with their full
     round histories) so ``results()`` stays available.
     """
 
-    def __init__(self, provider):
+    def __init__(self, provider, max_inflight: int = 8,
+                 overlap: bool = True):
+        if max_inflight < 1:
+            raise ValueError(f"max_inflight must be >= 1, got "
+                             f"{max_inflight}")
         self.provider = provider
+        self.max_inflight = max_inflight
+        self.overlap = overlap
         self._tenants: dict[int, _Tenant] = {}
         self._next_id = 0
+        self._inflight: list[int] = []   # FIFO: tids with a chunk in flight
+        self._ready: list[int] = []      # FIFO: dispatchable, waiting for
+        # a window slot (only populated when tenants outnumber the window)
 
     # -- intake --------------------------------------------------------------
     def submit(self, task: TaskRequest, trainer,
@@ -726,19 +954,84 @@ class ServiceScheduler:
         return self._tenants[tid].state
 
     def sweep(self) -> dict[int, list[RoundEvent]]:
-        """One scheduler tick: batched intake, then one :func:`step` per
-        active task (round-robin). Returns the events per task id."""
+        """One scheduler tick: batched intake, then one transition per
+        active task. Returns the events per task id, in the order the
+        tasks' chunks were collected.
+
+        Overlapped mode (see the class docstring) dispatches every
+        runnable task's chunk before collecting any of them, interleaves
+        host-only transitions into the gaps, and keeps at most
+        ``max_inflight`` chunks outstanding. Per-task event streams are
+        identical to ``overlap=False``; only wall-clock differs.
+        """
         self._intake()
         out: dict[int, list[RoundEvent]] = {}
-        for tid, t in self._tenants.items():
-            if t.state.phase.terminal:
-                continue
-            t.state, ev = step(self.provider, t.state, t.trainer,
-                               availability_fn=t.availability_fn,
-                               stop_fn=t.stop_fn)
+        if not self.overlap:                       # ISSUE-3 round-robin
+            for tid, t in self._tenants.items():
+                if t.state.phase.terminal:
+                    continue
+                t.state, ev = step(self.provider, t.state, t.trainer,
+                                   availability_fn=t.availability_fn,
+                                   stop_fn=t.stop_fn)
+                if ev:
+                    out[tid] = ev
+            return out
+
+        # refresh the ready queue with newly runnable tenants (fresh
+        # intakes, adoptions, tasks bumped while the window was full)
+        queued = set(self._inflight) | set(self._ready)
+        self._ready.extend(tid for tid, t in self._tenants.items()
+                           if not t.state.phase.terminal
+                           and tid not in queued)
+        # phase 1: fill the in-flight window (cold start / new tenants;
+        # in steady state the window was already refilled by phase 2 of
+        # the previous sweep, so every chunk computed between sweeps)
+        while self._ready and len(self._inflight) < self.max_inflight:
+            self._pump_into_flight(self._ready.pop(0))
+        # phase 2: collect this sweep's window in completion order (one
+        # device ⇒ FIFO execution ⇒ dispatch order). After each collect
+        # the task goes to the back of the ready queue and the freed
+        # slot is refilled at once — the refill runs the task's
+        # host-only transitions (PERIOD_CHECKPOINT reputation/churn
+        # sync, POOL_SELECTED scheduling) and enqueues its next chunk
+        # while the rest of the window is still computing, which is
+        # where the overlap comes from.
+        for _ in range(len(self._inflight)):
+            tid = self._inflight.pop(0)
+            t = self._tenants[tid]
+            t.state, ev = collect(t.state)
             if ev:
-                out[tid] = ev
+                out.setdefault(tid, []).extend(ev)
+            if not t.state.phase.terminal:
+                self._ready.append(tid)
+            while self._ready and len(self._inflight) < self.max_inflight:
+                self._pump_into_flight(self._ready.pop(0))
         return out
+
+    def _pump_into_flight(self, tid: int) -> None:
+        """Advance ``tid`` until a chunk is in flight or the task is
+        terminal: host-only transitions run inline (overlapping whatever
+        is already enqueued), then :func:`dispatch`. A dispatch guard
+        (period exhausted, ``max_rounds``/``stop`` hit) advances the
+        phase host-side and the loop continues — mirroring what
+        :func:`drain` does, minus the blocking collect."""
+        t = self._tenants[tid]
+        while not t.state.phase.terminal:
+            if t.state.pending is not None:
+                # already in flight (e.g. a state the caller dispatched
+                # before adopt()): track it, don't re-dispatch
+                self._inflight.append(tid)
+                return
+            if t.state.phase in (TaskPhase.SCHEDULED, TaskPhase.TRAINING):
+                dispatch(self.provider, t.state, t.trainer,
+                         stop_fn=t.stop_fn)
+                if t.state.pending is not None:
+                    self._inflight.append(tid)
+                    return
+            else:               # POOL_SELECTED / PERIOD_CHECKPOINT
+                t.state, _ = step(self.provider, t.state, t.trainer,
+                                  availability_fn=t.availability_fn,
+                                  stop_fn=t.stop_fn)
 
     def run(self, max_sweeps: int = 1_000_000
             ) -> dict[int, ServiceRunResult]:

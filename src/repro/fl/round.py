@@ -14,8 +14,14 @@
   quality kernel (kernels.fedavg_agg_quality: one pass over the stacked
   deltas yields Δ_t and every q_t cosine), and ``donate_argnums`` on
   the params so the server state never round-trips the host. A host
-  checkpoint between chunks (core.service.run_task with round_chunk>1)
-  handles stop_fn/eval/reputation.
+  checkpoint between chunks (core.lifecycle with round_chunk>1) handles
+  stop_fn/eval/reputation. ``chunk_fn`` is also the unit of *overlap*
+  in the multi-tenant service: a jit'd call returns unmaterialized
+  device arrays immediately (JAX async dispatch), so
+  ``DeviceFLSim.dispatch_rounds`` can enqueue one task's chunk while
+  another task's still computes — never force a result (``np.asarray``
+  / ``float`` / ``block_until_ready``) inside this module; callers
+  decide when to block (``collect``).
 
 - ``make_fedsgd_step``: datacenter-scale one-local-step equivalent —
   per-client weights fold into the loss so a single data-parallel

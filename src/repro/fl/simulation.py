@@ -10,13 +10,17 @@ Two trainers implement the explicit ``core.lifecycle.Trainer`` protocol
   round assembles client batches on the host (numpy fancy-indexing per
   client) and ships them to the device, one dispatch per round
   (``run_rounds`` loops internally, so chunked schedules work but gain
-  nothing). Kept as the equivalence/benchmark baseline.
+  nothing). Kept as the equivalence/benchmark baseline; a plain *sync*
+  ``Trainer``, exercising the lifecycle's eager dispatch fallback.
 - :class:`DeviceFLSim` — the device-resident data plane: the partitioned
   dataset is staged on device once (fl.device_data.DeviceDataset) and
   ``run_rounds`` drives S rounds per dispatch through the chunked
   ``lax.scan`` driver (fl.round.make_fl_rounds_scan) with on-device
   batch gather, dropout masks, and the fused aggregation+quality pass.
-  Driven with ``TaskRequest.round_chunk > 1`` rounds per dispatch.
+  Driven with ``TaskRequest.round_chunk > 1`` rounds per dispatch. An
+  ``AsyncTrainer``: ``dispatch_rounds`` enqueues the chunk and returns
+  unmaterialized device arrays, ``collect`` blocks — the overlapped
+  ``ServiceScheduler`` keeps many tasks' chunks in flight at once.
 
 Both trainers draw batch positions and dropout from the same
 slot-keyed PRNG stream (fl.device_data.sample_positions), so with equal
@@ -93,18 +97,31 @@ class _EvalCache:
         self._eval_rng = np.random.default_rng(sim.seed)
         self.history: list[dict] = []
 
-    def evaluate(self, n: int = 1024) -> float:
+    def _enqueue_eval(self, params, n: int = 1024):
+        """Enqueue an accuracy evaluation of ``params`` on the cached
+        device test set; returns the *unmaterialized* device scalar (the
+        caller decides when to block). Consumes one draw from the eval
+        rng stream, so enqueue order must match record order."""
         m = len(self._test_labels)
         idx = jnp.asarray(self._eval_rng.choice(m, size=min(n, m),
                                                 replace=False))
-        return float(self._eval_fn(self.params,
-                                   jnp.take(self._test_images, idx, axis=0),
-                                   jnp.take(self._test_labels, idx, axis=0)))
+        return self._eval_fn(params,
+                             jnp.take(self._test_images, idx, axis=0),
+                             jnp.take(self._test_labels, idx, axis=0))
 
-    def _record(self, rnd: int, loss) -> dict:
+    def evaluate(self, n: int = 1024) -> float:
+        """Accuracy of the current params on a sampled test subset
+        (blocking)."""
+        return float(self._enqueue_eval(self.params, n))
+
+    def _record(self, rnd: int, loss, accuracy=None) -> dict:
+        """Append round ``rnd`` to ``history``. Eval rounds take their
+        accuracy from ``accuracy`` when the caller already enqueued the
+        evaluation (the async collect path), else evaluate now."""
         metrics = {"round": rnd, "loss": float(loss)}
         if rnd % self.sim.eval_every == 0:
-            metrics["accuracy"] = self.evaluate()
+            metrics["accuracy"] = (self.evaluate() if accuracy is None
+                                   else float(accuracy))
         self.history.append(metrics)
         return metrics
 
@@ -184,9 +201,12 @@ class FLClassificationSim(_EvalCache):
 class DeviceFLSim(_EvalCache):
     """Device-resident trainer: staged dataset + chunked scan driver.
 
-    Implements the ``core.lifecycle.Trainer`` protocol (chunked
-    ``run_rounds``, driven with ``task.round_chunk > 1``) plus the
-    legacy per-round callable form (``__call__``).
+    Implements the ``core.lifecycle.AsyncTrainer`` protocol — the
+    chunked ``run_rounds`` (driven with ``task.round_chunk > 1``) splits
+    into ``dispatch_rounds`` (enqueue only, returns unmaterialized
+    device arrays) and ``collect`` (block + bookkeeping), which lets the
+    ``ServiceScheduler`` overlap this task's device work with other
+    tasks' — plus the legacy per-round callable form (``__call__``).
 
     Subsets sized n±δ share one static client axis K per dispatch
     (padding is semantics-free thanks to slot-keyed randomness), and a
@@ -259,13 +279,19 @@ class DeviceFLSim(_EvalCache):
             i = cut[i]
         return lengths[::-1]
 
-    # -- chunked trainer protocol -------------------------------------------
-    def run_rounds(self, start_round: int, subsets: Sequence[Sequence[int]],
-                   weights: Sequence[np.ndarray]) -> list[tuple]:
-        """Run ``len(subsets)`` consecutive rounds, splitting the chunk
-        after every eval round (so accuracies use that round's params)
-        and per the padding-vs-dispatch-cost DP (``_segment``)."""
-        out = []
+    # -- async trainer protocol (core.lifecycle.AsyncTrainer) ----------------
+    def dispatch_rounds(self, start_round: int,
+                        subsets: Sequence[Sequence[int]],
+                        weights: Sequence[np.ndarray]) -> list[tuple]:
+        """Enqueue ``len(subsets)`` consecutive rounds WITHOUT blocking
+        on the device: every segment's ``chunk_fn`` call (and, for
+        segments ending at an eval round, its accuracy evaluation) is
+        dispatched back-to-back, and the returned handle holds only
+        unmaterialized device arrays. Chunks are split after every eval
+        round (so accuracies use that round's params) and per the
+        padding-vs-dispatch-cost DP (``_segment``), exactly like the
+        blocking path — ``run_rounds`` is ``collect`` of this."""
+        handles = []
         seg_start = 0
         for e in range(len(subsets)):
             if (start_round + e) % self.sim.eval_every == 0 \
@@ -273,17 +299,46 @@ class DeviceFLSim(_EvalCache):
                 block = subsets[seg_start:e + 1]
                 r = start_round + seg_start
                 for length in self._segment([len(s) for s in block]):
-                    out += self._dispatch_rounds(
+                    handles.append(self._enqueue_segment(
                         r, subsets[seg_start:seg_start + length],
-                        weights[seg_start:seg_start + length])
+                        weights[seg_start:seg_start + length]))
                     r += length
                     seg_start += length
+        return handles
+
+    def collect(self, handles: list[tuple]) -> list[tuple]:
+        """Materialize a ``dispatch_rounds`` handle: block on each
+        segment's device arrays in dispatch order and emit the per-round
+        ``(returned, q_values, metrics)`` tuples + history records."""
+        out = []
+        for start_round, subsets, info, eval_acc in handles:
+            masks = np.asarray(info["masks"])
+            qs = np.asarray(info["q_values"])
+            losses = np.asarray(info["mean_loss"])
+            for t, subset in enumerate(subsets):
+                k = len(subset)
+                # only a segment's final round can be an eval round (the
+                # split above guarantees it), so eval_acc is unambiguous
+                metrics = self._record(start_round + t, losses[t],
+                                       accuracy=eval_acc)
+                out.append((masks[t, :k] > 0, qs[t, :k], metrics))
         return out
 
-    def _dispatch_rounds(self, start_round: int,
+    def run_rounds(self, start_round: int, subsets: Sequence[Sequence[int]],
+                   weights: Sequence[np.ndarray]) -> list[tuple]:
+        """Blocking chunk execution: enqueue everything, then collect."""
+        return self.collect(self.dispatch_rounds(start_round, subsets,
+                                                 weights))
+
+    def _enqueue_segment(self, start_round: int,
                          subsets: Sequence[Sequence[int]],
-                         weights: Sequence[np.ndarray]) -> list[tuple]:
-        """One device dispatch for ``len(subsets)`` consecutive rounds."""
+                         weights: Sequence[np.ndarray]) -> tuple:
+        """One device dispatch for ``len(subsets)`` consecutive rounds;
+        returns ``(start_round, subsets, info, eval_acc)`` with ``info``
+        (and ``eval_acc``, when the segment ends at an eval round) still
+        on device. The eval is enqueued *here*, against this segment's
+        output params, because the next segment's dispatch donates that
+        buffer (``chunk_fn`` has ``donate_argnums=(0,)``)."""
         S = len(subsets)
         K = self._k_pad(max(len(s) for s in subsets))
         rows = np.zeros((S, K), dtype=np.int32)
@@ -300,15 +355,10 @@ class DeviceFLSim(_EvalCache):
                         start_round + np.arange(S, dtype=np.int32))}
         self.params, info = self.chunk_fn(self.params, self.data, schedule,
                                           self.base_key)
-        masks = np.asarray(info["masks"])
-        qs = np.asarray(info["q_values"])
-        losses = np.asarray(info["mean_loss"])
-        out = []
-        for t, subset in enumerate(subsets):
-            k = len(subset)
-            metrics = self._record(start_round + t, losses[t])
-            out.append((masks[t, :k] > 0, qs[t, :k], metrics))
-        return out
+        eval_acc = None
+        if (start_round + S - 1) % self.sim.eval_every == 0:
+            eval_acc = self._enqueue_eval(self.params)
+        return start_round, list(subsets), info, eval_acc
 
     # -- per-round TrainerFn protocol (round_chunk == 1) ---------------------
     def __call__(self, rnd: int, subset, weights) -> tuple:

@@ -231,6 +231,66 @@ class TestEmptyPoolClient:
         assert q[1] == 0.0
 
 
+class TestAsyncDispatch:
+    """ISSUE-4: DeviceFLSim's dispatch_rounds/collect split must be
+    bit-identical to blocking run_rounds, including with interleaved
+    dispatches from another task's trainer in between (the overlapped
+    ServiceScheduler pattern)."""
+
+    def _sim(self, seed):
+        d = make_classification_data("mnist", 400, seed=2)
+        parts = partition_labels(d.labels, 6, "type1", 10, seed=2)
+        test = make_classification_data("mnist", 120, seed=3)
+        sim = SimConfig(batch_size=4, local_steps=1, eval_every=2,
+                        dropout_rate=0.0, seed=seed)
+        return DeviceFLSim(cnn.MNIST_CNN, d, parts, test, sim)
+
+    def test_interleaved_dispatch_matches_blocking(self):
+        subsets = [[0, 1], [2, 3], [4, 5], [0, 2]]
+        weights = [np.full(2, 0.5) for _ in subsets]
+
+        ref_a = self._sim(0)
+        out_ref_a = ref_a.run_rounds(0, subsets, weights)
+        ref_b = self._sim(7)
+        out_ref_b = ref_b.run_rounds(0, subsets, weights)
+
+        # overlapped: enqueue task A's chunk, then task B's, collect in
+        # dispatch order — nothing may depend on when collect happens
+        sim_a, sim_b = self._sim(0), self._sim(7)
+        ha = sim_a.dispatch_rounds(0, subsets, weights)
+        hb = sim_b.dispatch_rounds(0, subsets, weights)
+        out_a = sim_a.collect(ha)
+        out_b = sim_b.collect(hb)
+
+        for got, ref in ((out_a, out_ref_a), (out_b, out_ref_b)):
+            assert len(got) == len(ref)
+            for (ra, qa, ma), (rb, qb, mb) in zip(got, ref):
+                np.testing.assert_array_equal(ra, rb)
+                np.testing.assert_array_equal(qa, qb)
+                assert ma == mb               # includes eval accuracies
+        assert sim_a.history == ref_a.history
+        assert sim_b.history == ref_b.history
+
+    def test_eval_rounds_enqueue_with_their_params(self):
+        # eval accuracy must come from the params at the eval round even
+        # though later dispatches (which donate the param buffers) are
+        # enqueued before collect runs
+        subsets = [[0, 1], [2, 3]]
+        weights = [np.full(2, 0.5) for _ in subsets]
+        sim = self._sim(0)
+        h1 = sim.dispatch_rounds(0, subsets, weights)      # evals round 0
+        h2 = sim.dispatch_rounds(2, subsets, weights)      # evals round 2
+        out = sim.collect(h1) + sim.collect(h2)
+        accs = {m["round"]: m["accuracy"] for _, _, m in out
+                if "accuracy" in m}
+        ref = self._sim(0)
+        ref_out = ref.run_rounds(0, subsets, weights) + \
+            ref.run_rounds(2, subsets, weights)
+        ref_accs = {m["round"]: m["accuracy"] for _, _, m in ref_out
+                    if "accuracy" in m}
+        assert accs == ref_accs and set(accs) == {0, 2}
+
+
 class TestEvalAlignment:
     def test_mid_chunk_eval_uses_that_rounds_params(self):
         """Chunked and per-round drivers must report identical accuracy

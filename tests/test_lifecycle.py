@@ -9,9 +9,10 @@ import warnings
 import numpy as np
 import pytest
 
-from repro.core import (FLServiceProvider, ReputationTracker, ServiceScheduler,
-                        TaskPhase, TaskRequest, TaskState, Trainer,
-                        apply_pool_selection, as_run_result, drain, load_state,
+from repro.core import (AsyncTrainer, FLServiceProvider, InFlightError,
+                        ReputationTracker, ServiceScheduler, TaskPhase,
+                        TaskRequest, TaskState, Trainer, apply_pool_selection,
+                        as_run_result, collect, dispatch, drain, load_state,
                         random_profiles, resolve_trainer, save_state,
                         single_round_adapter, step, submit)
 from repro.core.pool import ClientPoolState
@@ -43,6 +44,35 @@ class ChunkStub:
 
     def __call__(self, rnd, subset, weights):
         return self.run_rounds(rnd, [subset], [weights])[0]
+
+
+class AsyncChunkStub:
+    """Deterministic ``AsyncTrainer``: ``dispatch_rounds`` returns a lazy
+    handle (nothing computed), ``collect`` materializes. A shared
+    ``recorder`` dict tracks how many handles are outstanding across all
+    trainer instances (the scheduler's in-flight window)."""
+
+    chunkable = True
+
+    def __init__(self, recorder: dict | None = None):
+        self.recorder = recorder if recorder is not None else {
+            "inflight": 0, "max_inflight": 0}
+
+    def dispatch_rounds(self, start_round, subsets, weights):
+        r = self.recorder
+        r["inflight"] += 1
+        r["max_inflight"] = max(r["max_inflight"], r["inflight"])
+        return (start_round, [list(s) for s in subsets])
+
+    def collect(self, handle):
+        self.recorder["inflight"] -= 1
+        start_round, subsets = handle
+        return [_round_result(start_round + j, s)
+                for j, s in enumerate(subsets)]
+
+    def run_rounds(self, start_round, subsets, weights):
+        return self.collect(self.dispatch_rounds(start_round, subsets,
+                                                 weights))
 
 
 def _profiles(n=60, seed=0):
@@ -270,6 +300,194 @@ class TestCheckpointResume:
 
 
 # ---------------------------------------------------------------------------
+# ISSUE-4: the dispatch/collect split of the TRAINING transition
+# ---------------------------------------------------------------------------
+
+class TestDispatchCollect:
+    def _task(self, **kw):
+        kw.setdefault("budget", 400.0)
+        kw.setdefault("n_star", 10)
+        kw.setdefault("subset_size", 5)
+        kw.setdefault("subset_delta", 2)
+        kw.setdefault("max_periods", 3)
+        kw.setdefault("seed", 3)
+        return TaskRequest(**kw)
+
+    def test_async_stub_is_async_trainer(self):
+        assert isinstance(AsyncChunkStub(), AsyncTrainer)
+        assert isinstance(AsyncChunkStub(), Trainer)
+        assert not isinstance(ChunkStub(), AsyncTrainer)   # sync fallback
+
+    @pytest.mark.parametrize("trainer_cls", [ChunkStub, AsyncChunkStub])
+    def test_dispatch_collect_equals_step(self, trainer_cls):
+        profiles = _profiles()
+        task = self._task(round_chunk=2)
+        ref_sp = FLServiceProvider(profiles)
+        ref = submit(ref_sp, task)
+        ref, ref_events = drain(ref_sp, ref, trainer_cls())
+
+        sp = FLServiceProvider(profiles)
+        state = submit(sp, task)
+        trainer = trainer_cls()
+        events = []
+        while not state.phase.terminal:
+            if state.phase in (TaskPhase.SCHEDULED, TaskPhase.TRAINING):
+                state = dispatch(sp, state, trainer)
+                state, ev = collect(state)
+                events.extend(ev)
+            else:
+                state, ev = step(sp, state, trainer)
+                events.extend(ev)
+        assert [(e.period, e.round_index, e.subset) for e in events] == \
+            [(e.period, e.round_index, e.subset) for e in ref_events]
+        assert as_run_result(state).reputation == \
+            as_run_result(ref).reputation
+
+    def test_dispatch_is_lazy_for_async_trainers(self):
+        sp = FLServiceProvider(_profiles())
+        state = submit(sp, self._task())
+        state, _ = step(sp, state, AsyncChunkStub())   # schedule the period
+        rec = {"inflight": 0, "max_inflight": 0}
+        trainer = AsyncChunkStub(rec)
+        state = dispatch(sp, state, trainer)
+        assert state.pending is not None and not state.pending.sync
+        assert rec["inflight"] == 1                    # enqueued, not run
+        assert state.rounds == []                      # nothing settled yet
+        state, ev = collect(state)
+        assert rec["inflight"] == 0 and len(ev) >= 1
+        assert state.pending is None
+
+    def test_sync_trainer_dispatch_runs_eagerly(self):
+        sp = FLServiceProvider(_profiles())
+        state = submit(sp, self._task())
+        state, _ = step(sp, state, ChunkStub())
+        state = dispatch(sp, state, ChunkStub())
+        assert state.pending is not None and state.pending.sync
+        state, ev = collect(state)
+        assert ev and state.pending is None
+
+    def test_double_dispatch_raises(self):
+        sp = FLServiceProvider(_profiles())
+        state = submit(sp, self._task())
+        state, _ = step(sp, state, ChunkStub())
+        state = dispatch(sp, state, ChunkStub())
+        with pytest.raises(InFlightError, match="already in flight"):
+            dispatch(sp, state, ChunkStub())
+        collect(state)                                 # settle for hygiene
+
+    def test_dispatch_wrong_phase_raises(self):
+        sp = FLServiceProvider(_profiles())
+        state = submit(sp, self._task())               # POOL_SELECTED
+        with pytest.raises(ValueError, match="SCHEDULED/TRAINING"):
+            dispatch(sp, state, ChunkStub())
+
+    def test_collect_without_pending_is_noop(self):
+        sp = FLServiceProvider(_profiles())
+        state = submit(sp, self._task())
+        st, ev = collect(state)
+        assert st is state and ev == []
+
+    def test_step_with_pending_collects(self):
+        sp = FLServiceProvider(_profiles())
+        state = submit(sp, self._task())
+        state, _ = step(sp, state, ChunkStub())
+        state = dispatch(sp, state, AsyncChunkStub())
+        state, ev = step(sp, state, AsyncChunkStub())  # finishes the half
+        assert ev and state.pending is None
+
+    def test_dispatch_guard_advances_phase_without_pending(self):
+        # max_rounds already consumed: dispatch performs the host-side
+        # phase advance and leaves nothing in flight
+        sp = FLServiceProvider(_profiles())
+        task = self._task(max_rounds=1, round_chunk=1)
+        state = submit(sp, task)
+        state, _ = step(sp, state, ChunkStub())        # schedule
+        state, _ = step(sp, state, ChunkStub())        # train round 0
+        # precondition: the period has more subsets, so the state is
+        # still mid-period with the round budget exhausted
+        assert state.phase == TaskPhase.TRAINING
+        state = dispatch(sp, state, ChunkStub())
+        assert state.pending is None
+        assert state.phase == TaskPhase.PERIOD_CHECKPOINT
+
+
+# ---------------------------------------------------------------------------
+# ISSUE-4: checkpointing around an in-flight chunk
+# ---------------------------------------------------------------------------
+
+class TestInFlightCheckpoint:
+    def _task(self):
+        return TaskRequest(budget=400.0, n_star=10, subset_size=5,
+                           subset_delta=2, max_periods=3, round_chunk=2,
+                           seed=3)
+
+    def test_to_arrays_refuses_in_flight(self):
+        sp = FLServiceProvider(_profiles())
+        state = submit(sp, self._task())
+        state, _ = step(sp, state, AsyncChunkStub())
+        state = dispatch(sp, state, AsyncChunkStub())
+        with pytest.raises(InFlightError, match="in-flight"):
+            state.to_arrays()
+        state, _ = collect(state)
+        state.to_arrays()                              # settled: fine
+
+    def test_save_state_refuses_in_flight_by_default(self, tmp_path):
+        sp = FLServiceProvider(_profiles())
+        state = submit(sp, self._task())
+        state, _ = step(sp, state, AsyncChunkStub())
+        state = dispatch(sp, state, AsyncChunkStub())
+        path = os.path.join(tmp_path, "inflight.ckpt")
+        with pytest.raises(InFlightError):
+            save_state(path, state)
+        assert not os.path.exists(path)
+        collect(state)
+
+    def test_flush_roundtrips_through_restore_dict(self, tmp_path):
+        """A TaskState captured between dispatch and collect: flush
+        settles the chunk, the checkpoint round-trips through
+        ``checkpoint.restore_dict`` (load_state), and the resumed task
+        reproduces the uninterrupted run exactly."""
+        profiles = _profiles()
+        task = self._task()
+        ref_sp = FLServiceProvider(profiles)
+        ref = submit(ref_sp, task)
+        ref, ref_events = drain(ref_sp, ref, AsyncChunkStub())
+        ref_rep = as_run_result(ref).reputation
+
+        sp = FLServiceProvider(profiles)
+        state = submit(sp, task)
+        pre = []
+        trainer = AsyncChunkStub()
+        # advance into period 1, then stop between dispatch and collect
+        while not (state.phase == TaskPhase.TRAINING and state.period == 1):
+            state, ev = step(sp, state, trainer)
+            pre.extend(ev)
+        state = dispatch(sp, state, trainer)
+        assert state.pending is not None
+        path = os.path.join(tmp_path, "flush.ckpt")
+        flushed = save_state(path, state, flush=True)
+        assert flushed and state.pending is None       # chunk was settled
+        pre.extend(flushed)
+
+        restored = load_state(path)                    # checkpoint.restore_dict
+        assert restored.phase == state.phase
+        assert restored.subset_index == state.subset_index
+        assert restored.global_round == state.global_round
+        sp2 = FLServiceProvider(profiles)              # "fresh process"
+        restored, post = drain(sp2, restored, AsyncChunkStub())
+        got = pre + post
+        assert [(e.period, e.round_index, e.subset) for e in got] == \
+            [(e.period, e.round_index, e.subset) for e in ref_events]
+        assert as_run_result(restored).reputation == ref_rep
+
+    def test_flush_on_settled_state_returns_no_events(self, tmp_path):
+        sp = FLServiceProvider(_profiles())
+        state = submit(sp, self._task())
+        path = os.path.join(tmp_path, "settled.ckpt")
+        assert save_state(path, state, flush=True) == []
+
+
+# ---------------------------------------------------------------------------
 # Multi-tenant ServiceScheduler
 # ---------------------------------------------------------------------------
 
@@ -356,6 +574,123 @@ class TestServiceScheduler:
         assert [(e.round_index, e.subset) for e in pre] + \
             [(e.round_index, e.subset) for e in res.rounds] == \
             [(e.round_index, e.subset) for e in ref_events]
+
+
+# ---------------------------------------------------------------------------
+# ISSUE-4: overlapped two-phase pump
+# ---------------------------------------------------------------------------
+
+class TestOverlappedScheduler:
+    def _tasks(self, T):
+        return [TaskRequest(budget=300.0 + 20 * t, n_star=5, subset_size=4,
+                            subset_delta=2, max_periods=2,
+                            scheduler="mkp" if t % 2 else "random", seed=t)
+                for t in range(T)]
+
+    def _serial(self, profiles, tasks, trainer_factory):
+        out = {}
+        for tid, task in enumerate(tasks):
+            sp = FLServiceProvider(profiles)
+            st = submit(sp, task)
+            st, _ = drain(sp, st, trainer_factory())
+            out[tid] = as_run_result(st)
+        return out
+
+    def test_overlapped_equals_serial_with_async_trainer(self):
+        profiles = _profiles()
+        tasks = self._tasks(8)
+        serial = self._serial(profiles, tasks, AsyncChunkStub)
+        sched = ServiceScheduler(FLServiceProvider(profiles), overlap=True)
+        for task in tasks:
+            sched.submit(task, AsyncChunkStub())
+        conc = sched.run()
+        assert set(conc) == set(serial)
+        for tid in serial:
+            _assert_results_equal(serial[tid], conc[tid],
+                                  order_insensitive_pool=True)
+
+    def test_overlap_modes_agree(self):
+        profiles = _profiles()
+        tasks = self._tasks(6)
+        results = {}
+        for overlap in (False, True):
+            sched = ServiceScheduler(FLServiceProvider(profiles),
+                                     overlap=overlap)
+            for task in tasks:
+                sched.submit(task, AsyncChunkStub())
+            results[overlap] = sched.run()
+        for tid in results[False]:
+            _assert_results_equal(results[False][tid], results[True][tid])
+
+    def test_max_inflight_bounds_outstanding_handles(self):
+        profiles = _profiles()
+        tasks = self._tasks(7)
+        rec = {"inflight": 0, "max_inflight": 0}
+        sched = ServiceScheduler(FLServiceProvider(profiles),
+                                 max_inflight=2, overlap=True)
+        for task in tasks:
+            sched.submit(task, AsyncChunkStub(rec))
+        conc = sched.run()
+        assert rec["max_inflight"] <= 2
+        assert rec["inflight"] == 0                    # fully drained
+        serial = self._serial(profiles, tasks, AsyncChunkStub)
+        for tid in serial:
+            _assert_results_equal(serial[tid], conc[tid],
+                                  order_insensitive_pool=True)
+
+    def test_window_rotation_interleaves_all_tasks(self):
+        # 6 tenants through a 2-slot window: every task must still train
+        # before any task completes its full run (FIFO rotation, no
+        # starvation)
+        sched = ServiceScheduler(FLServiceProvider(_profiles()),
+                                 max_inflight=2, overlap=True)
+        for task in self._tasks(6):
+            sched.submit(task, AsyncChunkStub())
+        order = []
+        for _ in range(10_000):
+            if not sched.active:
+                break
+            for tid, evs in sched.sweep().items():
+                order.extend([tid] * len(evs))
+        assert not sched.active
+        first_complete = min(max(i for i, t in enumerate(order) if t == tid)
+                             for tid in set(order))
+        assert set(order[:first_complete]) == set(order)
+
+    def test_invalid_max_inflight_rejected(self):
+        with pytest.raises(ValueError, match="max_inflight"):
+            ServiceScheduler(FLServiceProvider(_profiles()), max_inflight=0)
+
+    def test_adopt_state_with_chunk_in_flight(self):
+        # a caller may dispatch through the public API and only then
+        # hand the state to a scheduler: sweep must track the pending
+        # chunk, not re-dispatch (which would raise InFlightError)
+        profiles = _profiles()
+        task = self._tasks(1)[0]
+        sp = FLServiceProvider(profiles)
+        st = submit(sp, task)
+        st, _ = step(sp, st, AsyncChunkStub())     # schedule period 0
+        trainer = AsyncChunkStub()
+        st = dispatch(sp, st, trainer)
+        assert st.pending is not None
+        sched = ServiceScheduler(sp, overlap=True)
+        tid = sched.adopt(st, trainer)
+        res = sched.run()[tid]
+        ref_sp = FLServiceProvider(profiles)
+        ref = submit(ref_sp, task)
+        ref, ref_events = drain(ref_sp, ref, AsyncChunkStub())
+        assert [(e.round_index, e.subset) for e in res.rounds] == \
+            [(e.round_index, e.subset) for e in ref_events]
+
+    def test_nothing_left_in_flight_after_run(self):
+        sched = ServiceScheduler(FLServiceProvider(_profiles()),
+                                 overlap=True)
+        for task in self._tasks(4):
+            sched.submit(task, AsyncChunkStub())
+        sched.run()
+        for tid in sched.task_ids:
+            assert sched.state(tid).pending is None
+            assert sched.state(tid).phase.terminal
 
 
 # ---------------------------------------------------------------------------

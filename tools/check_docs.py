@@ -1,0 +1,86 @@
+#!/usr/bin/env python3
+"""Docs consistency checker (CI `docs` job; no dependencies).
+
+Two classes of rot it catches:
+
+1. **Broken intra-repo markdown links** — every relative
+   ``[text](target)`` in the checked markdown files must point at an
+   existing file (anchors are stripped; absolute http(s)/mailto links
+   are ignored).
+2. **Stale module references** — every backticked ``src/...`` path
+   mentioned in the checked markdown files (``docs/architecture.md`` is
+   the main producer: its layer map and ownership table name one module
+   per row) must exist — file or directory (``/…`` ellipses are
+   stripped first) — so the architecture page cannot drift from the
+   tree silently.
+
+Run locally:  python tools/check_docs.py
+Exit code 0 = clean, 1 = problems (each printed with file:line).
+"""
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+CHECKED = sorted(Path(REPO, "docs").glob("*.md")) + [
+    REPO / "ROADMAP.md",
+    REPO / "README.md",          # tolerated if absent
+]
+
+_LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+_CODE_PATH = re.compile(r"`(src/[\w./…-]+?)(?:::[\w.]+)?`")
+
+
+def check_links(md: Path) -> list[str]:
+    problems = []
+    for lineno, line in enumerate(md.read_text().splitlines(), 1):
+        for target in _LINK.findall(line):
+            if target.startswith(("http://", "https://", "mailto:", "#")):
+                continue
+            rel = target.split("#", 1)[0]
+            if not rel:
+                continue
+            if not (md.parent / rel).exists():
+                problems.append(f"{md.relative_to(REPO)}:{lineno}: "
+                                f"broken link -> {target}")
+    return problems
+
+
+def check_module_refs(md: Path) -> list[str]:
+    problems = []
+    for lineno, line in enumerate(md.read_text().splitlines(), 1):
+        for ref in _CODE_PATH.findall(line):
+            ref = ref.rstrip("…").rstrip(".")     # `src/x/…` ellipses
+            if not (REPO / ref).exists():         # files and directories
+                problems.append(f"{md.relative_to(REPO)}:{lineno}: "
+                                f"named module does not exist -> {ref}")
+    return problems
+
+
+def main() -> int:
+    problems: list[str] = []
+    checked = 0
+    for md in CHECKED:
+        if not md.exists():
+            continue
+        checked += 1
+        problems += check_links(md)
+        problems += check_module_refs(md)
+    required = [REPO / "docs" / n
+                for n in ("architecture.md", "kernels.md",
+                          "benchmarks.md", "service_api.md")]
+    for path in required:
+        if not path.exists():
+            problems.append(f"required doc missing: "
+                            f"{path.relative_to(REPO)}")
+    for p in problems:
+        print(f"ERROR: {p}")
+    print(f"checked {checked} markdown files: "
+          f"{'FAILED' if problems else 'ok'}")
+    return 1 if problems else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
