@@ -131,8 +131,18 @@ def run(report):
     report(f"batch{T}_speedup_n{n}",
            round(record["batch"]["speedup"], 2), "x")
 
+    # merge-write: BENCH_selection.json is shared with the policy
+    # study (bench_policies.py owns the "policies" key)
+    data = {}
+    if os.path.exists(_JSON_PATH):
+        try:
+            with open(_JSON_PATH) as f:
+                data = json.load(f)
+        except json.JSONDecodeError:
+            data = {}
+    data.update(record)
     with open(_JSON_PATH, "w") as f:
-        json.dump(record, f, indent=1)
+        json.dump(data, f, indent=1)
     report("json_written", 1, os.path.abspath(_JSON_PATH))
 
 

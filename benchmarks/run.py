@@ -12,6 +12,7 @@ import time
 BENCHES = [
     "bench_selection",        # Tables II/III
     "bench_selection_time",   # Fig. 3
+    "bench_policies",         # ISSUE-5 pluggable-policy comparison
     "bench_subsets",          # Fig. 4 + fairness §VII
     "bench_training",         # Figs. 5/6 (reduced)
     "bench_round_time",       # ISSUE-2 device-resident round data plane

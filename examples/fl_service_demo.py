@@ -17,20 +17,41 @@ Demonstrates the redesigned service API end to end:
    (``lifecycle.save_state`` / ``load_state``);
 5. multi-tenant serving: a ServiceScheduler drives several tasks
    concurrently over the one shared pool with batched stage-1 intake
-   and the overlapped dispatch/collect pump (docs/service_api.md).
+   and the overlapped dispatch/collect pump (docs/service_api.md);
+6. policy A/B (docs/policies.md): the paper's selection/scheduling
+   pair vs the ``--selection-policy`` / ``--scheduling-policy``
+   challenger (default: the random baselines) on the same pool with
+   the same seed — pool quality, accuracy proxy, Jain fairness.
 
 Run:  PYTHONPATH=src python examples/fl_service_demo.py
+      PYTHONPATH=src python examples/fl_service_demo.py \\
+          --selection-policy score_prop --scheduling-policy fair_ema
 """
+import argparse
 import os
 import tempfile
 
 import numpy as np
 
 from repro.core import (FLServiceProvider, ServiceScheduler, TaskPhase,
-                        TaskRequest, as_run_result, budget_floor, drain,
-                        load_state, random_profiles, save_state, step,
-                        submit, threshold_filter)
+                        TaskRequest, as_run_result,
+                        available_scheduling_policies,
+                        available_selection_policies, budget_floor, drain,
+                        jain_index, load_state, random_profiles, save_state,
+                        step, submit, threshold_filter)
 from repro.core.pool import ClientPoolState
+
+parser = argparse.ArgumentParser(
+    description="FL-service lifecycle walkthrough + policy A/B")
+parser.add_argument("--selection-policy", default="random",
+                    choices=available_selection_policies(),
+                    help="stage-1 challenger for the A/B vs the paper's "
+                         "greedy (default: random)")
+parser.add_argument("--scheduling-policy", default="random_partition",
+                    choices=available_scheduling_policies(),
+                    help="stage-2 challenger for the A/B vs the paper's "
+                         "Algorithm 1 (default: random_partition)")
+args = parser.parse_args()
 
 rng = np.random.default_rng(7)
 profiles = random_profiles(80, n_classes=10, rng=rng)
@@ -131,3 +152,44 @@ print(f"\nServiceScheduler served {len(results)} concurrent tasks "
 for tid, res in results.items():
     print(f"  task {tid}: {res.num_rounds:2d} rounds over "
           f"{len(res.schedules)} periods, pool {len(res.pool.selected)}")
+
+# -- 6: policy A/B on the same pool ------------------------------------------
+# the paper's pair vs the flagged challenger: same profiles, same seed,
+# same (binding) budget — only TaskRequest.selection_policy /
+# scheduling_policy differ (docs/policies.md)
+arms = {
+    "paper": ("paper_greedy", "iid_subsets"),
+    "challenger": (args.selection_policy, args.scheduling_policy),
+}
+ab_budget = floor * 0.6                      # binding: arms pick real pools
+print(f"\npolicy A/B on the same pool (budget {ab_budget:.0f}):")
+for arm, (sel, sch) in arms.items():
+    sp = FLServiceProvider(random_profiles(80, n_classes=10,
+                                           rng=np.random.default_rng(7)))
+    # each arm gets its own identically-seeded trainer rng, so the
+    # stochastic client behaviour is the same stream in both arms and
+    # the printed differences are policy effect, not draw noise
+    arm_rng = np.random.default_rng(1234)
+
+    def arm_trainer(rnd, subset, weights):
+        returned = np.array([not (c in flaky and arm_rng.uniform() < 0.8)
+                             for c in subset])
+        q = np.where(returned, arm_rng.uniform(0.6, 0.95, len(subset)), 0.0)
+        return returned, q, {"round": rnd}
+
+    t = TaskRequest(budget=ab_budget, n_star=5, thresholds=thresholds,
+                    subset_size=6, subset_delta=2, max_periods=3, seed=42,
+                    selection_policy=sel, scheduling_policy=sch)
+    st = submit(sp, t)
+    st, _ = drain(sp, st, arm_trainer)
+    res = as_run_result(st)
+    counts: dict[int, int] = {}
+    for r in res.rounds:
+        for c in r.subset:
+            counts[c] = counts.get(c, 0) + 1
+    jain = jain_index(np.array(sorted(counts.values()), dtype=np.float64))
+    print(f"  {arm:10s} ({sel} + {sch}): pool {len(res.pool.selected):2d} "
+          f"(score {res.pool.total_score:6.2f}, cost "
+          f"{res.pool.total_cost:5.0f}), {res.num_rounds:2d} rounds, "
+          f"Jain fairness {jain:.3f}, mean reputation "
+          f"{np.mean(list(res.reputation.values())):.2f}")

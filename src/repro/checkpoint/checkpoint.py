@@ -15,6 +15,7 @@ from __future__ import annotations
 import json
 import os
 import re
+import warnings
 
 import jax
 import jax.numpy as jnp
@@ -109,7 +110,17 @@ def restore_dict(path: str) -> dict:
 
 
 def restore(path: str, like):
-    """Restore into the structure of ``like`` (keys must match)."""
+    """Restore into the structure of ``like`` (keys must match).
+
+    Leaves come back as jnp arrays, so under JAX's default ``x64=off``
+    a float64/int64/uint64 payload is silently narrowed to 32 bit by
+    ``jnp.asarray``. That is usually fine for model pytrees (which were
+    32-bit on device to begin with) but wrong for exact host-side state
+    — when it happens a ``UserWarning`` names the narrowed keys and
+    points at :func:`restore_dict`, the structure-free entry point that
+    preserves dtypes exactly, so the two entry points cannot disagree
+    silently.
+    """
     payload = _read_payload(path)
     keys, like_leaves, treedef = _paths(like)
     stored = dict(zip(payload["keys"], payload["leaves"]))
@@ -117,6 +128,17 @@ def restore(path: str, like):
     if missing:
         raise KeyError(f"checkpoint missing keys: {missing[:5]}...")
     leaves = [_record_to_leaf(stored[k]) for k in keys]
+    narrowed = [k for k, rec, leaf in
+                ((k, stored[k], leaf) for k, leaf in zip(keys, leaves))
+                if str(leaf.dtype) != rec["dtype"]]
+    if narrowed:
+        warnings.warn(
+            f"checkpoint.restore narrowed the stored dtype of "
+            f"{len(narrowed)} leaves (e.g. "
+            f"{narrowed[0]!r}: {stored[narrowed[0]]['dtype']} -> "
+            f"{leaves[keys.index(narrowed[0])].dtype}) because JAX runs "
+            f"with x64 disabled; use checkpoint.restore_dict for "
+            f"exact-dtype numpy restore", UserWarning, stacklevel=2)
     for k, new, old in zip(keys, leaves, like_leaves):
         if tuple(new.shape) != tuple(np.shape(old)):
             raise ValueError(f"shape mismatch at {k}: "

@@ -12,6 +12,12 @@ Data flow (post array-native refactor):
   columns; the dataclass APIs (``ClientProfile`` lists, ``dict``
   histograms) keep working through thin adapters
   (``ClientPoolState.from_profiles`` / ``from_histograms``).
+- ``policy`` is the pluggable strategy seam: ``SelectionPolicy`` /
+  ``SchedulingPolicy`` protocols plus a by-name registry; every
+  ``TaskRequest`` picks its pair (defaults reproduce the paper's
+  greedy + Algorithm 1 bit-for-bit), and alternatives
+  (random / score_prop selection, fair_ema scheduling) ride the same
+  service unchanged.
 - ``lifecycle`` is the service orchestration layer: an explicit
   ``TaskState`` machine (``submit`` / ``step`` / ``drain``, with the
   TRAINING transition split into async ``dispatch`` / ``collect``) with
@@ -40,6 +46,12 @@ from .lifecycle import (AsyncTrainer, InFlightError, PendingChunk, RoundEvent,
                         dispatch, drain, load_state, resolve_trainer,
                         save_state, single_round_adapter, step, submit)
 from .mkp import MKPResult, solve_mkp, solve_mkp_bnb, solve_mkp_greedy
+from .policy import (SchedulingPolicy, SelectionPolicy,
+                     available_scheduling_policies,
+                     available_selection_policies,
+                     register_scheduling_policy, register_selection_policy,
+                     resolve_scheduling_policy, resolve_selection_policy,
+                     scheduling_policy, selection_policy)
 from .pool import ClientPoolState
 from .reputation import ReputationRecord, ReputationTracker, model_quality_batch
 from .scheduling import (ScheduleResult, default_capacities,
@@ -48,7 +60,8 @@ from .scheduling import (ScheduleResult, default_capacities,
                          random_subsets, subset_nid)
 from .selection import (SelectionResult, budget_floor, select_dp,
                         select_greedy, select_greedy_legacy,
-                        select_initial_pool, select_random, threshold_filter)
+                        select_initial_pool, select_random,
+                        select_score_prop, threshold_filter)
 from .service import FLServiceProvider, RoundLog, ServiceRunResult, TaskRequest
 
 __all__ = [
@@ -64,8 +77,13 @@ __all__ = [
     "participation_weights", "random_subsets", "subset_nid",
     "SelectionResult", "budget_floor", "select_dp", "select_greedy",
     "select_greedy_legacy", "select_initial_pool", "select_random",
-    "threshold_filter", "FLServiceProvider", "RoundLog", "ServiceRunResult",
-    "TaskRequest",
+    "select_score_prop", "threshold_filter", "FLServiceProvider", "RoundLog",
+    "ServiceRunResult", "TaskRequest",
+    # policy registry (pluggable selection/scheduling strategies)
+    "SchedulingPolicy", "SelectionPolicy", "available_scheduling_policies",
+    "available_selection_policies", "register_scheduling_policy",
+    "register_selection_policy", "resolve_scheduling_policy",
+    "resolve_selection_policy", "scheduling_policy", "selection_policy",
     # lifecycle (resumable service API)
     "AsyncTrainer", "InFlightError", "PendingChunk", "RoundEvent",
     "ServiceScheduler", "ServiceState", "TaskPhase", "TaskState", "Trainer",

@@ -54,11 +54,18 @@ things the blocking loop structurally could not:
   are dropped from task pools at the same point;
 - **checkpoint/resume** — :meth:`TaskState.to_arrays` /
   :meth:`TaskState.from_arrays` round-trip the full control state
-  (cursors, pool, reputation arrays, PCG64 rng state, pending schedule)
+  (cursors, pool, reputation arrays, PCG64 rng state, pending schedule,
+  the task's policy names and its ``policy_state`` cursor arrays)
   through plain numpy arrays, serialized via the existing
   ``repro.checkpoint`` msgpack path (:func:`save_state` /
   :func:`load_state`), so a killed provider resumes mid-period with
   identical remaining rounds.
+
+Selection and scheduling strategies are pluggable
+(:mod:`repro.core.policy`): ``TaskRequest.selection_policy`` /
+``scheduling_policy`` name registered policies, resolved by the
+provider at each transition — the lifecycle itself never imports a
+concrete strategy.
 
 Trainers implement the explicit :class:`Trainer` protocol (one required
 method, ``run_rounds``) instead of being duck-typed via
@@ -78,7 +85,9 @@ from .scheduling import ScheduleResult
 from .selection import SelectionResult
 from .reputation import ReputationTracker
 
-_STATE_FORMAT = 1       # to_arrays layout version
+_STATE_FORMAT = 2       # to_arrays layout version (2: + policy names,
+_STATE_FORMATS = (1, 2)  # policy_state arrays; 1 still restores, with
+# the default policies and an empty policy_state)
 
 
 # ---------------------------------------------------------------------------
@@ -101,9 +110,19 @@ class TaskRequest:
     # only observe at its host checkpoint)
     rep_threshold: float = 0.5
     suspension_periods: int = 1
-    scheduler: str = "mkp"                # "mkp" (ours) | "random" (baseline)
+    scheduler: str = "mkp"                # legacy alias: "mkp" (ours) |
+    # "random" (baseline -> the "random_partition" scheduling policy)
     nid_threshold: float = 0.35
     seed: int = 0
+    selection_policy: str | None = None       # stage-1 strategy, by
+    # registry name (core.policy): "paper_greedy" | "dp" | "random" |
+    # "score_prop" | anything registered. None = not set: an explicit
+    # legacy ``method=`` wins, else the default ("paper_greedy")
+    scheduling_policy: str | None = None      # stage-2 strategy:
+    # "iid_subsets" | "random_partition" | "fair_ema" | registered.
+    # None = not set: the legacy ``scheduler`` alias decides ("mkp" ->
+    # "iid_subsets", "random" -> "random_partition"); an explicit name
+    # always wins over the alias
     round_chunk: int = 1                  # rounds per trainer dispatch (>1 =
     # chunked driver; requires a chunk-capable Trainer)
     admit_joiners: bool = True            # churn: admit clients registered
@@ -301,6 +320,10 @@ class TaskState:
     pending: PendingChunk | None = None        # in-flight dispatched chunk
     # (transient — set by dispatch(), cleared by collect(), never
     # serialized; to_arrays() refuses while one is outstanding)
+    policy_state: dict[str, np.ndarray] = dataclasses.field(
+        default_factory=dict)                  # scheduling-policy cursor
+    # arrays (e.g. fair_ema participation EMAs), owned by the task and
+    # serialized with it — string keys, numpy-array values only
 
     def __post_init__(self):
         if self.rng is None:
@@ -347,11 +370,17 @@ class TaskState:
              t.suspension_periods, t.seed, t.round_chunk,
              int(t.admit_joiners)], dtype=np.int64)
         a["task/scheduler"] = _encode_str(t.scheduler)
+        # None (policy not set) encodes as the empty string — no
+        # registered policy can have an empty name
+        a["task/selection_policy"] = _encode_str(t.selection_policy or "")
+        a["task/scheduling_policy"] = _encode_str(t.scheduling_policy or "")
         a["task/thresholds"] = (np.zeros(0) if t.thresholds is None
                                 else np.asarray(t.thresholds, np.float64))
         a["task/has_thresholds"] = np.array(
             [t.thresholds is not None], dtype=np.int64)
         a["rng"] = _encode_rng(self.rng)
+        for k, v in self.policy_state.items():
+            a[f"pol/{k}"] = np.asarray(v)
         a["pool/ids"] = np.array(sorted(self.pool), dtype=np.int64)
         a["admitted/ids"] = np.array(self.admitted, dtype=np.int64)
         a["admitted/cost"] = np.array([self.admitted_cost], dtype=np.float64)
@@ -374,7 +403,7 @@ class TaskState:
     def from_arrays(cls, arrays: Mapping[str, Any]) -> "TaskState":
         a = {k: np.asarray(v) for k, v in arrays.items()}
         fmt = int(a["format"][0])
-        if fmt != _STATE_FORMAT:
+        if fmt not in _STATE_FORMATS:
             raise ValueError(f"unsupported TaskState format {fmt}")
         meta = a["meta"].astype(np.int64)
         tf = a["task/floats"].astype(np.float64)
@@ -390,8 +419,15 @@ class TaskState:
             round_chunk=int(ti[9]), admit_joiners=bool(ti[10]),
             thresholds=(a["task/thresholds"].astype(np.float64)
                         if int(a["task/has_thresholds"][0]) else None))
+        if fmt >= 2:
+            task.selection_policy = \
+                _decode_str(a["task/selection_policy"]) or None
+            task.scheduling_policy = \
+                _decode_str(a["task/scheduling_policy"]) or None
         state = cls(task=task, phase=TaskPhase(int(meta[0])),
                     rng=_decode_rng(a["rng"]))
+        state.policy_state = {k[len("pol/"):]: v for k, v in a.items()
+                              if k.startswith("pol/")}
         state.period = int(meta[1])
         state.subset_index = int(meta[2])
         state.global_round = int(meta[3])
@@ -519,7 +555,8 @@ def load_state(path: str) -> TaskState:
 # Transition functions
 # ---------------------------------------------------------------------------
 
-def submit(provider, task: TaskRequest, method: str = "greedy") -> TaskState:
+def submit(provider, task: TaskRequest,
+           method: str | None = None) -> TaskState:
     """Task intake + stage 1 (paper Eq. 8): select the task's client
     pool from the provider's shared registry under the budget,
     ``n_star`` and per-criterion thresholds, and return the resulting
@@ -527,10 +564,14 @@ def submit(provider, task: TaskRequest, method: str = "greedy") -> TaskState:
     budget/thresholds cannot seat ``n_star`` clients (then the state is
     terminal and :func:`step` is a no-op).
 
-    ``provider`` is an ``FLServiceProvider``; ``method`` picks the
-    stage-1 knapsack ("greedy" | "dp" | "random"). For many concurrent
-    tasks, prefer ``ServiceScheduler.submit`` — its intake batches all
-    queued tasks through one vectorized knapsack sweep.
+    ``provider`` is an ``FLServiceProvider``. Stage 1 runs the task's
+    registered selection policy (``task.selection_policy``, default
+    ``paper_greedy`` — see :mod:`repro.core.policy`); an explicitly
+    passed legacy ``method`` ("greedy" | "dp" | "random") always wins
+    over the field. For many concurrent tasks, prefer
+    ``ServiceScheduler.submit`` — its intake batches all queued tasks
+    through the policies' batched path (one vectorized knapsack sweep
+    for the default).
     """
     state = TaskState(task=task)
     sel = provider.select_pool(task, method=method, rng=state.rng)
@@ -702,7 +743,8 @@ def _schedule_next_period(provider, state: TaskState) -> TaskState:
         state.phase = TaskPhase.DONE
         return state
     state.schedule = provider.schedule_period(sorted(state.pool), task,
-                                              state.rng)
+                                              state.rng,
+                                              policy_state=state.policy_state)
     state.schedules.append(state.schedule)
     state.subset_index = 0
     state.stop = False
@@ -935,8 +977,11 @@ class ServiceScheduler:
                    if t.state.phase == TaskPhase.INTAKE]
         if not pending:
             return
+        # the tenants' own rngs go along so stochastic selection
+        # policies consume them exactly as a serial submit would
         sels = self.provider.select_pools_batch(
-            [t.state.task for _, t in pending])
+            [t.state.task for _, t in pending],
+            rngs=[t.state.rng for _, t in pending])
         for (tid, t), sel in zip(pending, sels):
             apply_pool_selection(self.provider, t.state, sel)
 

@@ -10,6 +10,8 @@ total Cost <= B. We provide:
   as the bit-exact reference for equivalence tests and benchmarks;
 - ``select_dp``      — exact dynamic programming, O(n·B) (integer costs);
 - ``select_random``  — the paper's random baseline;
+- ``select_score_prop`` — score-proportional sampling under the same
+  budget (beyond-paper baseline, see ``core.policy``);
 
 plus the full Stage-1 wrapper ``select_initial_pool`` implementing the
 threshold filter and minimum-pool-size feasibility check. The wrapper
@@ -162,6 +164,40 @@ def select_random(scores: np.ndarray, costs: np.ndarray, budget: float,
     return SelectionResult([ids[j] for j in chosen], ts, tc)
 
 
+def select_score_prop(scores: np.ndarray, costs: np.ndarray, budget: float,
+                      rng: np.random.Generator,
+                      ids: Sequence[int] | None = None) -> SelectionResult:
+    """Score-proportional sampling under the budget (beyond-paper
+    baseline; backs the ``score_prop`` policy in ``core.policy``).
+
+    Clients are ordered by a weighted random draw without replacement
+    — Efraimidis–Spirakis keys, computed in log space
+    (``log(u)/score``, the same ordering as ``u^(1/score)`` but immune
+    to the underflow that collapses ``u^(1/w)`` to 0.0 for small
+    scores and silently degenerates the draw into index order) — so
+    the probability of being drawn early is proportional to the
+    overall score; then the same stop-at-first-unaffordable budget
+    scan as :func:`select_random` runs over that order. The two
+    baselines thus differ *only* in the sampling weights.
+    """
+    scores = np.asarray(scores, dtype=np.float64)
+    costs = np.asarray(costs, dtype=np.float64)
+    ids = list(range(len(scores))) if ids is None else list(ids)
+    w = np.maximum(scores, 1e-12)
+    u = np.maximum(rng.random(len(w)), np.finfo(np.float64).tiny)
+    keys = np.log(u) / w
+    order = np.argsort(-keys, kind="stable")
+    chosen: list[int] = []
+    remaining = float(budget)
+    for j in order:
+        if costs[j] > remaining:
+            break
+        chosen.append(int(j))
+        remaining -= float(costs[j])
+    ts, tc = _totals(chosen, scores, costs)
+    return SelectionResult([ids[j] for j in chosen], ts, tc)
+
+
 # ---------------------------------------------------------------------------
 # Full Stage-1 pipeline
 # ---------------------------------------------------------------------------
@@ -226,6 +262,9 @@ def select_initial_pool(
     elif method == "random":
         res = select_random(scores, costs, budget,
                             rng or np.random.default_rng(0), ids)
+    elif method == "score_prop":
+        res = select_score_prop(scores, costs, budget,
+                                rng or np.random.default_rng(0), ids)
     else:
         raise ValueError(f"unknown method {method!r}")
     if len(res.selected) < n_star:

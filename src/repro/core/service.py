@@ -5,7 +5,10 @@ The provider owns the shared, churnable client registry
 remains as a compatibility view) and the two-stage pipeline: stage-1
 pool selection (single-task ``select_pool`` or the batched multi-tenant
 ``select_pools_batch``) and stage-2 per-period scheduling
-(``schedule_period``).
+(``schedule_period``). Both stages dispatch through the pluggable
+policy registry (:mod:`repro.core.policy`): every ``TaskRequest``
+names its ``selection_policy`` / ``scheduling_policy`` pair, so tasks
+running different strategies coexist on one provider.
 
 Task orchestration itself lives in :mod:`repro.core.lifecycle`: a task
 is an explicit :class:`~repro.core.lifecycle.TaskState` advanced by
@@ -29,13 +32,14 @@ from typing import Callable, Sequence
 
 import numpy as np
 
-from . import engine, lifecycle
+from . import lifecycle
 from .criteria import ClientProfile
 from .lifecycle import RoundLog, ServiceRunResult, TaskRequest
+from .policy import resolve_scheduling_policy, resolve_selection_policy
 from .pool import ClientPoolState
 from .reputation import ReputationTracker
-from .scheduling import ScheduleResult, generate_subsets, random_subsets
-from .selection import SelectionResult, select_initial_pool
+from .scheduling import ScheduleResult
+from .selection import SelectionResult
 
 # Legacy alias: a per-round trainer callback
 # (round, subset, weights) -> (returned flags, q values, metrics).
@@ -80,76 +84,76 @@ class FLServiceProvider:
         return self._registry
 
     # -- Stage 1 -------------------------------------------------------------
-    def select_pool(self, task: TaskRequest, method: str = "greedy",
+    def select_pool(self, task: TaskRequest, method: str | None = None,
                     rng: np.random.Generator | None = None) -> SelectionResult:
-        return select_initial_pool(
-            self.pool_state, budget=task.budget, n_star=task.n_star,
-            thresholds=task.thresholds, method=method, rng=rng)
+        """Stage 1 through the task's registered selection policy
+        (``task.selection_policy``, default ``paper_greedy``). An
+        explicitly passed legacy ``method`` ("greedy" | "dp" |
+        "random") always wins over the field."""
+        policy = resolve_selection_policy(task, method)
+        return policy.select(self.pool_state, task, rng)
 
-    def select_pools_batch(self, tasks: Sequence[TaskRequest]
+    def select_pools_batch(self, tasks: Sequence[TaskRequest],
+                           rngs: Sequence[np.random.Generator] | None = None,
                            ) -> list[SelectionResult]:
         """Stage 1 for many concurrent tasks in one batched sweep.
 
-        Per-task threshold masks are computed vectorized over the shared
-        pool, then a single jit+vmap greedy (engine.greedy_knapsack_batch)
-        solves every task's knapsack at once — the multi-tenant serving
-        path (``ServiceScheduler`` intake). Per-task feasibility (n*,
-        Eq. 11) is applied afterwards. Selected ids come back in pool
-        order (same set, totals and feasibility as per-task
-        ``select_pool``, which returns greedy pick order).
+        Tasks are grouped by their resolved selection policy and each
+        group is served by the policy's ``select_batch`` — for the
+        default ``paper_greedy`` that is one vectorized threshold sweep
+        plus a single jit+vmap greedy (engine.greedy_knapsack_batch)
+        solving every task's knapsack at once — the multi-tenant
+        serving path (``ServiceScheduler`` intake). Per-task
+        feasibility (n*, Eq. 11) is applied by the policies. For
+        ``paper_greedy``, selected ids come back in pool order (same
+        set, totals and feasibility as per-task ``select_pool``, which
+        returns greedy pick order).
+
+        ``rngs`` supplies each task's generator (stochastic policies
+        consume it exactly as a per-task ``select_pool`` would — the
+        scheduler intake passes the tenants' own state rngs so batched
+        and serial intake stay bit-identical); defaults to fresh
+        ``default_rng(task.seed)`` per task, matching a fresh
+        ``lifecycle.submit``.
         """
         if not tasks:
             return []
-        pool = self.pool_state
-        budgets = np.array([t.budget for t in tasks], dtype=np.float64)
-        valid = np.stack([pool.threshold_mask(t.thresholds) for t in tasks])
-        masks, _, _ = engine.greedy_knapsack_batch(
-            pool.overall, pool.costs, budgets, valid)
-        results: list[SelectionResult] = []
-        for t, task in enumerate(tasks):
-            n_kept = int(valid[t].sum())
-            if n_kept < task.n_star:
-                results.append(SelectionResult(
-                    [], 0.0, 0.0, feasible=False,
-                    note=f"only {n_kept} clients pass thresholds, "
-                         f"need {task.n_star}"))
-                continue
-            sel = masks[t]
-            res = SelectionResult(
-                pool.client_ids[sel].tolist(),
-                float(pool.overall[sel].sum()),
-                float(pool.costs[sel].sum()))
-            if len(res.selected) < task.n_star:
-                res.feasible = False
-                floor = pool.budget_floor(task.n_star, valid[t])
-                res.note = (f"budget {task.budget} selects only "
-                            f"{len(res.selected)} < n*={task.n_star} "
-                            f"clients; Eq.(11) floor is {floor:.1f}")
-            results.append(res)
+        if rngs is None:
+            rngs = [np.random.default_rng(t.seed) for t in tasks]
+        groups: dict[str, list[int]] = {}
+        for i, t in enumerate(tasks):
+            groups.setdefault(resolve_selection_policy(t).name, []).append(i)
+        results: list[SelectionResult | None] = [None] * len(tasks)
+        for name, idxs in groups.items():
+            out = resolve_selection_policy(tasks[idxs[0]]).select_batch(
+                self.pool_state, [tasks[i] for i in idxs],
+                [rngs[i] for i in idxs])
+            for i, res in zip(idxs, out):
+                results[i] = res
         return results
 
     # -- Stage 2 (one period) --------------------------------------------------
     def schedule_period(self, pool_ids: Sequence[int], task: TaskRequest,
-                        rng: np.random.Generator) -> ScheduleResult:
-        """Algorithm 1 over the task's current pool. Raises ``KeyError``
-        if any id is not registered (e.g. churned out mid-task)."""
+                        rng: np.random.Generator,
+                        policy_state: dict | None = None) -> ScheduleResult:
+        """One period's schedule through the task's registered
+        scheduling policy (``task.scheduling_policy``; the legacy
+        ``scheduler=\"random\"`` field maps to ``random_partition``).
+        Raises ``KeyError`` if any id is not registered (e.g. churned
+        out mid-task). ``policy_state`` is the task's policy cursor
+        dict (``TaskState.policy_state``) — stateful policies read and
+        mutate it; omitting it gives a stateless one-shot call."""
         rows = self.pool_state.positions(sorted(pool_ids))
-        if task.scheduler == "random":
-            hists = {int(self.pool_state.client_ids[r]):
-                     self.pool_state.histograms[r] for r in rows}
-            return random_subsets(hists, task.subset_size, rng)
-        # array-native: hand the scheduler (ids, H) columns directly
-        subpool = (self.pool_state.client_ids[rows],
-                   self.pool_state.histograms[rows])
-        return generate_subsets(subpool, n=task.subset_size,
-                                delta=task.subset_delta, x_star=task.x_star,
-                                nid_threshold=task.nid_threshold)
+        policy = resolve_scheduling_policy(task)
+        return policy.schedule(
+            self.pool_state.client_ids[rows], self.pool_state.histograms[rows],
+            task, rng, {} if policy_state is None else policy_state)
 
     # -- Full service loop (deprecated shim over the lifecycle) ----------------
     def run_task(self, task: TaskRequest, trainer,
                  availability_fn: Callable[[int, int], bool] | None = None,
                  stop_fn: Callable[[dict], bool] | None = None,
-                 method: str = "greedy") -> ServiceRunResult:
+                 method: str | None = None) -> ServiceRunResult:
         """Deprecated: blocking convenience wrapper over the stepped
         lifecycle (``lifecycle.submit`` + ``lifecycle.drain``).
 
@@ -174,7 +178,7 @@ class FLServiceProvider:
     def run_task_legacy(self, task: TaskRequest, trainer,
                         availability_fn: Callable[[int, int], bool] | None = None,
                         stop_fn: Callable[[dict], bool] | None = None,
-                        method: str = "greedy") -> ServiceRunResult:
+                        method: str | None = None) -> ServiceRunResult:
         """The pre-redesign blocking loop, verbatim — the reference the
         ``submit``/``step``/``drain`` lifecycle is equivalence-tested
         against (tests/test_lifecycle.py). Not a production path.
@@ -197,6 +201,7 @@ class FLServiceProvider:
         if not pool_sel.feasible:
             return ServiceRunResult(pool_sel, [], [], {})
         pool = set(pool_sel.selected)
+        policy_state: dict = {}        # stateful scheduling-policy cursors
         tracker = ReputationTracker(pool_sel.selected,
                                     suspension_periods=task.suspension_periods,
                                     rep_threshold=task.rep_threshold)
@@ -211,7 +216,8 @@ class FLServiceProvider:
                 break
             if task.max_rounds is not None and global_round >= task.max_rounds:
                 break
-            sched = self.schedule_period(sorted(pool), task, rng)
+            sched = self.schedule_period(sorted(pool), task, rng,
+                                         policy_state=policy_state)
             schedules.append(sched)
             stop = False
             t = 0

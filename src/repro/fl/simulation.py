@@ -374,14 +374,27 @@ class DeviceFLSim(_EvalCache):
 def run_fl_experiment(kind: str, noniid: str, n_clients: int = 100,
                       rounds: int = 30, scheduler: str = "mkp",
                       n_train: int = 6000, n_test: int = 1500,
-                      subset_size: int = 10, sim: SimConfig = SimConfig(),
+                      subset_size: int = 10, subset_delta: int = 3,
+                      sim: SimConfig = SimConfig(),
                       seed: int = 0, data_plane: str = "host",
-                      round_chunk: int = 8) -> dict:
+                      round_chunk: int = 8,
+                      budget: float = 1e9, n_star: int | None = None,
+                      selection_policy: str | None = None,
+                      scheduling_policy: str | None = None) -> dict:
     """One learning-curve run (paper Figs. 5/6): returns history + config.
 
     ``data_plane="host"`` uses the legacy per-round host-loop trainer;
     ``"device"`` stages the dataset on device and runs ``round_chunk``
     rounds per dispatch through the chunked scan driver.
+
+    ``selection_policy`` / ``scheduling_policy`` pick registered
+    ``core.policy`` strategies (with ``budget`` binding, different
+    selection policies admit different pools — the policy-comparison
+    study in ``benchmarks/bench_policies.py``); unset (``None``), the
+    legacy ``scheduler`` alias decides (``"random"`` ->
+    ``random_partition``) — an explicit name wins over the alias.
+    ``n_star`` defaults to ``n_clients`` when the budget is
+    unconstrained (the paper's full-pool setup) and to 1 otherwise.
     """
     from repro.data.synthetic import make_classification_data
     from repro.fl.partition import partition_labels
@@ -396,7 +409,6 @@ def run_fl_experiment(kind: str, noniid: str, n_clients: int = 100,
                                seed=seed)
     provider = FLServiceProvider(pool)
     model_cfg = cnn.MNIST_CNN if kind == "mnist" else cnn.CIFAR_CNN
-    subset_delta = 3
     if data_plane == "device":
         simul = DeviceFLSim(model_cfg, data, parts, test, sim,
                             pad_subset_to=subset_size + subset_delta)
@@ -406,10 +418,14 @@ def run_fl_experiment(kind: str, noniid: str, n_clients: int = 100,
     else:
         raise ValueError(f"unknown data_plane {data_plane!r}")
 
-    task = TaskRequest(budget=1e9, n_star=n_clients, subset_size=subset_size,
+    if n_star is None:
+        n_star = n_clients if budget >= 1e9 else 1
+    task = TaskRequest(budget=budget, n_star=n_star, subset_size=subset_size,
                        subset_delta=subset_delta, x_star=3, max_periods=10_000,
                        scheduler=scheduler, seed=seed,
-                       round_chunk=round_chunk, max_rounds=rounds)
+                       round_chunk=round_chunk, max_rounds=rounds,
+                       selection_policy=selection_policy,
+                       scheduling_policy=scheduling_policy)
     state = lifecycle.submit(provider, task)
     state, _ = lifecycle.drain(provider, state, simul.trainer,
                                stop_fn=lambda m: m["round"] + 1 >= rounds)

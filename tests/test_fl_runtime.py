@@ -1,6 +1,7 @@
 """FL runtime tests: partitions, federated rounds, optimizer, data,
 checkpointing."""
 import os
+import warnings
 
 import jax
 import jax.numpy as jnp
@@ -200,6 +201,30 @@ class TestCheckpoint:
         assert isinstance(back["bf16"], np.ndarray)
         assert str(back["bf16"].dtype) == "bfloat16"
         back["f64"][0] = -1.0          # numpy contract: writable
+
+    def test_restore_warns_on_dtype_narrowing(self, tmp_path):
+        # ISSUE-5 satellite: the jnp path used to truncate f64 -> f32
+        # silently under x64=off; it must now say so and point at the
+        # exact-dtype restore_dict, so the two entry points can't
+        # disagree without a trace
+        from repro.checkpoint import restore_dict
+        p = str(tmp_path / "f64.ckpt")
+        save(p, {"x": np.arange(3, dtype=np.float64),
+                 "y": jnp.zeros(2, jnp.float32)})
+        with pytest.warns(UserWarning, match="restore_dict"):
+            back = restore(p, {"x": jnp.zeros(3), "y": jnp.zeros(2)})
+        assert back["x"].dtype == jnp.float32      # narrowed, but loudly
+        with warnings.catch_warnings():            # exact path: silent
+            warnings.simplefilter("error")
+            assert restore_dict(p)["x"].dtype == np.float64
+
+    def test_restore_silent_when_dtypes_match(self, tmp_path):
+        p = str(tmp_path / "f32.ckpt")
+        tree = {"w": jnp.ones(3, jnp.float32), "b": jnp.ones(2, jnp.bfloat16)}
+        save(p, tree)
+        with warnings.catch_warnings():
+            warnings.simplefilter("error")
+            restore(p, tree)
 
     def test_shape_mismatch_raises(self, tmp_path):
         p = str(tmp_path / "x.ckpt")

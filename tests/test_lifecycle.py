@@ -213,12 +213,25 @@ class TestCheckpointResume:
         state, events = drain(sp, state, ChunkStub())
         return events, as_run_result(state).reputation
 
-    @pytest.mark.parametrize("scheduler", ["mkp", "random"])
-    def test_resume_mid_period(self, tmp_path, scheduler):
+    # ISSUE-5: the save->kill->restore matrix carries the policy axis —
+    # stochastic selection (rng state), the stateful fair_ema scheduler
+    # (policy_state arrays) and the legacy scheduler alias must all
+    # resume with identical remaining rounds
+    @pytest.mark.parametrize("scheduler,selection,scheduling", [
+        ("mkp", None, None),                   # the defaults
+        ("random", None, None),                # legacy alias path
+        ("mkp", "score_prop", "fair_ema"),
+        ("mkp", "random", "random_partition"),
+        ("mkp", "dp", "fair_ema"),
+    ])
+    def test_resume_mid_period(self, tmp_path, scheduler, selection,
+                               scheduling):
         profiles = _profiles()
         task = TaskRequest(budget=400.0, n_star=10, subset_size=5,
                            subset_delta=2, max_periods=4, scheduler=scheduler,
-                           round_chunk=2, seed=3)
+                           round_chunk=2, seed=3,
+                           selection_policy=selection,
+                           scheduling_policy=scheduling)
         ref_events, ref_rep = self._reference(profiles, task)
 
         sp = FLServiceProvider(profiles)
@@ -297,6 +310,43 @@ class TestCheckpointResume:
         back = TaskState.from_arrays(state.to_arrays())
         assert back.task.seed == 2**60 + 1
         assert back.task.max_rounds == 2**55
+
+    def test_policy_names_and_state_roundtrip(self):
+        # ISSUE-5: policy names + policy_state cursor arrays survive
+        # to_arrays/from_arrays exactly (the fair_ema EMAs are float64
+        # and must not narrow)
+        sp = FLServiceProvider(_profiles())
+        task = TaskRequest(budget=400.0, n_star=10, subset_size=5,
+                           subset_delta=2, max_periods=3, seed=7,
+                           selection_policy="score_prop",
+                           scheduling_policy="fair_ema")
+        state = submit(sp, task)
+        state, _ = step(sp, state, _stub)      # draws a fair_ema schedule
+        assert state.policy_state              # the EMA cursors exist
+        back = TaskState.from_arrays(state.to_arrays())
+        assert back.task.selection_policy == "score_prop"
+        assert back.task.scheduling_policy == "fair_ema"
+        assert set(back.policy_state) == set(state.policy_state)
+        for k, v in state.policy_state.items():
+            assert back.policy_state[k].dtype == np.asarray(v).dtype
+            np.testing.assert_array_equal(back.policy_state[k], v)
+
+    def test_format1_payload_still_restores(self):
+        # a pre-ISSUE-5 checkpoint (format 1: no policy keys) restores
+        # with the default policies and an empty policy_state
+        state = TaskState(task=TaskRequest(budget=100.0, seed=5))
+        arrays = state.to_arrays()
+        arrays["format"] = np.array([1], dtype=np.int64)
+        del arrays["task/selection_policy"]
+        del arrays["task/scheduling_policy"]
+        back = TaskState.from_arrays(arrays)
+        assert back.task.selection_policy is None      # unset: resolves
+        assert back.task.scheduling_policy is None     # to the defaults
+        from repro.core import (resolve_scheduling_policy,
+                                resolve_selection_policy)
+        assert resolve_selection_policy(back.task).name == "paper_greedy"
+        assert resolve_scheduling_policy(back.task).name == "iid_subsets"
+        assert back.policy_state == {}
 
 
 # ---------------------------------------------------------------------------
