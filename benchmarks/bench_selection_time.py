@@ -14,7 +14,16 @@ Results are printed through the harness ``report`` callback AND written
 to ``BENCH_selection.json`` at the repo root so the perf trajectory is
 machine-readable across PRs.
 
-Set ``REPRO_BENCH_SMOKE=1`` to cap the study at n=10k / 1 rep (CI).
+ISSUE-6 adds the fleet-scale study ("fleet" key): n ∈ {1M, 10M} pools
+built by chunked synthetic generation, the hierarchical device-mirror
+pipeline (``core.device_pool`` + ``engine.hierarchical_greedy_knapsack``)
+vs the flat host pipeline at a production-selective budget, plus a
+churn-absorption benchmark (dirty-region sync events/s vs a full
+restage).
+
+Set ``REPRO_BENCH_SMOKE=1`` to cap the study at n=10k / 1 rep (CI);
+smoke mode replaces the fleet sizes with one reduced-n (50k)
+hierarchical parity row.
 """
 from __future__ import annotations
 
@@ -27,7 +36,9 @@ import numpy as np
 from repro.core import (linear_cost, overall_score, select_dp, select_greedy,
                         select_greedy_legacy, select_random,
                         select_initial_pool, threshold_filter)
-from repro.core import engine
+from repro.core import device_pool, engine
+from repro.core.criteria import (CRITERIA, NUM_CRITERIA, data_dist_score,
+                                 random_histograms)
 from repro.core.pool import ClientPoolState
 
 _JSON_PATH = os.path.join(os.path.dirname(os.path.abspath(__file__)), "..",
@@ -41,6 +52,117 @@ def _time(fn, reps=5):
         fn()
         ts.append(time.perf_counter() - t0)
     return float(np.median(ts)) * 1e6   # us
+
+
+def _random_pool_chunked(n: int, n_classes: int, rng: np.random.Generator,
+                         chunk: int = 1_000_000) -> ClientPoolState:
+    """Fleet-size synthetic pool built ``chunk`` rows at a time:
+    peak temporary memory stays O(chunk), not O(n) — the 10M pool never
+    materializes a second copy of its (n, 11) score block. Data-size
+    scores normalize by the distribution's max (``n_classes * 199``)
+    instead of the observed pool max, so chunks are independent."""
+    scores = np.empty((n, NUM_CRITERIA), dtype=np.float64)
+    hists = np.empty((n, n_classes), dtype=np.float64)
+    costs = np.empty(n, dtype=np.float64)
+    i_size = CRITERIA.index("data_size")
+    i_dist = CRITERIA.index("data_dist")
+    for lo in range(0, n, chunk):
+        hi = min(lo + chunk, n)
+        s = rng.uniform(0.0, 1.0, size=(hi - lo, NUM_CRITERIA))
+        h = random_histograms(hi - lo, n_classes, rng)
+        s[:, i_size] = h.sum(axis=1) / float(n_classes * 199)
+        s[:, i_dist] = data_dist_score(h)
+        scores[lo:hi] = s
+        hists[lo:hi] = h
+        costs[lo:hi] = linear_cost(overall_score(s), 2.0, 5.0, integer=True)
+    return ClientPoolState(np.arange(n, dtype=np.int64), scores, hists, costs)
+
+
+def _fleet_study(report, record, smoke: bool):
+    """The ISSUE-6 million-client rows: hierarchical vs flat pipeline at
+    a selective budget, plus churn absorption (sync vs restage)."""
+    thresholds = np.full(9, 0.05)
+    if smoke:
+        sizes, events, reps = (50_000,), 500, 1
+        shard_cap = 16_384                 # reduced n, still multi-shard
+    else:
+        sizes, events, reps = (1_000_000, 10_000_000), 5_000, 2
+        shard_cap = device_pool.DEFAULT_SHARD_CAP
+    record["fleet"] = []
+    for n in sizes:
+        rng = np.random.default_rng(n)
+        pool = _random_pool_chunked(n, 10, rng)
+        # production-selective regime: pick ~0.5% of the fleet
+        B = round(0.005 * float(pool.costs.sum()), 1)
+
+        t0 = time.perf_counter()
+        mirror = pool.device_mirror(shard_cap=shard_cap)
+        t_stage = (time.perf_counter() - t0) * 1e6
+        stats: dict = {}
+        rows, ts, tc, _ = engine.hierarchical_greedy_knapsack(
+            pool, B, thresholds, mirror=mirror, stats=stats)  # warmup/jit
+        t_hier = _time(lambda: engine.hierarchical_greedy_knapsack(
+            pool, B, thresholds, mirror=mirror), reps=reps)
+        frows, _, _, _ = engine._flat_pool_greedy(pool, B, thresholds)
+        parity = bool(np.array_equal(rows, frows))
+        t_flat = _time(lambda: engine._flat_pool_greedy(
+            pool, B, thresholds), reps=1)
+
+        # churn absorption: deregister + join waves (`events` dirty rows
+        # per wave); the first wave warms the bucketed scatter compile
+        # (steady-state production absorbs churn every sweep), the
+        # second is timed
+        def churn_wave(seed):
+            step = max(1, n // (events // 2))
+            alive = pool.client_ids[pool.registered]
+            pool.deregister(alive[::step][: events // 2])
+            k = events - min(events // 2, alive[::step].size)
+            r2 = np.random.default_rng(seed)
+            base = int(pool.client_ids.max()) + 1
+            pool.register_arrays(np.arange(base, base + k),
+                                 r2.random((k, NUM_CRITERIA)),
+                                 random_histograms(k, 10, r2),
+                                 r2.uniform(1.0, 5.0, k))
+
+        churn_wave(n + 1)
+        pool.device_mirror(shard_cap=shard_cap)       # warm the scatter
+        churn_wave(n + 2)
+        t0 = time.perf_counter()
+        pool.device_mirror(shard_cap=shard_cap)       # incremental sync
+        t_sync = (time.perf_counter() - t0) * 1e6
+        t_restage = _time(lambda: device_pool.DevicePoolState.from_host(
+            pool, shard_cap=shard_cap), reps=1)
+        t_post = _time(lambda: engine.hierarchical_greedy_knapsack(
+            pool, B, thresholds, mirror=mirror), reps=reps)
+
+        row = {"n": n, "shard_cap": shard_cap, "shards": mirror.num_shards,
+               "budget": B, "picks": int(rows.size), "parity": parity,
+               "frontier": stats["frontier"],
+               "escalations": stats["escalations"],
+               "candidates": stats["candidates"],
+               "mirror_stage_us": t_stage,
+               "pipeline_hier_us": t_hier, "pipeline_flat_us": t_flat,
+               "hier_speedup": t_flat / max(t_hier, 1e-9),
+               "churn": {"events": int(events),
+                         "sync_us": t_sync,
+                         "events_per_s": events / max(t_sync * 1e-6, 1e-9),
+                         "restage_us": t_restage,
+                         "absorb_speedup": t_restage / max(t_sync, 1e-9),
+                         "post_churn_select_us": t_post}}
+        record["fleet"].append(row)
+        tag = f"n{n//1000}k" if n < 10**6 else f"n{n//10**6}M"
+        report(f"fleet_pipeline_hier_us_{tag}", t_hier,
+               f"2-level frontier F={stats['frontier']}")
+        report(f"fleet_pipeline_flat_us_{tag}", t_flat, "host argsort")
+        report(f"fleet_hier_speedup_{tag}", round(row["hier_speedup"], 2),
+               "x")
+        report(f"fleet_parity_{tag}", int(parity), "hier == flat rows")
+        report(f"fleet_churn_events_per_s_{tag}",
+               round(row["churn"]["events_per_s"]),
+               f"{events} events, dirty-region sync")
+        report(f"fleet_churn_absorb_speedup_{tag}",
+               round(row["churn"]["absorb_speedup"], 2), "vs full restage")
+        del pool, mirror
 
 
 def _legacy_pipeline(profiles, thresholds, budget):
@@ -130,6 +252,9 @@ def run(report):
            "shared-order batch (jit+vmap on TPU)")
     report(f"batch{T}_speedup_n{n}",
            round(record["batch"]["speedup"], 2), "x")
+
+    # -- fleet-scale hierarchical selection + churn absorption ---------------
+    _fleet_study(report, record, smoke)
 
     # merge-write: BENCH_selection.json is shared with the policy
     # study (bench_policies.py owns the "policies" key)

@@ -8,6 +8,12 @@ Data flow (post array-native refactor):
 - ``engine`` holds the batched hot paths: vectorized greedy knapsack
   (numpy, bit-exact vs. the legacy loop), a jit+vmap multi-task greedy,
   and the Toyoda MKP scoring (numpy / jax / Pallas kernel).
+- ``device_pool`` is the fleet-scale selection plane: a sharded
+  device-resident mirror of the pool (``DevicePoolState``) kept
+  coherent by a dirty-region sync protocol, feeding the hierarchical
+  two-level greedy (per-shard ``segmented_topk`` frontiers + exact
+  host merge) that ``selection``/``policy`` route to above
+  ``HIERARCHICAL_MIN_N`` clients (see docs/scaling.md).
 - ``selection`` / ``scheduling`` / ``service`` consume pool-state
   columns; the dataclass APIs (``ClientProfile`` lists, ``dict``
   histograms) keep working through thin adapters
@@ -52,6 +58,7 @@ from .policy import (SchedulingPolicy, SelectionPolicy,
                      register_scheduling_policy, register_selection_policy,
                      resolve_scheduling_policy, resolve_selection_policy,
                      scheduling_policy, selection_policy)
+from .device_pool import DevicePoolState
 from .pool import ClientPoolState
 from .reputation import ReputationRecord, ReputationTracker, model_quality_batch
 from .scheduling import (ScheduleResult, default_capacities,
@@ -61,7 +68,8 @@ from .scheduling import (ScheduleResult, default_capacities,
 from .selection import (SelectionResult, budget_floor, select_dp,
                         select_greedy, select_greedy_legacy,
                         select_initial_pool, select_random,
-                        select_score_prop, threshold_filter)
+                        select_score_prop, select_score_prop_batch,
+                        threshold_filter)
 from .service import FLServiceProvider, RoundLog, ServiceRunResult, TaskRequest
 
 __all__ = [
@@ -77,8 +85,10 @@ __all__ = [
     "participation_weights", "random_subsets", "subset_nid",
     "SelectionResult", "budget_floor", "select_dp", "select_greedy",
     "select_greedy_legacy", "select_initial_pool", "select_random",
-    "select_score_prop", "threshold_filter", "FLServiceProvider", "RoundLog",
-    "ServiceRunResult", "TaskRequest",
+    "select_score_prop", "select_score_prop_batch", "threshold_filter",
+    "FLServiceProvider", "RoundLog", "ServiceRunResult", "TaskRequest",
+    # fleet-scale selection plane (sharded device mirror)
+    "DevicePoolState",
     # policy registry (pluggable selection/scheduling strategies)
     "SchedulingPolicy", "SelectionPolicy", "available_scheduling_policies",
     "available_selection_policies", "register_scheduling_policy",

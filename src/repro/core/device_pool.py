@@ -1,0 +1,252 @@
+"""Device-resident selection plane: the sharded jnp mirror of
+``ClientPoolState`` (ROADMAP "million-client control plane").
+
+``ClientPoolState`` stays the host-side source of truth — churn, id
+maps, checkpointing and the dataclass adapters all live there — but at
+fleet scale (1M–10M registered clients) the stage-1 hot path cannot
+afford to re-stage host buffers onto the device (or re-argsort the full
+pool) every sweep. :class:`DevicePoolState` keeps the columns stage 1
+actually reads — overall scores, costs, the thresholded criterion
+columns, and the registered/alive mask — as ``(num_shards, shard_cap)``
+sharded jnp arrays, kept coherent through a **dirty-region sync
+protocol**:
+
+- every ``register``/``deregister`` on the host pool appends the
+  touched rows to the pool's mutation log
+  (``ClientPoolState.dirty_rows_since``);
+- :meth:`DevicePoolState.sync` replays only those rows as in-place
+  scatters (``.at[shards, lanes].set``) — thousands of churn events
+  per sweep are absorbed in O(events) instead of O(pool), and no
+  derived cache is invalidated wholesale;
+- only when the log no longer reaches back to the mirror's synced
+  version (a laggard mirror, or a bulk import) does the mirror fall
+  back to a full restage.
+
+Row ``r`` of the host pool lives at shard ``r // shard_cap``, lane
+``r % shard_cap``; rows past ``pool.n`` are padding with
+``registered=False``, so they can never enter a selection. Growth
+appends whole shards (device arrays are immutable — an append is one
+concatenate, not a per-row copy).
+
+The mirror feeds the hierarchical two-level greedy
+(:func:`repro.core.engine.hierarchical_greedy_knapsack`): per-shard
+top-``k`` ratio frontiers via the ``segmented_topk`` Pallas kernel
+(jnp oracle off-TPU), then an exact host-side merge. Precision note:
+the mirror stores f32 — frontier *membership* and threshold masks are
+decided in f32, while the final merge re-ranks candidates with the
+host's f64 values (see ``docs/scaling.md`` for the tie-break
+contract).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .criteria import THRESHOLDED, overall_score
+from .pool import ClientPoolState
+
+_EPS = 1e-12
+
+# Geometry / routing defaults. ``HIERARCHICAL_MIN_N`` is the pool size
+# above which the default greedy selection policy routes stage 1
+# through the hierarchical device plane (tests shrink it to force the
+# path at toy sizes; REPRO_HIERARCHICAL_MIN_N overrides it at launch).
+DEFAULT_SHARD_CAP = 131072
+HIERARCHICAL_MIN_N = 200_000
+
+_THI = np.asarray(THRESHOLDED, dtype=np.int64)
+
+
+def _load_env() -> None:
+    import os
+    global HIERARCHICAL_MIN_N
+    v = os.environ.get("REPRO_HIERARCHICAL_MIN_N")
+    if v:
+        HIERARCHICAL_MIN_N = int(v)
+
+
+_load_env()
+
+
+@jax.jit
+def _valid_registered(registered):
+    return registered
+
+
+@jax.jit
+def _valid_thresholded(registered, th_scores, thresholds):
+    return registered & jnp.all(th_scores >= thresholds, axis=-1)
+
+
+@jax.jit
+def _masked_ratio(overall, costs, valid):
+    r = overall / jnp.maximum(costs, _EPS)
+    return jnp.where(valid, r, -jnp.inf)
+
+
+@jax.jit
+def _shard_stats(costs, valid):
+    """Per-shard valid counts (S,) plus the global valid cost sum —
+    one fused pass, used for frontier sizing and feasibility."""
+    counts = jnp.sum(valid, axis=1, dtype=jnp.int32)
+    # f32 sum: only feeds the frontier-size estimate, precision ample
+    cost_sum = jnp.sum(jnp.where(valid, costs, 0.0))
+    return counts, cost_sum
+
+
+@dataclasses.dataclass
+class DevicePoolState:
+    """Sharded device mirror of a host :class:`ClientPoolState`.
+
+    All device arrays are ``(num_shards, shard_cap)`` (plus a trailing
+    criteria/class axis where noted), f32/bool, padding rows
+    unregistered. ``histograms`` is optional — stage 1 never reads it;
+    mirror it only for device-side scheduling experiments.
+    """
+
+    shard_cap: int
+    n_rows: int                       # host rows mirrored (pool.n)
+    overall: jnp.ndarray              # (S, C) f32 — Eq. (6) scores
+    costs: jnp.ndarray                # (S, C) f32
+    th_scores: jnp.ndarray            # (S, C, len(THRESHOLDED)) f32
+    registered: jnp.ndarray           # (S, C) bool — alive mask
+    histograms: jnp.ndarray | None    # (S, C, c) f32, optional
+    synced_version: int               # host pool.version at last sync
+    syncs: int = 0                    # incremental syncs applied
+    restages: int = 0                 # full restages (incl. the build)
+
+    @property
+    def num_shards(self) -> int:
+        return int(self.overall.shape[0])
+
+    @property
+    def capacity(self) -> int:
+        return self.num_shards * self.shard_cap
+
+    # -- construction / sync -------------------------------------------------
+    @classmethod
+    def from_host(cls, pool: ClientPoolState, shard_cap: int | None = None,
+                  include_histograms: bool = False) -> "DevicePoolState":
+        cap = int(shard_cap or DEFAULT_SHARD_CAP)
+        m = cls(shard_cap=cap, n_rows=0,
+                overall=None, costs=None, th_scores=None, registered=None,
+                histograms=None, synced_version=-1)
+        m._restage(pool, include_histograms=include_histograms)
+        return m
+
+    def _restage(self, pool: ClientPoolState,
+                 include_histograms: bool | None = None) -> None:
+        """Full (re)staging: pad host columns to whole shards and ship
+        them. O(pool) — the slow path the dirty-region sync avoids."""
+        if include_histograms is None:
+            include_histograms = self.histograms is not None
+        n, cap = pool.n, self.shard_cap
+        S = max(1, -(-n // cap))
+
+        def shard(host, dtype, fill=0.0):
+            a = np.asarray(host)
+            out = np.full((S * cap,) + a.shape[1:], fill, dtype=dtype)
+            out[:n] = a
+            return jnp.asarray(out.reshape((S, cap) + a.shape[1:]))
+
+        self.overall = shard(overall_score(pool.scores), np.float32)
+        self.costs = shard(pool.costs, np.float32)
+        self.th_scores = shard(pool.scores[:, _THI], np.float32)
+        self.registered = shard(pool.registered, np.bool_, fill=False)
+        self.histograms = shard(pool.histograms, np.float32) \
+            if include_histograms else None
+        self.n_rows = n
+        self.synced_version = pool.version
+        self.restages += 1
+
+    def sync(self, pool: ClientPoolState) -> "DevicePoolState":
+        """Bring the mirror up to the host pool's version.
+
+        Fast path: replay the dirty rows logged since
+        ``synced_version`` as in-place scatters — O(churn events), not
+        O(pool). Appends whole shards first if the pool grew past the
+        mirrored capacity. Falls back to a full restage when the log
+        has been pruned past our watermark.
+        """
+        if pool.version == self.synced_version:
+            return self
+        rows = pool.dirty_rows_since(self.synced_version)
+        if rows is None:
+            self._restage(pool)
+            return self
+        cap = self.shard_cap
+        if pool.n > self.capacity:              # grow by whole shards
+            extra = -(-(pool.n - self.capacity) // cap)
+
+            def pad(a, fill):
+                blank = jnp.full((extra,) + a.shape[1:], fill, a.dtype)
+                return jnp.concatenate([a, blank], axis=0)
+
+            self.overall = pad(self.overall, 0.0)
+            self.costs = pad(self.costs, 0.0)
+            self.th_scores = pad(self.th_scores, 0.0)
+            self.registered = pad(self.registered, False)
+            if self.histograms is not None:
+                self.histograms = pad(self.histograms, 0.0)
+        if rows.size:
+            # Bucket the scatter width to a power of two (>= 4096) so
+            # XLA compiles one scatter per bucket, not one per distinct
+            # churn-wave size; padding repeats row 0 (rewriting the same
+            # value is a no-op), so correctness is unaffected.
+            bucket = max(4096, 1 << int(np.ceil(np.log2(rows.size))))
+            pad = bucket - rows.size
+            if pad:
+                rows = np.concatenate([rows, np.repeat(rows[:1], pad)])
+            sh, ln = rows // cap, rows % cap
+            scores = pool.scores[rows]          # O(events) host gathers
+            self.overall = self.overall.at[sh, ln].set(
+                jnp.asarray(overall_score(scores), jnp.float32))
+            self.costs = self.costs.at[sh, ln].set(
+                jnp.asarray(pool.costs[rows], jnp.float32))
+            self.th_scores = self.th_scores.at[sh, ln].set(
+                jnp.asarray(scores[:, _THI], jnp.float32))
+            self.registered = self.registered.at[sh, ln].set(
+                jnp.asarray(pool.registered[rows]))
+            if self.histograms is not None:
+                self.histograms = self.histograms.at[sh, ln].set(
+                    jnp.asarray(pool.histograms[rows], jnp.float32))
+        self.n_rows = pool.n
+        self.synced_version = pool.version
+        self.syncs += 1
+        return self
+
+    # -- stage-1 device queries ----------------------------------------------
+    def valid_mask(self, thresholds: np.ndarray | None) -> jnp.ndarray:
+        """(S, C) bool eligibility under Eq. (8d): registered, and all
+        thresholded criteria at/above their minimums (f32 compare)."""
+        if thresholds is None:
+            return _valid_registered(self.registered)
+        th = jnp.asarray(np.asarray(thresholds, np.float64)[: _THI.size],
+                         jnp.float32)
+        return _valid_thresholded(self.registered, self.th_scores, th)
+
+    def masked_ratio(self, valid: jnp.ndarray) -> jnp.ndarray:
+        """(S, C) f32 score/cost greedy ratios, ``-inf`` outside
+        ``valid`` (the segmented top-k input)."""
+        return _masked_ratio(self.overall, self.costs, valid)
+
+    def shard_stats(self, valid: jnp.ndarray) -> tuple[np.ndarray, float]:
+        """((S,) per-shard valid counts, total valid cost) on host."""
+        counts, cost_sum = _shard_stats(self.costs, valid)
+        return np.asarray(counts), float(cost_sum)
+
+    def frontier(self, ratio: jnp.ndarray, k: int,
+                 interpret: bool | None = None
+                 ) -> tuple[np.ndarray, np.ndarray]:
+        """Per-shard top-``k`` frontier of ``ratio``: host-side
+        ``(values (S, k) f32, global row indices (S, k) int64)`` via the
+        ``segmented_topk`` kernel (Pallas on TPU, jnp oracle on CPU)."""
+        from ..kernels import ops
+        vals, lanes = ops.segmented_topk(ratio, int(k), interpret=interpret)
+        vals = np.asarray(vals)
+        rows = (np.arange(self.num_shards, dtype=np.int64)[:, None]
+                * self.shard_cap + np.asarray(lanes, np.int64))
+        return vals, rows

@@ -195,6 +195,137 @@ def greedy_knapsack_batch(scores: np.ndarray, costs: np.ndarray,
 
 
 # ---------------------------------------------------------------------------
+# Stage 1 at fleet scale: hierarchical two-level greedy
+# ---------------------------------------------------------------------------
+
+def _flat_pool_greedy(pool, budget: float, thresholds
+                      ) -> tuple[np.ndarray, float, float, int]:
+    """Host flat path over a ``ClientPoolState``: threshold mask ->
+    greedy over kept rows -> global row indices in pick order."""
+    mask = pool.threshold_mask(thresholds)
+    rows_kept = np.flatnonzero(mask)
+    chosen, ts, tc = greedy_knapsack(pool.overall[rows_kept],
+                                     pool.costs[rows_kept], budget)
+    return rows_kept[chosen], ts, tc, int(rows_kept.size)
+
+
+def hierarchical_greedy_knapsack(pool, budget: float,
+                                 thresholds: np.ndarray | None = None,
+                                 *, mirror=None, shard_cap: int | None = None,
+                                 interpret: bool | None = None,
+                                 stats: dict | None = None
+                                 ) -> tuple[np.ndarray, float, float, int]:
+    """Two-level Stage-1 greedy over the device pool mirror (fleet
+    scale: 1M–10M clients; see ``docs/scaling.md``).
+
+    Level 1 (device, f32): eligibility mask + score/cost ratios over the
+    ``(S, C)`` sharded mirror, then a per-shard top-``F`` frontier via
+    the ``segmented_topk`` kernel — O(n) streaming work, no full-pool
+    argsort. Level 2 (host, f64): the exact paper greedy over the
+    ``<= S*F`` surviving candidates, re-ranked with the host pool's f64
+    scores/costs and the flat path's stable tie-break (ratio ties break
+    toward the lower global row). The frontier escalates (``F *= 2``)
+    whenever a clipped shard could still contribute — i.e. the budget
+    scan consumed a clipped shard's entire frontier, or never hit a
+    stop — so on termination the result provably matches the flat
+    greedy on the f32-frontier candidate set (membership itself is
+    decided in f32; see docs for the near-tie caveat).
+
+    Degenerate budgets that would select a large fraction of the pool
+    (frontier ~ pool) fall back to the flat host path.
+
+    Returns ``(rows, total_score, total_cost, n_valid)`` with ``rows``
+    global pool rows in pick order. ``stats``, if given, is filled with
+    path/frontier/escalation counters.
+    """
+    if mirror is None:
+        mirror = pool.device_mirror(shard_cap=shard_cap)
+    else:
+        mirror.sync(pool)
+    valid = mirror.valid_mask(thresholds)
+    counts, cost_sum = mirror.shard_stats(valid)
+    n_valid = int(counts.sum())
+    if stats is None:
+        stats = {}
+    stats.update(path="frontier", frontier=0, escalations=0,
+                 candidates=0, shards=mirror.num_shards)
+    if n_valid == 0:
+        return np.zeros(0, np.int64), 0.0, 0.0, 0
+    S = mirror.num_shards
+    max_count = int(counts.max())
+    budget = float(budget)
+    # Frontier sizing: expected picks if the budget were spent at the
+    # mean valid cost, spread over shards, with 4x headroom for skew.
+    k_est = budget / max(cost_sum / n_valid, _EPS)
+    if k_est >= 0.5 * n_valid:
+        stats["path"] = "flat-fallback"
+        rows, ts, tc, n_kept = _flat_pool_greedy(pool, budget, thresholds)
+        return rows, ts, tc, n_kept
+    F = int(min(max_count, max(32, 1 << int(np.ceil(
+        np.log2(4.0 * k_est / S + 8.0))))))
+    while True:
+        stats["frontier"] = F
+        vals, rows = mirror.frontier(mirror.masked_ratio(valid), F,
+                                     interpret=interpret)
+        cand = rows[np.isfinite(vals)]
+        stats["candidates"] = int(cand.size)
+        # Host-precision merge: exact greedy over the candidate set.
+        # overall_score on the gathered rows only — identical per-row
+        # values to pool.overall, without forcing the pool-wide O(n)
+        # cache rebuild after every churn event.
+        from .criteria import overall_score
+        sc = overall_score(pool.scores[cand])
+        cs = pool.costs[cand]
+        ratio = sc / np.maximum(cs, _EPS)
+        pos = np.lexsort((cand, -ratio))      # ratio desc, row asc on ties
+        cand_s, oc = cand[pos], cs[pos]
+        rem = np.subtract.accumulate(
+            np.concatenate(([budget], oc)))[:-1]
+        unaff = oc > rem
+        stopped = bool(unaff.any())
+        k = int(np.argmax(unaff)) if stopped else oc.size
+        # Escalate iff a clipped shard could still change the answer:
+        # its whole frontier fed the consumed prefix (selection + the
+        # stopping client), or the scan never stopped at all.
+        clipped = counts > F
+        if clipped.any() and F < max_count:
+            prefix = cand_s[: k + 1] if stopped else cand_s
+            contrib = np.bincount(prefix // mirror.shard_cap, minlength=S)
+            suspect = clipped & (contrib >= F) if stopped else clipped
+            if suspect.any():
+                F = min(2 * F, max_count)
+                stats["escalations"] += 1
+                continue
+        chosen = cand_s[:k]
+        return (chosen, float(sc[pos][:k].sum()), float(oc[:k].sum()),
+                n_valid)
+
+
+def hierarchical_greedy_knapsack_batch(pool, budgets: np.ndarray,
+                                       thresholds_list,
+                                       *, mirror=None,
+                                       shard_cap: int | None = None,
+                                       interpret: bool | None = None):
+    """Batched :func:`hierarchical_greedy_knapsack` for multi-tenant
+    sweeps: one mirror sync serves every task; each task then runs its
+    own frontier + host merge (per-task thresholds make the device mask
+    task-specific, so there is no shared argsort to amortize — the
+    shared work is the mirror itself).
+
+    ``thresholds_list``: per-task thresholds (or ``None``), length T.
+    Returns a list of ``(rows, total_score, total_cost, n_valid)``.
+    """
+    if mirror is None:
+        mirror = pool.device_mirror(shard_cap=shard_cap)
+    else:
+        mirror.sync(pool)
+    budgets = np.atleast_1d(np.asarray(budgets, dtype=np.float64))
+    return [hierarchical_greedy_knapsack(pool, float(b), th, mirror=mirror,
+                                         interpret=interpret)
+            for b, th in zip(budgets, thresholds_list)]
+
+
+# ---------------------------------------------------------------------------
 # Stage 2: vectorized Toyoda pseudo-utility (MKP inner loop)
 # ---------------------------------------------------------------------------
 

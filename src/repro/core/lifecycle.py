@@ -838,10 +838,22 @@ def _period_checkpoint(provider, state: TaskState,
 def _apply_churn(provider, state: TaskState) -> None:
     """Between periods, sync the task with pool churn: drop deregistered
     clients, then admit qualifying joiners while the stage-1 budget
-    lasts (score/cost-ratio greedy over the newly-registered rows — an
-    incremental stage 1, not a re-run). Rows are found by their
-    registration-event stamp (``reg_seq``), so a rejoin that reactivated
-    a tombstoned row below the old row-count is seen too."""
+    lasts — an incremental stage 1, not a re-run. Rows are found by
+    their registration-event stamp (``reg_seq``), so a rejoin that
+    reactivated a tombstoned row below the old row-count is seen too.
+
+    Admission routes through the task's *resolved selection policy*
+    (optional ``select_joiners`` hook, see ``core.policy``): a ``dp``
+    task admits joiners with the exact knapsack, a ``score_prop`` task
+    samples them, etc. Policies without the hook — and the default
+    ``paper_greedy`` — use the skip-unaffordable score/cost-ratio
+    greedy, bit-identical to the pre-policy hard-coded rule. Rejoining
+    clients the task already tracks (``state.eligible``) are filtered
+    out *before* the policy sees the candidates: their seat is already
+    paid for, and this checkpoint's ``update_pool ∩ eligible`` already
+    decided their membership — no second charge."""
+    from .policy import resolve_selection_policy
+    from .selection import select_greedy
     ps = provider.pool_state
     _drop_deregistered(provider, state)
     task = state.task
@@ -854,31 +866,33 @@ def _apply_churn(provider, state: TaskState) -> None:
     state.pool_watermark = ps.reg_counter
     ok = ps.threshold_mask(task.thresholds)[rows]
     rows = rows[ok]
+    if rows.size:
+        eligible = state.eligible
+        free = np.fromiter((int(c) not in eligible
+                            for c in ps.client_ids[rows]),
+                           dtype=bool, count=rows.size)
+        rows = rows[free]
     if rows.size == 0:
         return
     budget_left = (task.budget - state.pool_selected.total_cost
                    - state.admitted_cost)
-    eligible = state.eligible
-    ratio = ps.overall[rows] / np.maximum(ps.costs[rows], 1e-12)
-    admitted: list[int] = []
-    for r in rows[np.argsort(-ratio, kind="stable")]:
-        cid = int(ps.client_ids[r])
-        if cid in eligible:
-            # a rejoining stage-1/previously-admitted client: its seat
-            # is already paid for and tracked, and this checkpoint's
-            # update_pool ∩ eligible already decided its membership
-            # (respecting availability/suspension) — no second charge
-            continue
-        c = float(ps.costs[r])
-        if c > budget_left:
-            continue        # keep scanning for cheaper joiners
-        admitted.append(cid)
-        state.admitted_cost += c
-        budget_left -= c
-    if admitted:
-        state.admitted.extend(admitted)
-        state.pool.update(admitted)
-        state.tracker.add_clients(admitted)   # one batched row append
+    policy = resolve_selection_policy(task)
+    hook = getattr(policy, "select_joiners", None)
+    if hook is not None:
+        picks = hook(ps.overall[rows], ps.costs[rows], budget_left,
+                     state.rng)
+    else:                       # legacy rule for hook-less custom policies
+        picks = np.asarray(select_greedy(
+            ps.overall[rows], ps.costs[rows], budget_left,
+            skip_unaffordable=True).selected, dtype=np.int64)
+    if picks.size == 0:
+        return
+    admitted = [int(c) for c in ps.client_ids[rows[picks]]]
+    for c in ps.costs[rows[picks]]:
+        state.admitted_cost += float(c)    # legacy fold order, bit-exact
+    state.admitted.extend(admitted)
+    state.pool.update(admitted)
+    state.tracker.add_clients(admitted)   # one batched row append
 
 
 # ---------------------------------------------------------------------------

@@ -84,7 +84,9 @@ from . import engine
 from .criteria import nid
 from .pool import ClientPoolState
 from .scheduling import ScheduleResult, generate_subsets, random_subsets
-from .selection import SelectionResult, select_initial_pool
+from .selection import (SelectionResult, select_dp, select_greedy,
+                        select_initial_pool, select_random,
+                        select_score_prop, select_score_prop_batch)
 
 if TYPE_CHECKING:                     # import cycle: lifecycle imports
     from .lifecycle import TaskRequest  # selection/scheduling like we do
@@ -103,6 +105,15 @@ class SelectionPolicy(Protocol):
     ``policy_state``. ``select`` consumes ``rng`` deterministically (or
     not at all), so a task restored from a checkpoint re-selects
     identically.
+
+    Policies may additionally implement the *optional* hook
+    ``select_joiners(scores, costs, budget_left, rng) -> positions``:
+    the admission rule for threshold-eligible clients that join
+    mid-period (``PERIOD_CHECKPOINT`` churn, see ``core.lifecycle``).
+    It is looked up with ``getattr`` — deliberately NOT part of this
+    protocol, so pre-existing custom policies keep registering; tasks
+    running a policy without the hook fall back to the legacy greedy
+    admission rule.
     """
 
     name: str
@@ -256,6 +267,24 @@ class _BudgetedSelection:
     def select_batch(self, pool, tasks, rngs):
         return [self.select(pool, t, r) for t, r in zip(tasks, rngs)]
 
+    def select_joiners(self, scores, costs, budget_left, rng):
+        """Admit mid-period joiners with this policy's own solver
+        (thresholds were already applied by the lifecycle; the knapsack
+        here is over the leftover budget). Returns candidate positions
+        in pick order. The greedy solver runs in skip-unaffordable mode
+        — bit-identical to the legacy hard-coded admission loop."""
+        rng = rng or np.random.default_rng(0)
+        if self.method == "dp":
+            res = select_dp(scores, costs, budget_left)
+        elif self.method == "random":
+            res = select_random(scores, costs, budget_left, rng)
+        elif self.method == "score_prop":
+            res = select_score_prop(scores, costs, budget_left, rng)
+        else:
+            res = select_greedy(scores, costs, budget_left,
+                                skip_unaffordable=True)
+        return np.asarray(res.selected, dtype=np.int64)
+
 
 @register_selection_policy
 class PaperGreedySelection(_BudgetedSelection):
@@ -272,6 +301,10 @@ class PaperGreedySelection(_BudgetedSelection):
     method = "greedy"
 
     def select_batch(self, pool, tasks, rngs):
+        if isinstance(pool, ClientPoolState):
+            from . import device_pool
+            if pool.n >= device_pool.HIERARCHICAL_MIN_N:
+                return self._select_batch_hierarchical(pool, tasks)
         budgets = np.array([t.budget for t in tasks], dtype=np.float64)
         valid = np.stack([pool.threshold_mask(t.thresholds) for t in tasks])
         masks, _, _ = engine.greedy_knapsack_batch(
@@ -293,6 +326,40 @@ class PaperGreedySelection(_BudgetedSelection):
             if len(res.selected) < task.n_star:
                 res.feasible = False
                 floor = pool.budget_floor(task.n_star, valid[t])
+                res.note = (f"budget {task.budget} selects only "
+                            f"{len(res.selected)} < n*={task.n_star} "
+                            f"clients; Eq.(11) floor is {floor:.1f}")
+            results.append(res)
+        return results
+
+    def _select_batch_hierarchical(self, pool, tasks):
+        """Fleet-scale batch path: one device-mirror sync serves every
+        task, each task runs the two-level frontier greedy
+        (``engine.hierarchical_greedy_knapsack_batch``) instead of a
+        host argsort over the full pool. Same ids (pool order), totals
+        and feasibility notes as the flat batch path — asserted in
+        tests/test_scale_plane.py."""
+        from .criteria import overall_score
+        outs = engine.hierarchical_greedy_knapsack_batch(
+            pool, np.array([t.budget for t in tasks], dtype=np.float64),
+            [t.thresholds for t in tasks])
+        results: list[SelectionResult] = []
+        for task, (rows, _, _, n_kept) in zip(tasks, outs):
+            if n_kept < task.n_star:
+                results.append(SelectionResult(
+                    [], 0.0, 0.0, feasible=False,
+                    note=f"only {n_kept} clients pass thresholds, "
+                         f"need {task.n_star}"))
+                continue
+            rows = np.sort(rows)              # batch contract: pool order
+            res = SelectionResult(
+                pool.client_ids[rows].tolist(),
+                float(overall_score(pool.scores[rows]).sum()),
+                float(pool.costs[rows].sum()))
+            if len(res.selected) < task.n_star:
+                res.feasible = False
+                floor = pool.budget_floor(
+                    task.n_star, pool.threshold_mask(task.thresholds))
                 res.note = (f"budget {task.budget} selects only "
                             f"{len(res.selected)} < n*={task.n_star} "
                             f"clients; Eq.(11) floor is {floor:.1f}")
@@ -329,6 +396,43 @@ class ScoreProportionalSelection(_BudgetedSelection):
 
     name = "score_prop"
     method = "score_prop"
+
+    def select_batch(self, pool, tasks, rngs):
+        """Batched weighted sampling: per-task Gumbel/Efraimidis–
+        Spirakis keys drawn serially (identical rng consumption to
+        ``select`` — infeasible tasks draw nothing), then ONE stacked
+        ``(T, n)`` argsort + left-fold budget sweep
+        (``selection.select_score_prop_batch``). Bit-identical to the
+        serial loop per task (asserted in tests/test_scale_plane.py)."""
+        if not isinstance(pool, ClientPoolState):
+            return super().select_batch(pool, tasks, rngs)
+        valid = np.stack([pool.threshold_mask(t.thresholds) for t in tasks])
+        n_keeps = valid.sum(axis=1)
+        run = [t for t in range(len(tasks)) if n_keeps[t] >= tasks[t].n_star]
+        batch = select_score_prop_batch(
+            pool.overall, pool.costs,
+            np.array([tasks[t].budget for t in run], dtype=np.float64),
+            [rngs[t] or np.random.default_rng(0) for t in run],
+            valid[run]) if run else []
+        results: list[SelectionResult | None] = [None] * len(tasks)
+        for t, task in enumerate(tasks):
+            if n_keeps[t] < task.n_star:
+                results[t] = SelectionResult(
+                    [], 0.0, 0.0, feasible=False,
+                    note=f"only {int(n_keeps[t])} clients pass thresholds, "
+                         f"need {task.n_star}")
+        for j, t in enumerate(run):
+            picks, ts, tc = batch[j]
+            task = tasks[t]
+            res = SelectionResult(pool.client_ids[picks].tolist(), ts, tc)
+            if len(res.selected) < task.n_star:
+                res.feasible = False
+                floor = pool.budget_floor(task.n_star, valid[t])
+                res.note = (f"budget {task.budget} selects only "
+                            f"{len(res.selected)} < n*={task.n_star} "
+                            f"clients; Eq.(11) floor is {floor:.1f}")
+            results[t] = res
+        return results
 
 
 # ---------------------------------------------------------------------------

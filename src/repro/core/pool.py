@@ -99,6 +99,10 @@ class ClientPoolState:
         self._pos_all = None          # id -> row incl. tombstones
         self._sizes = None            # cached data_sizes()
         self._known = None            # id universe (incl. tombstones)
+        self._mutlog: list = []       # (version, rows) per churn event —
+        # the dirty-region protocol consumed by DevicePoolState.sync
+        self._mutlog_floor = 0        # oldest version still replayable
+        self._mirror = None           # cached device mirror (lazy)
 
     _FIELDS = ("client_ids", "scores", "histograms", "costs", "active",
                "participation", "reputation", "registered", "reg_seq")
@@ -211,8 +215,54 @@ class ClientPoolState:
         return np.array([int(c) in pos for c in ids], dtype=bool)
 
     # -- churn (register / deregister) ---------------------------------------
+    _MUTLOG_MAX = 65536               # churn events retained for replay
+
     def _bump_version(self) -> None:
         self._version += 1
+
+    def _log_mutation(self, rows: np.ndarray) -> None:
+        """Record the rows touched by the mutation that produced the
+        current ``version`` (the dirty-region log). Device mirrors
+        replay entries newer than their synced version instead of
+        re-staging whole buffers; once the log overflows, the floor
+        rises and laggards fall back to a full restage."""
+        self._mutlog.append((self._version, np.asarray(rows, np.int64)))
+        if len(self._mutlog) > self._MUTLOG_MAX:
+            drop = len(self._mutlog) - self._MUTLOG_MAX
+            self._mutlog_floor = self._mutlog[drop - 1][0]
+            del self._mutlog[:drop]
+
+    def dirty_rows_since(self, version: int) -> np.ndarray | None:
+        """Unique rows mutated after ``version`` (ascending), or
+        ``None`` when the log no longer reaches back that far (the
+        caller must re-stage from scratch). ``version`` equal to the
+        current :attr:`version` returns an empty array."""
+        if version < self._mutlog_floor:
+            return None
+        rows = [r for v, r in self._mutlog if v > version]
+        if not rows:
+            return np.zeros(0, dtype=np.int64)
+        return np.unique(np.concatenate(rows))
+
+    def device_mirror(self, shard_cap: int | None = None,
+                      include_histograms: bool = False):
+        """The pool's cached :class:`~repro.core.device_pool.
+        DevicePoolState` (sharded jnp arrays), synced to the current
+        version via the dirty-region log — thousands of churn events
+        per sweep update row slices in place instead of re-staging the
+        buffers. Rebuilt only when the requested geometry changes."""
+        from .device_pool import DevicePoolState   # no import cycle
+        m = self._mirror
+        if (m is None
+                or (shard_cap is not None and m.shard_cap != shard_cap)
+                or (include_histograms and m.histograms is None)):
+            m = DevicePoolState.from_host(
+                self, shard_cap=shard_cap,
+                include_histograms=include_histograms)
+            self._mirror = m
+        else:
+            m.sync(self)
+        return m
 
     def _ensure_capacity(self, extra: int) -> None:
         """Grow the backing buffers (doubling) so ``extra`` more rows fit;
@@ -335,6 +385,7 @@ class ClientPoolState:
         self._overall = None
         self._sizes = None
         self._bump_version()
+        self._log_mutation(out)
         return out
 
     def deregister(self, ids: Sequence[int] | np.ndarray) -> None:
@@ -352,6 +403,7 @@ class ClientPoolState:
             for c in ids:
                 self._pos.pop(int(c), None)
         self._bump_version()
+        self._log_mutation(rows)
 
     def subset(self, index: np.ndarray) -> "ClientPoolState":
         """A new pool state restricted to ``index`` (bool mask or rows)."""

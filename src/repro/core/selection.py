@@ -198,6 +198,58 @@ def select_score_prop(scores: np.ndarray, costs: np.ndarray, budget: float,
     return SelectionResult([ids[j] for j in chosen], ts, tc)
 
 
+def select_score_prop_batch(scores: np.ndarray, costs: np.ndarray,
+                            budgets: np.ndarray,
+                            rngs: Sequence[np.random.Generator],
+                            valid: np.ndarray | None = None
+                            ) -> list[tuple[np.ndarray, float, float]]:
+    """Batched :func:`select_score_prop` over T concurrent tasks sharing
+    the client pool columns.
+
+    Per task the Efraimidis–Spirakis keys are drawn exactly as the
+    serial path does (``rng.random`` over that task's *valid* clients,
+    in valid-position order), then the T budget scans collapse into one
+    vectorized ``(T, n)`` sweep: stable argsort of the stacked keys
+    (invalid clients get ``-inf`` keys and ``+inf`` costs, so they sort
+    last and act as hard stops, same as never being visited) and the
+    same left-fold remaining-budget recurrence as
+    ``engine.greedy_knapsack_batch``. Selections are bit-identical to
+    running the serial sampler per task with the same generators
+    (asserted in tests/test_scale_plane.py).
+
+    Returns per task ``(positions in pick order, total_score,
+    total_cost)`` — positions index into ``scores``/``costs``.
+    """
+    scores = np.asarray(scores, dtype=np.float64)
+    costs = np.asarray(costs, dtype=np.float64)
+    budgets = np.atleast_1d(np.asarray(budgets, dtype=np.float64))
+    T, n = budgets.shape[0], scores.shape[0]
+    if valid is None:
+        valid = np.ones((T, n), dtype=bool)
+    else:
+        valid = np.asarray(valid, dtype=bool)
+    tiny = np.finfo(np.float64).tiny
+    keys = np.full((T, n), -np.inf)
+    w = np.maximum(scores, 1e-12)
+    for t in range(T):                      # rng consumption stays serial
+        cols = np.flatnonzero(valid[t])
+        u = np.maximum(rngs[t].random(cols.size), tiny)
+        keys[t, cols] = np.log(u) / w[cols]
+    order = np.argsort(-keys, axis=1, kind="stable")      # (T, n)
+    oc = np.where(np.take_along_axis(valid, order, axis=1),
+                  costs[order], np.inf)
+    rem = np.subtract.accumulate(
+        np.concatenate([budgets[:, None], oc], axis=1), axis=1)[:, :-1]
+    unaff = oc > rem
+    first = np.where(unaff.any(axis=1), unaff.argmax(axis=1), n)
+    out = []
+    for t in range(T):
+        picks = order[t, : first[t]]
+        out.append((picks, float(scores[picks].sum()),
+                    float(costs[picks].sum())))
+    return out
+
+
 # ---------------------------------------------------------------------------
 # Full Stage-1 pipeline
 # ---------------------------------------------------------------------------
@@ -247,6 +299,11 @@ def select_initial_pool(
     """
     pool = (profiles if isinstance(profiles, ClientPoolState)
             else ClientPoolState.from_profiles(profiles))
+    if method == "greedy" and isinstance(profiles, ClientPoolState):
+        from . import device_pool
+        if pool.n >= device_pool.HIERARCHICAL_MIN_N:
+            return _select_initial_pool_hierarchical(
+                pool, budget, n_star, thresholds)
     mask = pool.threshold_mask(thresholds)
     n_kept = int(mask.sum())
     if n_kept < n_star:
@@ -272,4 +329,30 @@ def select_initial_pool(
         floor = pool.budget_floor(n_star, mask)
         res.note = (f"budget {budget} selects only {len(res.selected)} < n*={n_star} "
                     f"clients; Eq.(11) floor is {floor:.1f}")
+    return res
+
+
+def _select_initial_pool_hierarchical(
+        pool: ClientPoolState, budget: float, n_star: int,
+        thresholds: np.ndarray | None) -> SelectionResult:
+    """Fleet-scale Stage 1: the two-level device-mirror greedy
+    (``engine.hierarchical_greedy_knapsack``) behind the same contract
+    as the flat path — identical ids in pick order, totals, and
+    feasibility notes (asserted in tests/test_scale_plane.py). Entered
+    from :func:`select_initial_pool` for ``method="greedy"`` pools at
+    or above ``device_pool.HIERARCHICAL_MIN_N``; eligibility counting
+    runs on the device mask, the Eq. (11) floor (infeasible path only)
+    on the host mask."""
+    rows, ts, tc, n_kept = engine.hierarchical_greedy_knapsack(
+        pool, budget, thresholds)
+    if n_kept < n_star:
+        return SelectionResult(
+            [], 0.0, 0.0, feasible=False,
+            note=f"only {n_kept} clients pass thresholds, need {n_star}")
+    res = SelectionResult(pool.client_ids[rows].tolist(), ts, tc)
+    if len(res.selected) < n_star:
+        res.feasible = False
+        floor = pool.budget_floor(n_star, pool.threshold_mask(thresholds))
+        res.note = (f"budget {budget} selects only {len(res.selected)} "
+                    f"< n*={n_star} clients; Eq.(11) floor is {floor:.1f}")
     return res

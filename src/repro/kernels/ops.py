@@ -15,6 +15,7 @@ from .fedavg_agg import fedavg_agg_quality as _fedavg_quality_pallas
 from .fedavg_agg import fedavg_agg_tree
 from .flash_attention import flash_attention as _flash_pallas
 from .mkp_utility import mkp_utility as _mkp_utility_pallas
+from .segmented_topk import segmented_topk as _segmented_topk_pallas
 from .mlstm_scan import mlstm_scan as _mlstm_pallas
 from .rmsnorm import rmsnorm as _rmsnorm_pallas
 from .swiglu import swiglu as _swiglu_pallas
@@ -86,6 +87,20 @@ def mkp_utility(values, weights, residual, selectable, *, interpret=None):
     return ref.mkp_utility_ref(values, weights, residual, selectable)
 
 
+def segmented_topk(x, k, *, interpret=None):
+    """Per-segment top-k frontier for hierarchical selection
+    (core.engine / core.device_pool).
+
+    x: (S, C) per-segment rows (``-inf``-padded). Returns
+    ``(values (S, k) f32, lane_indices (S, k) int32)``, descending per
+    segment, ties to the lowest lane.
+    """
+    use_pallas = _on_tpu() if interpret is None else True
+    if use_pallas:
+        return _segmented_topk_pallas(x, int(k), interpret=bool(interpret))
+    return ref.segmented_topk_ref(x, int(k))
+
+
 def mlstm_scan(q, k, v, log_f, log_i=None, *, chunk=64, normalize=True,
                interpret=None):
     use_pallas = _on_tpu() if interpret is None else True
@@ -98,4 +113,4 @@ def mlstm_scan(q, k, v, log_f, log_i=None, *, chunk=64, normalize=True,
 
 __all__ = ["flash_attention", "flash_attention_bshd", "rmsnorm", "swiglu",
            "fedavg_agg", "fedavg_agg_quality", "fedavg_agg_tree",
-           "mkp_utility", "mlstm_scan"]
+           "mkp_utility", "mlstm_scan", "segmented_topk"]

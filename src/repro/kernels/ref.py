@@ -95,6 +95,17 @@ def mlstm_scan_ref(q, k, v, log_f, log_i, *, chunk: int = 64,
     return jnp.moveaxis(out, 1, 2).astype(v.dtype)
 
 
+def segmented_topk_ref(x, k: int):
+    """Segmented top-k oracle: x (S, C) -> ((S, k) f32 values,
+    (S, k) int32 lane indices), descending per segment. Ties break to
+    the lowest lane (``lax.top_k`` semantics, matching the kernel's
+    iterative max-extract). ``-inf`` values mark exhausted segments;
+    their indices are not meaningful."""
+    k = int(min(k, x.shape[-1]))
+    vals, idx = jax.lax.top_k(x.astype(jnp.float32), k)
+    return vals, idx.astype(jnp.int32)
+
+
 def mkp_utility_ref(values, weights, residual, selectable, eps: float = 1e-12):
     """Toyoda pseudo-utility oracle: values (n,), weights (n, m),
     residual (m,), selectable (n,) -> (n,) f32, −inf where infeasible."""

@@ -1,0 +1,80 @@
+"""Segmented top-k Pallas kernel (hierarchical selection frontier, §VI-A
+at fleet scale).
+
+The million-client selection plane shards the pool into ``S`` segments
+of ``C`` rows and replaces the full-pool argsort of the greedy knapsack
+with a per-shard *frontier*: the top-``k`` score/cost ratios of every
+shard, extracted in one pass over the sharded ratio matrix. The global
+merge then runs the exact greedy over the ``S * k`` surviving
+candidates on the host (``core.engine.hierarchical_greedy_knapsack``).
+
+Kernel shape: one grid step per segment; the segment row ``(1, C)``
+lives in VMEM for the whole program, and the top-k is an iterative
+max-extract — ``k`` vectorized max/mask passes over the resident row,
+no sort network and no dynamic stores (the running ``(1, k)``
+value/index frontiers are carried through a ``fori_loop`` and written
+once). That trades ``k`` VPU passes for a single HBM read per row,
+which is the right trade for the frontier regime ``k << C``. Ties
+break toward the lowest lane index (matching ``jax.lax.top_k`` and the
+host argsort's stable order).
+
+Rows shorter than ``C`` are padded with ``-inf`` by the caller; a
+``-inf`` frontier entry therefore means "segment exhausted" and its
+index is meaningless (the oracle and kernel both park it at lane 0).
+VMEM bounds the segment width: a ``(1, C)`` f32 row plus the iota mask
+must fit, so keep ``C`` at or below ~256k lanes (the default shard
+capacity of ``core.device_pool`` is far under this).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from ._compat import CompilerParams as _CompilerParams
+
+
+def _segmented_topk_kernel(x_ref, vals_ref, idx_ref, *, k: int, width: int):
+    row = x_ref[...].astype(jnp.float32)                 # (1, C)
+    lanes = jax.lax.broadcasted_iota(jnp.int32, row.shape, 1)
+    slots = jax.lax.broadcasted_iota(jnp.int32, (1, k), 1)
+
+    def body(i, carry):
+        row, vals, idxs = carry
+        m = jnp.max(row, axis=1, keepdims=True)          # (1, 1)
+        # lowest lane attaining the max (stable tie-break)
+        j = jnp.min(jnp.where(row == m, lanes, width), axis=1, keepdims=True)
+        vals = jnp.where(slots == i, m, vals)
+        idxs = jnp.where(slots == i, j, idxs)
+        row = jnp.where(lanes == j, -jnp.inf, row)
+        return row, vals, idxs
+
+    init = (row, jnp.full((1, k), -jnp.inf, jnp.float32),
+            jnp.zeros((1, k), jnp.int32))
+    _, vals, idxs = jax.lax.fori_loop(0, k, body, init)
+    vals_ref[...] = vals
+    idx_ref[...] = idxs
+
+
+@functools.partial(jax.jit, static_argnames=("k", "interpret"))
+def segmented_topk(x, k: int, *, interpret: bool = False):
+    """x: (S, C) per-segment rows -> ((S, k) values f32, (S, k) lane
+    indices int32), descending per segment, ties to the lowest lane.
+    Entries equal to ``-inf`` mean the segment ran out of finite rows.
+    """
+    S, C = x.shape
+    k = int(min(k, C))
+    return pl.pallas_call(
+        functools.partial(_segmented_topk_kernel, k=k, width=C),
+        grid=(S,),
+        in_specs=[pl.BlockSpec((1, C), lambda i: (i, 0))],
+        out_specs=[pl.BlockSpec((1, k), lambda i: (i, 0)),
+                   pl.BlockSpec((1, k), lambda i: (i, 0))],
+        out_shape=[jax.ShapeDtypeStruct((S, k), jnp.float32),
+                   jax.ShapeDtypeStruct((S, k), jnp.int32)],
+        compiler_params=_CompilerParams(
+            dimension_semantics=("parallel",)),
+        interpret=interpret,
+    )(x.astype(jnp.float32))

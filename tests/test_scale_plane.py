@@ -1,0 +1,416 @@
+"""Million-client selection plane (ISSUE-6): segmented top-k kernel vs
+oracle, DevicePoolState mirror coherence under randomized churn,
+hierarchical two-level greedy vs the flat path (bit-exact, incl.
+tie-heavy pools and forced escalation), batched score_prop vs serial,
+select_pools_batch parity at >= 2 shards, and the policy-aware churn
+admission regression."""
+import numpy as np
+import pytest
+
+from repro.core import (FLServiceProvider, TaskPhase, TaskRequest, drain,
+                        step, submit)
+from repro.core import device_pool, engine, policy, selection
+from repro.core.criteria import overall_score, random_histograms
+from repro.core.device_pool import DevicePoolState
+from repro.core.pool import ClientPoolState
+from repro.kernels import ops, ref
+
+TH = np.full(9, 0.05)
+
+
+def _pool(n, seed=0):
+    return ClientPoolState.random(n, 10, np.random.default_rng(seed))
+
+
+def _churn(pool, rng, n_events):
+    """Random deregister/register mix; returns nothing (mutates pool)."""
+    drop = rng.choice(pool.client_ids[pool.registered], size=n_events // 2,
+                      replace=False)
+    pool.deregister(drop)
+    k = n_events - drop.size
+    base = int(pool.client_ids.max()) + 1
+    pool.register_arrays(np.arange(base, base + k),
+                         rng.random((k, 11)),
+                         random_histograms(k, 10, rng),
+                         rng.uniform(1.0, 5.0, k))
+
+
+# ---------------------------------------------------------------------------
+# segmented top-k kernel
+# ---------------------------------------------------------------------------
+
+class TestSegmentedTopk:
+    @pytest.mark.parametrize("S,C,k", [(1, 8, 3), (4, 64, 8), (7, 129, 16),
+                                       (3, 32, 32), (2, 16, 40)])
+    def test_kernel_matches_oracle(self, S, C, k):
+        x = np.random.default_rng(S * C + k).normal(size=(S, C))
+        vo, io = ref.segmented_topk_ref(np.asarray(x, np.float32), k)
+        vk, ik = ops.segmented_topk(np.asarray(x, np.float32), k,
+                                    interpret=True)
+        np.testing.assert_array_equal(np.asarray(vk), np.asarray(vo))
+        np.testing.assert_array_equal(np.asarray(ik), np.asarray(io))
+
+    def test_ties_break_to_lowest_lane(self):
+        x = np.zeros((2, 12), np.float32)
+        x[0, [3, 7, 11]] = 5.0                  # three-way tie
+        x[1, :] = 1.0                           # full-row tie
+        for impl in (lambda a: ref.segmented_topk_ref(a, 4),
+                     lambda a: ops.segmented_topk(a, 4, interpret=True)):
+            _, idx = impl(x)
+            np.testing.assert_array_equal(np.asarray(idx)[0], [3, 7, 11, 0])
+            np.testing.assert_array_equal(np.asarray(idx)[1], [0, 1, 2, 3])
+
+    def test_neg_inf_padding_marks_exhaustion(self):
+        x = np.full((2, 8), -np.inf, np.float32)
+        x[0, 2] = 1.0
+        vals, idx = ops.segmented_topk(x, 3, interpret=True)
+        vals = np.asarray(vals)
+        assert vals[0, 0] == 1.0 and np.asarray(idx)[0, 0] == 2
+        assert np.all(np.isinf(vals[0, 1:])) and np.all(np.isinf(vals[1]))
+
+    def test_dispatcher_uses_oracle_on_cpu(self):
+        x = np.random.default_rng(0).normal(size=(3, 20)).astype(np.float32)
+        vd, idd = ops.segmented_topk(x, 5)       # interpret=None -> oracle
+        vo, ido = ref.segmented_topk_ref(x, 5)
+        np.testing.assert_array_equal(np.asarray(vd), np.asarray(vo))
+        np.testing.assert_array_equal(np.asarray(idd), np.asarray(ido))
+
+
+# ---------------------------------------------------------------------------
+# device mirror + dirty-region sync
+# ---------------------------------------------------------------------------
+
+class TestDevicePoolMirror:
+    def _assert_coherent(self, m, pool):
+        """Mirror rows [0, pool.n) equal a fresh staging of the host."""
+        fresh = DevicePoolState.from_host(pool, shard_cap=m.shard_cap)
+        for attr in ("overall", "costs", "th_scores", "registered"):
+            a = np.asarray(getattr(m, attr)).reshape(m.capacity, -1)[:pool.n]
+            b = np.asarray(getattr(fresh, attr)
+                           ).reshape(fresh.capacity, -1)[:pool.n]
+            np.testing.assert_array_equal(a, b, err_msg=attr)
+        assert m.n_rows == pool.n and m.synced_version == pool.version
+
+    def test_from_host_layout(self):
+        pool = _pool(1000)
+        m = DevicePoolState.from_host(pool, shard_cap=256)
+        assert m.num_shards == 4 and m.capacity == 1024
+        reg = np.asarray(m.registered).reshape(-1)
+        assert reg[:1000].all() and not reg[1000:].any()
+        np.testing.assert_allclose(
+            np.asarray(m.overall).reshape(-1)[:1000],
+            overall_score(pool.scores).astype(np.float32), rtol=0, atol=0)
+
+    def test_incremental_sync_after_randomized_churn(self):
+        pool = _pool(2000, seed=3)
+        m = pool.device_mirror(shard_cap=512)
+        rng = np.random.default_rng(7)
+        for _ in range(5):
+            _churn(pool, rng, rng.integers(10, 120))
+            m2 = pool.device_mirror(shard_cap=512)
+            assert m2 is m                       # cached object, synced
+            self._assert_coherent(m, pool)
+        assert m.restages == 1                   # only the initial staging
+        assert m.syncs == 5
+
+    def test_growth_appends_shards(self):
+        pool = _pool(500, seed=1)
+        m = pool.device_mirror(shard_cap=256)
+        assert m.num_shards == 2
+        _churn(pool, np.random.default_rng(2), 4)  # few events first
+        big = 900                                  # then a big join wave
+        base = int(pool.client_ids.max()) + 1
+        r = np.random.default_rng(5)
+        pool.register_arrays(np.arange(base, base + big),
+                             r.random((big, 11)),
+                             random_histograms(big, 10, r),
+                             r.uniform(1, 5, big))
+        m2 = pool.device_mirror(shard_cap=256)
+        assert m2 is m and m.num_shards >= -(-pool.n // 256)
+        self._assert_coherent(m, pool)
+
+    def test_pruned_log_forces_restage(self):
+        pool = _pool(300, seed=4)
+        m = pool.device_mirror(shard_cap=128)
+        old_max = ClientPoolState._MUTLOG_MAX
+        ClientPoolState._MUTLOG_MAX = 4
+        try:
+            rng = np.random.default_rng(9)
+            for _ in range(10):                  # overflow the log
+                _churn(pool, rng, 6)
+            assert pool.dirty_rows_since(m.synced_version) is None
+            m2 = pool.device_mirror(shard_cap=128)
+        finally:
+            ClientPoolState._MUTLOG_MAX = old_max
+        assert m2 is m and m.restages == 2
+        self._assert_coherent(m, pool)
+
+    def test_noop_sync_when_clean(self):
+        pool = _pool(100)
+        m = pool.device_mirror(shard_cap=64)
+        m2 = pool.device_mirror(shard_cap=64)
+        assert m2 is m and m.syncs == 0 and m.restages == 1
+
+
+# ---------------------------------------------------------------------------
+# hierarchical two-level greedy vs flat
+# ---------------------------------------------------------------------------
+
+class TestHierarchicalEquivalence:
+    @pytest.mark.parametrize("budget", [50.0, 800.0, 8000.0])
+    def test_matches_flat_greedy(self, budget):
+        pool = _pool(6000, seed=11)
+        frows, fts, ftc, fnv = engine._flat_pool_greedy(pool, budget, TH)
+        stats = {}
+        rows, ts, tc, nv = engine.hierarchical_greedy_knapsack(
+            pool, budget, TH, shard_cap=512, stats=stats)
+        np.testing.assert_array_equal(rows, frows)  # incl. pick order
+        assert ts == fts and tc == ftc and nv == fnv
+        assert stats["path"] == "frontier" and stats["shards"] >= 2
+
+    def test_tie_heavy_pool(self):
+        pool = _pool(4000, seed=12)
+        pool.scores[:] = np.round(pool.scores * 4) / 4   # massive ties
+        pool.costs[:] = np.round(np.maximum(pool.costs, 1.0))
+        pool._overall = None
+        frows, _, _, _ = engine._flat_pool_greedy(pool, 400.0, TH)
+        rows, _, _, _ = engine.hierarchical_greedy_knapsack(
+            pool, 400.0, TH, shard_cap=256)
+        np.testing.assert_array_equal(rows, frows)
+
+    def test_escalation_still_exact(self):
+        # skew all the best ratios into one shard so the initial
+        # frontier must escalate before the answer stabilizes
+        pool = _pool(2000, seed=13)
+        pool.costs[:256] = 1.0                  # shard 0 = cheap = hot
+        pool._overall = None
+        stats = {}
+        rows, ts, tc, _ = engine.hierarchical_greedy_knapsack(
+            pool, 150.0, TH, shard_cap=256, stats=stats)
+        frows, fts, ftc, _ = engine._flat_pool_greedy(pool, 150.0, TH)
+        assert stats["escalations"] >= 1
+        np.testing.assert_array_equal(rows, frows)
+        assert ts == fts and tc == ftc
+
+    def test_select_everything_budget_falls_back_flat(self):
+        pool = _pool(3000, seed=14)
+        stats = {}
+        rows, ts, tc, _ = engine.hierarchical_greedy_knapsack(
+            pool, 10.0 * pool.n, TH, shard_cap=512, stats=stats)
+        assert stats["path"] == "flat-fallback"
+        frows, fts, ftc, _ = engine._flat_pool_greedy(pool, 10.0 * pool.n, TH)
+        np.testing.assert_array_equal(rows, frows)
+
+    def test_post_churn_reselection_matches(self):
+        pool = _pool(3000, seed=15)
+        m = pool.device_mirror(shard_cap=512)
+        rng = np.random.default_rng(16)
+        for _ in range(3):
+            _churn(pool, rng, 80)
+            rows, ts, tc, nv = engine.hierarchical_greedy_knapsack(
+                pool, 900.0, TH, mirror=m)
+            frows, fts, ftc, fnv = engine._flat_pool_greedy(pool, 900.0, TH)
+            np.testing.assert_array_equal(rows, frows)
+            assert ts == fts and tc == ftc and nv == fnv
+        assert m.restages == 1
+
+    def test_select_initial_pool_routes_hierarchical(self, monkeypatch):
+        monkeypatch.setattr(device_pool, "HIERARCHICAL_MIN_N", 1000)
+        monkeypatch.setattr(device_pool, "DEFAULT_SHARD_CAP", 512)
+        pool = _pool(2500, seed=17)
+        res = selection.select_initial_pool(pool, 700.0, n_star=5,
+                                            thresholds=TH)
+        flat = selection.select_initial_pool(pool, 700.0, n_star=5,
+                                             thresholds=TH, method="greedy")
+        # second call hits the same route; compare against a pool below
+        # the threshold cutoff containing identical rows
+        monkeypatch.setattr(device_pool, "HIERARCHICAL_MIN_N", 10**9)
+        ref_res = selection.select_initial_pool(pool, 700.0, n_star=5,
+                                                thresholds=TH)
+        assert res.selected == ref_res.selected == flat.selected
+        assert res.total_score == ref_res.total_score
+        assert res.total_cost == ref_res.total_cost
+        assert res.feasible and res.note == ref_res.note
+
+    def test_infeasible_notes_match_flat(self, monkeypatch):
+        monkeypatch.setattr(device_pool, "HIERARCHICAL_MIN_N", 100)
+        monkeypatch.setattr(device_pool, "DEFAULT_SHARD_CAP", 64)
+        pool = _pool(400, seed=18)
+        hi = selection.select_initial_pool(pool, 2.0, n_star=50,
+                                           thresholds=TH)
+        monkeypatch.setattr(device_pool, "HIERARCHICAL_MIN_N", 10**9)
+        fl = selection.select_initial_pool(pool, 2.0, n_star=50,
+                                           thresholds=TH)
+        assert (not hi.feasible) and (not fl.feasible)
+        assert hi.note == fl.note and hi.selected == fl.selected
+
+    def test_select_pools_batch_parity_multi_shard(self, monkeypatch):
+        monkeypatch.setattr(device_pool, "HIERARCHICAL_MIN_N", 1000)
+        monkeypatch.setattr(device_pool, "DEFAULT_SHARD_CAP", 512)
+        pool = _pool(2200, seed=19)
+        sp = FLServiceProvider(pool)
+        tasks = [TaskRequest(budget=b, n_star=3, thresholds=TH, seed=i)
+                 for i, b in enumerate([120.0, 950.0, 4000.0])]
+        batch = sp.select_pools_batch(tasks)
+        assert pool._mirror is not None and pool._mirror.num_shards >= 2
+        monkeypatch.setattr(device_pool, "HIERARCHICAL_MIN_N", 10**9)
+        flat = sp.select_pools_batch(tasks)
+        for hb, fb in zip(batch, flat):
+            assert hb.selected == fb.selected          # both pool order
+            assert hb.total_score == fb.total_score
+            assert hb.total_cost == fb.total_cost
+            assert hb.feasible == fb.feasible
+
+
+# ---------------------------------------------------------------------------
+# batched score_prop
+# ---------------------------------------------------------------------------
+
+class TestScorePropBatch:
+    def test_batch_matches_serial_per_task(self):
+        pool = _pool(800, seed=21)
+        budgets = np.array([40.0, 200.0, 1e6])
+        valid = np.stack([pool.threshold_mask(TH)] * 3)
+        valid[1, ::3] = False                   # task-specific masks
+        serial = []
+        for t in range(3):
+            rng = np.random.default_rng(100 + t)
+            cols = np.flatnonzero(valid[t])
+            r = selection.select_score_prop(pool.overall[cols],
+                                            pool.costs[cols],
+                                            budgets[t], rng, ids=cols)
+            serial.append((np.asarray(r.selected), r.total_score,
+                           r.total_cost))
+        batch = selection.select_score_prop_batch(
+            pool.overall, pool.costs, budgets,
+            [np.random.default_rng(100 + t) for t in range(3)], valid)
+        for (sp_, sts, stc), (bp, bts, btc) in zip(serial, batch):
+            np.testing.assert_array_equal(sp_, bp)   # pick order too
+            assert sts == bts and stc == btc
+
+    def test_policy_batch_matches_policy_serial(self):
+        pool = _pool(600, seed=22)
+        pol = policy.selection_policy("score_prop")
+        tasks = [TaskRequest(budget=b, n_star=ns, thresholds=TH, seed=i,
+                             selection_policy="score_prop")
+                 for i, (b, ns) in enumerate([(60.0, 2), (2.0, 50),
+                                              (500.0, 2)])]
+        serial = pol.select(pool, tasks[0], np.random.default_rng(0)), \
+            pol.select(pool, tasks[1], np.random.default_rng(1)), \
+            pol.select(pool, tasks[2], np.random.default_rng(2))
+        batch = pol.select_batch(pool, tasks,
+                                 [np.random.default_rng(i)
+                                  for i in range(3)])
+        for s, b in zip(serial, batch):
+            assert s.selected == b.selected
+            assert s.total_score == b.total_score
+            assert s.total_cost == b.total_cost
+            assert s.feasible == b.feasible and s.note == b.note
+
+
+# ---------------------------------------------------------------------------
+# policy-aware churn admission (satellite regression)
+# ---------------------------------------------------------------------------
+
+def _stub(rnd, subset, weights):
+    subset = np.asarray(subset)
+    returned = np.ones(subset.size, bool)
+    return returned, np.full(subset.size, 0.8), {"round": rnd}
+
+
+class TestChurnPolicyRouting:
+    def _to_checkpoint(self, sp, task):
+        state = submit(sp, task)
+        while state.phase != TaskPhase.PERIOD_CHECKPOINT:
+            assert not state.phase.terminal
+            state, _ = step(sp, state, _stub)
+        return state
+
+    def _join_wave(self, sp, seed=31, k=6):
+        rng = np.random.default_rng(seed)
+        scores = np.clip(rng.random((k, 11)), 0.1, None)
+        costs = rng.uniform(1.0, 6.0, k)
+        ids = np.arange(5000, 5000 + k)
+        sp.pool_state.register_arrays(ids, scores,
+                                      random_histograms(k, 10, rng), costs)
+        return ids, scores, costs
+
+    def test_default_greedy_admission_unchanged(self):
+        """paper_greedy admission == the legacy hard-coded skip-scan."""
+        sp = FLServiceProvider(_pool(40, seed=30))
+        task = TaskRequest(budget=250.0, n_star=5, subset_size=5,
+                           max_periods=3, seed=0)
+        state = self._to_checkpoint(sp, task)
+        ids, scores, costs = self._join_wave(sp)
+        budget_left = (task.budget - state.pool_selected.total_cost
+                       - state.admitted_cost)
+        # legacy rule: ratio order, skip unaffordable
+        ratio = overall_score(scores) / np.maximum(costs, 1e-12)
+        expect, rem = [], budget_left
+        for j in np.argsort(-ratio, kind="stable"):
+            if costs[j] <= rem:
+                expect.append(int(ids[j]))
+                rem -= float(costs[j])
+        state, _ = step(sp, state, _stub)
+        assert sorted(state.admitted) == sorted(expect)
+
+    def test_dp_policy_routes_admission(self):
+        """A dp task admits joiners via the exact knapsack — the greedy
+        ratio rule no longer decides (the pre-ISSUE-6 behavior)."""
+        pool = _pool(40, seed=33)
+        sp = FLServiceProvider(pool)
+        # budget covers the whole pool -> a known leftover of ~10 for
+        # the joiner knapsack below
+        task = TaskRequest(budget=float(pool.costs.sum()) + 10.0, n_star=5,
+                           subset_size=5, max_periods=3, seed=0,
+                           selection_policy="dp")
+        state = self._to_checkpoint(sp, task)
+        # candidates engineered so greedy(skip) and dp disagree:
+        # greedy takes the high-ratio pricey one first and strands
+        # budget; dp packs the two complements exactly
+        budget_left = (task.budget - state.pool_selected.total_cost
+                       - state.admitted_cost)
+        scores = np.full((3, 11), 0.5)
+        scores[0] = 0.95                         # ratio hero
+        costs = np.array([np.floor(budget_left) - 1.0,
+                          np.floor(budget_left) / 2.0,
+                          np.floor(budget_left) / 2.0])
+        rng = np.random.default_rng(34)
+        sp.pool_state.register_arrays([7000, 7001, 7002], scores,
+                                      random_histograms(3, 10, rng), costs)
+        from repro.core.selection import select_dp
+        exp = select_dp(overall_score(scores), costs, budget_left,
+                        ids=[7000, 7001, 7002]).selected
+        state, _ = step(sp, state, _stub)
+        assert sorted(state.admitted) == sorted(int(c) for c in exp)
+
+    def test_hookless_policy_falls_back_to_legacy_rule(self, monkeypatch):
+        class Hookless:
+            name = "hookless_sel"
+
+            def select(self, pool, task, rng):
+                return selection.select_initial_pool(
+                    pool, task.budget, task.n_star, task.thresholds,
+                    method="greedy")
+
+            def select_batch(self, pool, tasks, rngs):
+                return [self.select(pool, t, r)
+                        for t, r in zip(tasks, rngs)]
+
+        monkeypatch.setitem(policy._SELECTION, "hookless_sel", Hookless())
+        sp = FLServiceProvider(_pool(40, seed=35))
+        task = TaskRequest(budget=250.0, n_star=5, subset_size=5,
+                           max_periods=3, seed=0,
+                           selection_policy="hookless_sel")
+        state = self._to_checkpoint(sp, task)
+        ids, scores, costs = self._join_wave(sp, seed=36)
+        budget_left = (task.budget - state.pool_selected.total_cost
+                       - state.admitted_cost)
+        ratio = overall_score(scores) / np.maximum(costs, 1e-12)
+        expect, rem = [], budget_left
+        for j in np.argsort(-ratio, kind="stable"):
+            if costs[j] <= rem:
+                expect.append(int(ids[j]))
+                rem -= float(costs[j])
+        state, _ = step(sp, state, _stub)
+        assert sorted(state.admitted) == sorted(expect)

@@ -1,0 +1,49 @@
+#!/usr/bin/env bash
+# Launch hygiene for benchmarks and services: run any repo entry point
+# with the allocator/XLA environment the fleet-scale paths expect.
+#
+#   tools/run.sh python -m benchmarks.run --only bench_selection_time
+#   tools/run.sh python -m benchmarks.bench_service_multitask
+#   REPRO_HIERARCHICAL_MIN_N=50000 tools/run.sh python my_service.py
+#
+# Everything below is a default — values already set in the caller's
+# environment win, so CI and one-off experiments can override freely.
+set -euo pipefail
+
+cd "$(dirname "$0")/.."
+
+# tcmalloc: glibc malloc fragments badly under the mirror's large
+# long-lived arrays + many small host-side churn allocations. Preload
+# it when present (typical paths on Debian/Ubuntu images); skip
+# silently otherwise — everything still runs, just slower at 10M rows.
+if [[ -z "${LD_PRELOAD:-}" ]]; then
+  for _tc in /usr/lib/x86_64-linux-gnu/libtcmalloc.so.4 \
+             /usr/lib/x86_64-linux-gnu/libtcmalloc_minimal.so.4; do
+    if [[ -e "$_tc" ]]; then
+      export LD_PRELOAD="$_tc"
+      break
+    fi
+  done
+fi
+# The 1M/10M pool buffers trip tcmalloc's large-alloc reporter; raise
+# the threshold so benchmark timings aren't polluted by stderr writes.
+export TCMALLOC_LARGE_ALLOC_REPORT_THRESHOLD="${TCMALLOC_LARGE_ALLOC_REPORT_THRESHOLD:-60000000000}"
+
+# Quiet the TF/XLA C++ banner noise in benchmark CSV output.
+export TF_CPP_MIN_LOG_LEVEL="${TF_CPP_MIN_LOG_LEVEL:-4}"
+
+# x64 policy: the host control plane deliberately computes scores and
+# budget scans in f64 (the device mirror is f32 by design — see
+# docs/scaling.md). Enable x64 so jnp scalars crossing the host/device
+# seam don't silently truncate, but keep 32-bit defaults so device
+# arrays stay f32 unless asked.
+export JAX_ENABLE_X64="${JAX_ENABLE_X64:-1}"
+export JAX_DEFAULT_DTYPE_BITS="${JAX_DEFAULT_DTYPE_BITS:-32}"
+
+# One host device unless the caller is experimenting with host-device
+# sharding; step markers at the outer loop keep profiles readable.
+export XLA_FLAGS="${XLA_FLAGS:---xla_force_host_platform_device_count=1}"
+
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+exec "$@"
