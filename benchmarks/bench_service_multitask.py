@@ -365,8 +365,17 @@ def run(report):
            "select_pools_batch (one sweep)")
     report(f"intake{T}_speedup", record["intake"]["speedup"], "x")
 
+    # merge-write: bench_faults owns the "faults" key of the same file
+    data = {}
+    if os.path.exists(_JSON_PATH):
+        try:
+            with open(_JSON_PATH) as f:
+                data = json.load(f)
+        except json.JSONDecodeError:
+            data = {}
+    data.update(record)
     with open(_JSON_PATH, "w") as f:
-        json.dump(record, f, indent=1)
+        json.dump(data, f, indent=1)
     report("json_written", 1, os.path.abspath(_JSON_PATH))
 
 

@@ -17,6 +17,7 @@ BENCHES = [
     "bench_training",         # Figs. 5/6 (reduced)
     "bench_round_time",       # ISSUE-2 device-resident round data plane
     "bench_service_multitask",  # ISSUE-3 multi-tenant service lifecycle
+    "bench_faults",           # ISSUE-7 fault injection + mitigation
     "bench_roofline",         # §Roofline (from dry-run artifacts)
 ]
 

@@ -46,9 +46,11 @@ from .criteria import (CRITERIA, NUM_CRITERIA, ClientProfile, build_profiles,
                        random_histograms, random_profiles, resource_scores)
 from .fairness import (bounded_participation, coverage, fairness_report,
                        jain_index, over_selection_fraction)
-from .lifecycle import (AsyncTrainer, InFlightError, PendingChunk, RoundEvent,
-                        ServiceScheduler, ServiceState, TaskPhase, TaskState,
-                        Trainer, apply_pool_selection, as_run_result, collect,
+from .faults import FaultPlan, RoundOutcome
+from .lifecycle import (AsyncTrainer, InFlightError, PendingChunk,
+                        RejectedTask, RoundEvent, ServiceScheduler,
+                        ServiceState, TaskPhase, TaskState, Trainer,
+                        apply_pool_selection, as_run_result, collect,
                         dispatch, drain, load_state, resolve_trainer,
                         save_state, single_round_adapter, step, submit)
 from .mkp import MKPResult, solve_mkp, solve_mkp_bnb, solve_mkp_greedy
@@ -95,9 +97,11 @@ __all__ = [
     "register_selection_policy", "resolve_scheduling_policy",
     "resolve_selection_policy", "scheduling_policy", "selection_policy",
     # lifecycle (resumable service API)
-    "AsyncTrainer", "InFlightError", "PendingChunk", "RoundEvent",
-    "ServiceScheduler", "ServiceState", "TaskPhase", "TaskState", "Trainer",
-    "apply_pool_selection", "as_run_result", "collect", "dispatch", "drain",
-    "load_state", "resolve_trainer", "save_state", "single_round_adapter",
-    "step", "submit",
+    "AsyncTrainer", "InFlightError", "PendingChunk", "RejectedTask",
+    "RoundEvent", "ServiceScheduler", "ServiceState", "TaskPhase",
+    "TaskState", "Trainer", "apply_pool_selection", "as_run_result",
+    "collect", "dispatch", "drain", "load_state", "resolve_trainer",
+    "save_state", "single_round_adapter", "step", "submit",
+    # fault injection (robustness plane, docs/robustness.md)
+    "FaultPlan", "RoundOutcome",
 ]

@@ -85,9 +85,10 @@ from .scheduling import ScheduleResult
 from .selection import SelectionResult
 from .reputation import ReputationTracker
 
-_STATE_FORMAT = 2       # to_arrays layout version (2: + policy names,
-_STATE_FORMATS = (1, 2)  # policy_state arrays; 1 still restores, with
-# the default policies and an empty policy_state)
+_STATE_FORMAT = 3          # to_arrays layout version (3: + fault/
+_STATE_FORMATS = (1, 2, 3)  # mitigation TaskRequest fields, retry/
+# backoff cursors, DEGRADED phase, task id; 2 added policy names and
+# policy_state arrays; older formats still restore, with defaults)
 
 
 # ---------------------------------------------------------------------------
@@ -127,6 +128,21 @@ class TaskRequest:
     # chunked driver; requires a chunk-capable Trainer)
     admit_joiners: bool = True            # churn: admit clients registered
     # after stage 1 at the next PERIOD_CHECKPOINT, budget permitting
+    overschedule_factor: float = 1.0      # straggler mitigation: dispatch
+    # ceil(factor * n) clients per round (extras drawn from the task
+    # pool by the task rng); the round still closes at the first n
+    # arrivals. 1.0 = off. Only observable under an active FaultPlan.
+    quorum_frac: float = 0.0              # minimum fraction of the
+    # *scheduled* subset that must arrive for a round to commit (at
+    # least one arrival is always required under a fault plan); a
+    # missed quorum triggers the retry/backoff path
+    collect_deadline: float = 0.0         # per-round arrival deadline in
+    # FaultPlan latency units; 0 = none (close at the first-k arrivals)
+    max_retries: int = 3                  # quorum-miss retries per round
+    # (fresh subset redraw + exponential backoff) before the task
+    # degrades to the terminal DEGRADED phase
+    retry_backoff: float = 1.0            # initial backoff penalty (in
+    # latency units) charged per retry, doubling each consecutive miss
 
 
 @dataclasses.dataclass
@@ -246,7 +262,9 @@ def _chunk_size(task: TaskRequest, trainer: Trainer) -> int:
 class InFlightError(RuntimeError):
     """Raised when an operation that needs a settled :class:`TaskState`
     (serialization, a fresh dispatch) meets an un-collected in-flight
-    chunk. Call :func:`collect` first, or ``save_state(..., flush=True)``."""
+    chunk. Call :func:`collect` first, or ``save_state(..., flush=True)``.
+    The message names the task id and the pending round range so the
+    offending tenant is identifiable in multi-task sweeps."""
 
 
 @dataclasses.dataclass
@@ -268,6 +286,15 @@ class PendingChunk:
     t: int                          # subset_index at dispatch time
     stop_fn: Callable[[dict], bool] | None
     sync: bool                      # handle already holds results
+    arrivals: list[np.ndarray] | None = None   # fault mode: per-round
+    # bool arrival masks over the dispatched members (first-k-collect)
+    close_times: list[float] | None = None     # fault mode: per-round
+    # simulated close times (-> metrics["round_latency"])
+    penalty: float = 0.0            # accumulated retry latency charged
+    # to this chunk's first committed round
+    pool: Any = None                # ClientPoolState ref, for unpinning
+    pinned: list[int] | None = None  # ids pinned against deregister
+    # while this chunk is in flight (core.pool deferred-dereg guard)
 
 
 # ---------------------------------------------------------------------------
@@ -282,10 +309,15 @@ class TaskPhase(enum.IntEnum):
     PERIOD_CHECKPOINT = 4  # period over; next step updates the pool
     DONE = 5
     INFEASIBLE = 6
+    DEGRADED = 7           # graceful degradation: a round missed quorum
+    # max_retries times (or the scheduler evicted a wedged in-flight
+    # chunk) — the task is parked terminal instead of wedging the
+    # service; its accumulated rounds/results stay available
 
     @property
     def terminal(self) -> bool:
-        return self in (TaskPhase.DONE, TaskPhase.INFEASIBLE)
+        return self in (TaskPhase.DONE, TaskPhase.INFEASIBLE,
+                        TaskPhase.DEGRADED)
 
 
 @dataclasses.dataclass
@@ -324,6 +356,12 @@ class TaskState:
         default_factory=dict)                  # scheduling-policy cursor
     # arrays (e.g. fair_ema participation EMAs), owned by the task and
     # serialized with it — string keys, numpy-array values only
+    retry_count: int = 0                       # consecutive quorum misses
+    # on the round at subset_index (fault mode; reset on a commit)
+    retry_latency: float = 0.0                 # accumulated close-time +
+    # backoff penalty, charged to the next committed round's latency
+    task_id: int | None = None                 # scheduler-assigned tenant
+    # id (ServiceScheduler.submit/adopt); used in error messages
 
     def __post_init__(self):
         if self.rng is None:
@@ -335,6 +373,18 @@ class TaskState:
         stage-1 selection plus churn admissions."""
         sel = self.pool_selected.selected if self.pool_selected else []
         return set(sel) | set(self.admitted)
+
+    def _inflight_desc(self) -> str:
+        """Human-readable identity of the in-flight chunk, for
+        :class:`InFlightError` messages (which task, which rounds)."""
+        tid = "unassigned" if self.task_id is None else str(self.task_id)
+        if self.pending is None:
+            return f"task id {tid}, period {self.period}"
+        lo = self.global_round
+        hi = lo + len(self.pending.chunk) - 1
+        rounds = str(lo) if hi == lo else f"{lo}..{hi}"
+        return (f"task id {tid}, period {self.period}, "
+                f"pending rounds {rounds}")
 
     # -- serialization -------------------------------------------------------
     def to_arrays(self) -> dict[str, np.ndarray]:
@@ -348,9 +398,9 @@ class TaskState:
         """
         if self.pending is not None:
             raise InFlightError(
-                "TaskState has an in-flight dispatched chunk; call "
-                "lifecycle.collect(state) (or save_state(..., flush=True)) "
-                "before serializing")
+                f"TaskState ({self._inflight_desc()}) has an in-flight "
+                f"dispatched chunk; call lifecycle.collect(state) (or "
+                f"save_state(..., flush=True)) before serializing")
         a: dict[str, np.ndarray] = {}
         t = self.task
         a["format"] = np.array([_STATE_FORMAT], dtype=np.int64)
@@ -361,14 +411,22 @@ class TaskState:
              int(self.pool_selected is not None),
              int(self.tracker is not None)], dtype=np.int64)
         a["task/floats"] = np.array(
-            [t.budget, t.rep_threshold, t.nid_threshold], dtype=np.float64)
+            [t.budget, t.rep_threshold, t.nid_threshold,
+             t.overschedule_factor, t.quorum_frac, t.collect_deadline,
+             t.retry_backoff], dtype=np.float64)
         a["task/ints"] = np.array(
             [t.n_star, t.subset_size, t.subset_delta, t.x_star,
              t.max_periods,
              0 if t.max_rounds is None else 1,
              0 if t.max_rounds is None else int(t.max_rounds),
              t.suspension_periods, t.seed, t.round_chunk,
-             int(t.admit_joiners)], dtype=np.int64)
+             int(t.admit_joiners), t.max_retries], dtype=np.int64)
+        a["retry"] = np.array([float(self.retry_count),
+                               self.retry_latency], dtype=np.float64)
+        a["task_id"] = np.array(
+            [int(self.task_id is not None),
+             0 if self.task_id is None else int(self.task_id)],
+            dtype=np.int64)
         a["task/scheduler"] = _encode_str(t.scheduler)
         # None (policy not set) encodes as the empty string — no
         # registered policy can have an empty name
@@ -424,8 +482,20 @@ class TaskState:
                 _decode_str(a["task/selection_policy"]) or None
             task.scheduling_policy = \
                 _decode_str(a["task/scheduling_policy"]) or None
+        if fmt >= 3:
+            task.overschedule_factor = float(tf[3])
+            task.quorum_frac = float(tf[4])
+            task.collect_deadline = float(tf[5])
+            task.retry_backoff = float(tf[6])
+            task.max_retries = int(ti[11])
         state = cls(task=task, phase=TaskPhase(int(meta[0])),
                     rng=_decode_rng(a["rng"]))
+        if fmt >= 3:
+            retry = a["retry"].astype(np.float64)
+            state.retry_count = int(retry[0])
+            state.retry_latency = float(retry[1])
+            tid = a["task_id"].astype(np.int64)
+            state.task_id = int(tid[1]) if int(tid[0]) else None
         state.policy_state = {k[len("pol/"):]: v for k, v in a.items()
                               if k.startswith("pol/")}
         state.period = int(meta[1])
@@ -657,8 +727,9 @@ def dispatch(provider, state: TaskState, trainer,
     collects in completion order.
     """
     if state.pending is not None:
-        raise InFlightError("a chunk is already in flight for this task; "
-                            "collect() it before dispatching another")
+        raise InFlightError(
+            f"a chunk is already in flight ({state._inflight_desc()}); "
+            f"collect() it before dispatching another")
     if state.phase.terminal:
         return state
     if state.phase not in (TaskPhase.SCHEDULED, TaskPhase.TRAINING):
@@ -752,10 +823,108 @@ def _schedule_next_period(provider, state: TaskState) -> TaskState:
     return state
 
 
+def _fault_plan(trainer):
+    """The trainer's attached :class:`~repro.core.faults.FaultPlan`, or
+    ``None`` when fault injection is off. An inactive plan (all rates
+    zero) is treated as absent, so the unmodified no-fault code path —
+    and its bit-exact results — is taken whenever nothing can fail."""
+    plan = getattr(trainer, "fault_plan", None)
+    if plan is None or not plan.active:
+        return None
+    return plan
+
+
+def _redraw_subset(state: TaskState, n: int) -> list[int]:
+    """Fresh subset draw for a quorum-miss retry: uniform n-of-pool from
+    the task's own rng (checkpointed, so a mid-backoff restore redraws
+    identically)."""
+    pool = np.array(sorted(state.pool), dtype=np.int64)
+    k = min(int(n), pool.size)
+    picks = state.rng.choice(pool.size, size=k, replace=False)
+    return [int(c) for c in pool[np.sort(picks)]]
+
+
+def _eval_round(state: TaskState, plan, base: Sequence[int], rnd: int):
+    """Overschedule ``base`` and evaluate the round's arrival outcome
+    under the fault plan. Deterministic given (plan, members, round), so
+    dispatch can pre-compute which scheduled clients will report by the
+    close and mask the rest on device before any training runs."""
+    task = state.task
+    n = len(base)
+    members = list(base)
+    want = int(np.ceil(n * max(1.0, task.overschedule_factor)))
+    if want > n:
+        cand = np.array(sorted(state.pool - set(members)), dtype=np.int64)
+        if cand.size:
+            k = min(want - n, cand.size)
+            picks = state.rng.choice(cand.size, size=k, replace=False)
+            members += [int(c) for c in cand[np.sort(picks)]]
+    quorum_k = max(1, int(np.ceil(task.quorum_frac * n)))
+    out = plan.round_outcome(members, rnd, task.collect_deadline,
+                             target_k=n, quorum_k=quorum_k)
+    return members, out
+
+
+def _plan_chunk(provider, state: TaskState, plan, t: int, limit: int):
+    """Evaluate the prospective chunk's arrivals round by round, stopping
+    before the first quorum miss. Returns ``(chunk, arrivals,
+    close_times, miss)`` where ``miss`` is the failing round's
+    :class:`~repro.core.faults.RoundOutcome` (or ``None``). Non-arrived
+    members are charged a timing failure whether or not the round
+    commits — chronic stragglers must not hide behind retries."""
+    sched = state.schedule
+    chunk: list[list[int]] = []
+    arrivals: list[np.ndarray] = []
+    closes: list[float] = []
+    for j in range(min(limit, len(sched.subsets) - t)):
+        base = sched.subsets[t + j]
+        if j == 0 and state.retry_count > 0:
+            base = _redraw_subset(state, len(base))
+        members, out = _eval_round(state, plan, base,
+                                   state.global_round + j)
+        rows = provider.pool_state.positions(members,
+                                             include_deregistered=True)
+        provider.pool_state.note_timing(rows, rows[~out.arrival])
+        for i, cid in enumerate(members):
+            if not out.arrival[i]:
+                state.tracker.record_timeout(cid)
+        if not out.quorum_met:
+            return chunk, arrivals, closes, out
+        chunk.append(members)
+        arrivals.append(out.arrival)
+        closes.append(out.close_time)
+    return chunk, arrivals, closes, None
+
+
+def _quorum_miss(state: TaskState, out) -> TaskState:
+    """A round's arrivals missed quorum before anything was dispatched:
+    charge the close time plus an exponential backoff to the task's
+    latency account, then either leave the state in TRAINING (the next
+    dispatch retries against a fresh subset draw) or — past
+    ``max_retries`` — degrade the task to the terminal DEGRADED phase
+    rather than wedging the service."""
+    task = state.task
+    state.retry_count += 1
+    backoff = task.retry_backoff * (2.0 ** (state.retry_count - 1))
+    state.retry_latency += out.close_time + backoff
+    if state.retry_count > task.max_retries:
+        state.phase = TaskPhase.DEGRADED
+    return state
+
+
 def _dispatch_chunk(provider, state: TaskState, trainer: Trainer,
                     stop_fn) -> TaskState:
     """Host half of the TRAINING transition: pick the chunk, compute its
-    weights, hand it to the trainer, park the handle on ``pending``."""
+    weights, hand it to the trainer, park the handle on ``pending``.
+
+    Under an active :class:`~repro.core.faults.FaultPlan` on the trainer
+    the chunk is first *arrival-evaluated* (:func:`_plan_chunk`):
+    subsets are over-scheduled per ``task.overschedule_factor``, each
+    round closes at its first-k arrivals / deadline, a quorum-missing
+    round truncates the chunk (and, when it is the first round, routes
+    through the retry/backoff path leaving nothing in flight), and the
+    arrival masks ride along so the device (or :func:`_settle_chunk`)
+    masks non-reporting clients out of the aggregate."""
     task, sched = state.task, state.schedule
     t = state.subset_index
     if sched is None or t >= len(sched.subsets) or state.stop:
@@ -769,7 +938,18 @@ def _dispatch_chunk(provider, state: TaskState, trainer: Trainer,
             state.phase = TaskPhase.PERIOD_CHECKPOINT
             return state
         limit = min(limit, remaining)
-    chunk = sched.subsets[t: t + limit]
+    plan = _fault_plan(trainer)
+    arrivals = close_times = None
+    penalty = 0.0
+    if plan is None:
+        chunk = sched.subsets[t: t + limit]
+    else:
+        chunk, arrivals, close_times, miss = _plan_chunk(
+            provider, state, plan, t, limit)
+        if not chunk:                   # first round missed quorum
+            return _quorum_miss(state, miss)
+        penalty, state.retry_latency = state.retry_latency, 0.0
+        state.retry_count = 0
     data_sizes = provider.pool_state.data_sizes()
     ws = []
     for subset in chunk:
@@ -780,14 +960,28 @@ def _dispatch_chunk(provider, state: TaskState, trainer: Trainer,
                                              include_deregistered=True)
         sizes = data_sizes[rows]
         ws.append(sizes / np.maximum(sizes.sum(), 1e-12))
+    pinned = sorted({int(c) for subset in chunk for c in subset})
+    provider.pool_state.pin(pinned)
+    aware = arrivals is not None and getattr(trainer, "accepts_arrivals",
+                                             False)
     if isinstance(trainer, AsyncTrainer):
-        handle = trainer.dispatch_rounds(state.global_round, chunk, ws)
+        if aware:
+            handle = trainer.dispatch_rounds(state.global_round, chunk, ws,
+                                             arrivals=arrivals)
+        else:
+            handle = trainer.dispatch_rounds(state.global_round, chunk, ws)
         sync = False
     else:                                           # eager sync fallback
-        handle = trainer.run_rounds(state.global_round, chunk, ws)
+        if aware:
+            handle = trainer.run_rounds(state.global_round, chunk, ws,
+                                        arrivals=arrivals)
+        else:
+            handle = trainer.run_rounds(state.global_round, chunk, ws)
         sync = True
     state.pending = PendingChunk(trainer, handle, chunk, ws, t, stop_fn,
-                                 sync)
+                                 sync, arrivals=arrivals,
+                                 close_times=close_times, penalty=penalty,
+                                 pool=provider.pool_state, pinned=pinned)
     state.phase = TaskPhase.TRAINING                # mid-period, in flight
     return state
 
@@ -795,11 +989,33 @@ def _dispatch_chunk(provider, state: TaskState, trainer: Trainer,
 def _settle_chunk(state: TaskState, p: PendingChunk, results
                   ) -> tuple[TaskState, list[RoundEvent]]:
     """Bookkeeping half of the TRAINING transition, shared by the
-    blocking step and the overlapped collect path."""
+    blocking step and the overlapped collect path.
+
+    When the chunk was dispatched under a fault plan (``p.arrivals``),
+    clients that missed the round's close are masked out of ``returned``
+    and ``q_vals`` before reputation bookkeeping (their timing failure
+    was already charged at dispatch), and each round's metrics gain its
+    simulated ``round_latency`` (close time, plus any retry backoff
+    carried over from preceding quorum misses)."""
+    if p.pinned is not None and p.pool is not None:
+        p.pool.unpin(p.pinned)
     sched, t = state.schedule, p.t
+    penalty = p.penalty
     events: list[RoundEvent] = []
     for j, (returned, q_vals, metrics) in enumerate(results):
         subset = p.chunk[j]
+        if p.arrivals is not None:
+            arr = np.asarray(p.arrivals[j], dtype=bool)
+            returned = np.asarray(returned, dtype=bool) & arr
+            q_vals = np.where(arr, np.asarray(q_vals, dtype=np.float64),
+                              0.0)
+            metrics = dict(metrics)
+            metrics["round_latency"] = p.close_times[j] + penalty
+            metrics["n_scheduled"] = len(subset)
+            metrics["n_arrived"] = int(arr.sum())
+            if penalty:
+                metrics["retry_penalty"] = penalty
+            penalty = 0.0
         for i, cid in enumerate(subset):
             state.tracker.record_round(cid, bool(returned[i]),
                                        q_value=float(q_vals[i]))
@@ -899,12 +1115,26 @@ def _apply_churn(provider, state: TaskState) -> None:
 # Multi-tenant scheduler
 # ---------------------------------------------------------------------------
 
+@dataclasses.dataclass(frozen=True)
+class RejectedTask:
+    """Returned by :meth:`ServiceScheduler.submit` instead of a task id
+    when the intake queue is full (``max_queue``). The caller keeps the
+    request and may resubmit after draining a sweep; nothing was
+    enqueued."""
+
+    task: TaskRequest
+    reason: str
+    queued: int         # INTAKE backlog size at the time of rejection
+
+
 @dataclasses.dataclass
 class _Tenant:
     state: TaskState
     trainer: Trainer
     availability_fn: Callable[[int, int], bool] | None = None
     stop_fn: Callable[[dict], bool] | None = None
+    inflight_age: int = 0   # consecutive sweeps the pending chunk has
+    # been polled not-ready (wedged-tenant eviction clock)
 
 
 class ServiceScheduler:
@@ -949,13 +1179,22 @@ class ServiceScheduler:
     """
 
     def __init__(self, provider, max_inflight: int = 8,
-                 overlap: bool = True):
+                 overlap: bool = True, max_queue: int | None = None,
+                 inflight_deadline: int | None = None):
         if max_inflight < 1:
             raise ValueError(f"max_inflight must be >= 1, got "
                              f"{max_inflight}")
         self.provider = provider
         self.max_inflight = max_inflight
         self.overlap = overlap
+        # backpressure: submit() returns RejectedTask once this many
+        # tasks sit un-swept in INTAKE (None = unbounded, pre-ISSUE-7)
+        self.max_queue = max_queue
+        # wedged-tenant guard: a pending chunk polled not-ready for this
+        # many consecutive sweeps is evicted to DEGRADED, freeing its
+        # window slot (None = wait forever, pre-ISSUE-7). Only trainers
+        # exposing poll(handle) participate; others collect eagerly.
+        self.inflight_deadline = inflight_deadline
         self._tenants: dict[int, _Tenant] = {}
         self._next_id = 0
         self._inflight: list[int] = []   # FIFO: tids with a chunk in flight
@@ -965,13 +1204,25 @@ class ServiceScheduler:
     # -- intake --------------------------------------------------------------
     def submit(self, task: TaskRequest, trainer,
                availability_fn: Callable[[int, int], bool] | None = None,
-               stop_fn: Callable[[dict], bool] | None = None) -> int:
+               stop_fn: Callable[[dict], bool] | None = None
+               ) -> int | RejectedTask:
         """Queue a task (INTAKE). Stage 1 runs batched at the next sweep.
-        Returns the task id."""
+        Returns the task id — or, when ``max_queue`` un-swept intakes are
+        already waiting, a :class:`RejectedTask` (backpressure; nothing
+        is enqueued)."""
+        if self.max_queue is not None:
+            backlog = sum(1 for t in self._tenants.values()
+                          if t.state.phase == TaskPhase.INTAKE)
+            if backlog >= self.max_queue:
+                return RejectedTask(task=task, queued=backlog,
+                                    reason=f"intake queue full "
+                                           f"({backlog}/{self.max_queue}"
+                                           f"); sweep() to drain")
         tid = self._next_id
         self._next_id += 1
-        self._tenants[tid] = _Tenant(TaskState(task=task),
-                                     resolve_trainer(trainer),
+        state = TaskState(task=task)
+        state.task_id = tid
+        self._tenants[tid] = _Tenant(state, resolve_trainer(trainer),
                                      availability_fn, stop_fn)
         return tid
 
@@ -982,6 +1233,7 @@ class ServiceScheduler:
         :func:`load_state`) and drive it alongside the other tenants."""
         tid = self._next_id
         self._next_id += 1
+        state.task_id = tid
         self._tenants[tid] = _Tenant(state, resolve_trainer(trainer),
                                      availability_fn, stop_fn)
         return tid
@@ -1055,9 +1307,23 @@ class ServiceScheduler:
         # sync, POOL_SELECTED scheduling) and enqueues its next chunk
         # while the rest of the window is still computing, which is
         # where the overlap comes from.
+        # The fixed-count loop polls each in-flight chunk at most once
+        # per sweep: a not-ready (wedged) tenant is re-appended and aged,
+        # never re-polled this sweep, so it cannot stall the others —
+        # and past ``inflight_deadline`` consecutive not-ready sweeps it
+        # is evicted to DEGRADED, freeing its window slot.
         for _ in range(len(self._inflight)):
             tid = self._inflight.pop(0)
             t = self._tenants[tid]
+            if not self._handle_ready(t):
+                t.inflight_age += 1
+                if (self.inflight_deadline is not None
+                        and t.inflight_age >= self.inflight_deadline):
+                    self._evict(tid)
+                else:
+                    self._inflight.append(tid)
+                continue
+            t.inflight_age = 0
             t.state, ev = collect(t.state)
             if ev:
                 out.setdefault(tid, []).extend(ev)
@@ -1066,6 +1332,30 @@ class ServiceScheduler:
             while self._ready and len(self._inflight) < self.max_inflight:
                 self._pump_into_flight(self._ready.pop(0))
         return out
+
+    def _handle_ready(self, t: _Tenant) -> bool:
+        """Whether the tenant's pending chunk can be collected without
+        blocking. Trainers without a ``poll(handle) -> bool`` method (or
+        sync chunks) are always treated as ready — collect() on them is
+        the pre-ISSUE-7 behaviour."""
+        p = t.state.pending
+        if p is None or p.sync:
+            return True
+        poll = getattr(p.trainer, "poll", None)
+        if poll is None:
+            return True
+        return bool(poll(p.handle))
+
+    def _evict(self, tid: int) -> None:
+        """Abandon a wedged tenant's in-flight chunk: unpin its clients,
+        drop the handle, and degrade the task (terminal) so the window
+        slot frees up and every other tenant keeps progressing."""
+        t = self._tenants[tid]
+        p = t.state.pending
+        if p is not None and p.pinned is not None and p.pool is not None:
+            p.pool.unpin(p.pinned)
+        t.state.pending = None
+        t.state.phase = TaskPhase.DEGRADED
 
     def _pump_into_flight(self, tid: int) -> None:
         """Advance ``tid`` until a chunk is in flight or the task is
@@ -1079,12 +1369,17 @@ class ServiceScheduler:
             if t.state.pending is not None:
                 # already in flight (e.g. a state the caller dispatched
                 # before adopt()): track it, don't re-dispatch
+                t.inflight_age = 0
                 self._inflight.append(tid)
                 return
             if t.state.phase in (TaskPhase.SCHEDULED, TaskPhase.TRAINING):
+                # under a fault plan a dispatch may come back with
+                # nothing in flight (quorum-miss retry); the loop then
+                # retries inline, bounded by max_retries -> DEGRADED
                 dispatch(self.provider, t.state, t.trainer,
                          stop_fn=t.stop_fn)
                 if t.state.pending is not None:
+                    t.inflight_age = 0
                     self._inflight.append(tid)
                     return
             else:               # POOL_SELECTED / PERIOD_CHECKPOINT

@@ -435,6 +435,55 @@ class ScoreProportionalSelection(_BudgetedSelection):
         return results
 
 
+@register_selection_policy
+class StragglerAwareSelection(_BudgetedSelection):
+    """Score/cost greedy over *timeout-discounted* scores: each client's
+    overall score is scaled by ``1 - penalty * timeout_rate`` before the
+    budget greedy, where ``timeout_rate`` is the shared pool's observed
+    fraction of dispatches that missed their round's collect close
+    (``ClientPoolState.timeout_rate()``, fed by the lifecycle's
+    fault-mode bookkeeping — see docs/robustness.md). Chronic stragglers
+    price themselves out of stage 1; clients with no dispatch history
+    are undiscounted. On pools without timing stats (plain profile
+    tuples) this degrades to exactly ``paper_greedy``. Reported
+    ``total_score``/``total_cost`` use the *undiscounted* values, so
+    results stay comparable across policies."""
+
+    name = "straggler_aware"
+    method = "greedy"
+    penalty = 1.0       # full discount: a 100%-timeout client scores 0
+
+    def select(self, pool, task, rng):
+        if not isinstance(pool, ClientPoolState):
+            return super().select(pool, task, rng)
+        valid = pool.threshold_mask(task.thresholds)
+        n_kept = int(valid.sum())
+        if n_kept < task.n_star:
+            return SelectionResult(
+                [], 0.0, 0.0, feasible=False,
+                note=f"only {n_kept} clients pass thresholds, "
+                     f"need {task.n_star}")
+        rows = np.flatnonzero(valid)
+        rate = pool.timeout_rate()[rows]
+        eff = pool.overall[rows] * np.maximum(
+            1.0 - self.penalty * rate, 0.0)
+        picks = np.asarray(select_greedy(
+            eff, pool.costs[rows], task.budget,
+            skip_unaffordable=True).selected, dtype=np.int64)
+        sel = rows[picks]
+        res = SelectionResult(
+            pool.client_ids[sel].tolist(),
+            float(pool.overall[sel].sum()),
+            float(pool.costs[sel].sum()))
+        if len(res.selected) < task.n_star:
+            res.feasible = False
+            floor = pool.budget_floor(task.n_star, valid)
+            res.note = (f"budget {task.budget} selects only "
+                        f"{len(res.selected)} < n*={task.n_star} "
+                        f"clients; Eq.(11) floor is {floor:.1f}")
+        return res
+
+
 # ---------------------------------------------------------------------------
 # Scheduling policies
 # ---------------------------------------------------------------------------

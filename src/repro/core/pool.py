@@ -103,6 +103,15 @@ class ClientPoolState:
         # the dirty-region protocol consumed by DevicePoolState.sync
         self._mutlog_floor = 0        # oldest version still replayable
         self._mirror = None           # cached device mirror (lazy)
+        self._pins: dict = {}         # client id -> in-flight refcount
+        # (PendingChunk schedules pin their members; see pin/unpin)
+        self._deferred_dereg: set = set()   # pinned ids whose deregister
+        # is deferred until the last unpin
+        # runtime timing stats (not serialized, not in _FIELDS): per-row
+        # dispatch and collect-timeout tallies fed by the lifecycle's
+        # fault-mode dispatch; selection policies read timeout_rate()
+        self.timeout_counts = np.zeros(n, dtype=np.int64)
+        self.dispatch_counts = np.zeros(n, dtype=np.int64)
 
     _FIELDS = ("client_ids", "scores", "histograms", "costs", "active",
                "participation", "reputation", "registered", "reg_seq")
@@ -382,6 +391,21 @@ class ClientPoolState:
                 self._pos[int(c)] = int(r)
             if self._pos_all is not None:
                 self._pos_all[int(c)] = int(r)
+        # timing stats follow the row universe: grow for fresh rows,
+        # reset for reactivated ones (a rejoin is a new device); a rejoin
+        # also cancels any deregister deferred while the old row was
+        # pinned — the client is wanted again
+        if self.timeout_counts.shape[0] < self.n:
+            grow = self.n - self.timeout_counts.shape[0]
+            pad = np.zeros(grow, dtype=np.int64)
+            self.timeout_counts = np.concatenate([self.timeout_counts, pad])
+            self.dispatch_counts = np.concatenate(
+                [self.dispatch_counts, pad.copy()])
+        if rejoin.any():
+            self.timeout_counts[out[rejoin]] = 0
+            self.dispatch_counts[out[rejoin]] = 0
+        for c in ids:
+            self._deferred_dereg.discard(int(c))
         self._overall = None
         self._sizes = None
         self._bump_version()
@@ -395,15 +419,73 @@ class ClientPoolState:
         include_deregistered=True)``) until the next period checkpoint
         drops the client; the ids disappear from plain ``positions``,
         ``threshold_mask`` and the profile views immediately. Raises
-        ``KeyError`` for ids not registered."""
-        rows = self.positions(ids)
+        ``KeyError`` for ids not registered.
+
+        Ids referenced by an in-flight ``PendingChunk`` schedule
+        (:meth:`pin`) are **deferred**, not tombstoned: the removal is
+        applied automatically when the last pin is released (the chunk
+        is collected or evicted), so a dispatched schedule never trains
+        against a row that silently churned out underneath it."""
+        ids = [int(c) for c in np.asarray(ids, dtype=np.int64).reshape(-1)]
+        deferred = [c for c in ids if self._pins.get(c)]
+        now = [c for c in ids if not self._pins.get(c)]
+        self._deferred_dereg.update(deferred)
+        if not now:
+            return
+        rows = self.positions(now)
         self.registered[rows] = False
         self.active[rows] = False
         if self._pos is not None:       # incremental: rows never move
-            for c in ids:
+            for c in now:
                 self._pos.pop(int(c), None)
         self._bump_version()
         self._log_mutation(rows)
+
+    # -- in-flight pins + timing stats (robustness plane) --------------------
+    def pin(self, ids) -> None:
+        """Mark ``ids`` as referenced by an in-flight dispatched chunk.
+        Pins are refcounted (overlapping tenants may share clients);
+        while pinned, :meth:`deregister` defers instead of tombstoning."""
+        for c in ids:
+            c = int(c)
+            self._pins[c] = self._pins.get(c, 0) + 1
+
+    def unpin(self, ids) -> None:
+        """Release one pin per id; at refcount zero, any deregister
+        deferred while the client was pinned is applied."""
+        release = []
+        for c in ids:
+            c = int(c)
+            left = self._pins.get(c, 0) - 1
+            if left > 0:
+                self._pins[c] = left
+            else:
+                self._pins.pop(c, None)
+                if c in self._deferred_dereg:
+                    self._deferred_dereg.discard(c)
+                    release.append(c)
+        if release:
+            self.deregister(release)
+
+    def is_pinned(self, client_id: int) -> bool:
+        return self._pins.get(int(client_id), 0) > 0
+
+    def note_timing(self, dispatched_rows: np.ndarray,
+                    timeout_rows: np.ndarray) -> None:
+        """Tally one dispatch per row in ``dispatched_rows`` and one
+        collect-timeout per row in ``timeout_rows`` (fault-mode
+        lifecycle bookkeeping; see :meth:`timeout_rate`)."""
+        np.add.at(self.dispatch_counts,
+                  np.asarray(dispatched_rows, dtype=np.int64), 1)
+        np.add.at(self.timeout_counts,
+                  np.asarray(timeout_rows, dtype=np.int64), 1)
+
+    def timeout_rate(self) -> np.ndarray:
+        """(n,) float — fraction of each client's dispatches that missed
+        the round close (0 for never-dispatched clients). Selection
+        policies (``straggler_aware``) use this to discount chronic
+        stragglers' scores."""
+        return self.timeout_counts / np.maximum(self.dispatch_counts, 1)
 
     def subset(self, index: np.ndarray) -> "ClientPoolState":
         """A new pool state restricted to ``index`` (bool mask or rows)."""

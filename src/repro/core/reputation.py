@@ -126,6 +126,10 @@ class ReputationTracker:
         self._b = np.zeros((P, self._ROUNDS_CAP0), dtype=np.float64)
         self._n = np.zeros(P, dtype=np.int64)          # per-client cursor
         self._susp = np.full(P, -1, dtype=np.int64)    # suspended until
+        self._tf = np.zeros(P, dtype=np.int64)         # timing failures:
+        # rounds this client was scheduled but missed the collect close
+        # (fed by lifecycle fault-mode dispatch; selection policies read
+        # it to penalize chronic stragglers)
         self._pos = {cid: i for i, cid in enumerate(ids)}
         if len(self._pos) != P:
             raise ValueError("duplicate client ids")
@@ -163,6 +167,8 @@ class ReputationTracker:
         self._n = np.concatenate([self._n, np.zeros(len(new), np.int64)])
         self._susp = np.concatenate([self._susp,
                                      np.full(len(new), -1, np.int64)])
+        self._tf = np.concatenate([self._tf,
+                                   np.zeros(len(new), np.int64)])
         for j, cid in enumerate(new):
             self._pos[cid] = P + j
 
@@ -200,6 +206,19 @@ class ReputationTracker:
         self._b[i, j] = b
         self._n[i] = j + 1
 
+    def record_timeout(self, client_id: int) -> None:
+        """Charge one timing failure: the client was scheduled for a
+        round but had not reported by the round's close (straggler,
+        crash, or outage under a fault plan). Orthogonal to
+        :meth:`record_round` — a timed-out client of a *committed* round
+        is additionally recorded there as ``returned=False``."""
+        self._tf[self._pos[int(client_id)]] += 1
+
+    def timeout_counts(self) -> dict[int, int]:
+        """``client_id -> timing failures`` over the task so far."""
+        return {int(cid): int(self._tf[i])
+                for i, cid in enumerate(self._ids)}
+
     # -- steps 3-4: period rollover -----------------------------------------
     def update_pool(self, pool: set[int],
                     availability: Mapping[int, bool] | None = None) -> set[int]:
@@ -235,6 +254,7 @@ class ReputationTracker:
             "meta": np.array([self.period, self.suspension_periods],
                              dtype=np.int64),
             "threshold": np.array([self.rep_threshold], dtype=np.float64),
+            "tf": self._tf.copy(),
         }
 
     @classmethod
@@ -256,6 +276,9 @@ class ReputationTracker:
         tr._b[:, : b.shape[1]] = b
         tr._n = np.asarray(arrays["n"], dtype=np.int64).copy()
         tr._susp = np.asarray(arrays["suspended"], dtype=np.int64).copy()
+        tf = arrays.get("tf")      # absent in pre-fault checkpoints
+        if tf is not None:
+            tr._tf = np.asarray(tf, dtype=np.int64).copy()
         return tr
 
 

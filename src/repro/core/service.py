@@ -24,6 +24,16 @@ Model training is injected as a :class:`~repro.core.lifecycle.Trainer`
 ``single_round_adapter`` — so the same orchestration drives the paper's
 CNN experiments, the LM federated runs and unit tests with stub
 trainers.
+
+Robustness (ISSUE-7, docs/robustness.md): a trainer carrying an active
+:class:`~repro.core.faults.FaultPlan` switches the lifecycle's
+dispatch/collect split into fault mode — over-scheduled subsets,
+first-k/deadline round closes, quorum retries with exponential backoff
+and a terminal DEGRADED phase — while the provider's shared pool picks
+up in-flight pins (deferred deregister) and per-client timing stats
+that the ``straggler_aware`` selection policy consumes. With no plan
+(or an inactive one) every path below is bit-identical to pre-fault
+behavior; ``run_task_legacy`` remains the frozen equivalence reference.
 """
 from __future__ import annotations
 

@@ -98,16 +98,31 @@ def gather_batches(data: DeviceDataset, rows, pos_u):
     return {"images": imgs, "labels": labs}
 
 
-def dropout_mask(mask_u, active, dropout_rate: float):
+def dropout_mask(mask_u, active, dropout_rate: float, arrival=None):
     """Per-round client dropout mask (K,) f32.
 
     A client drops when its uniform < dropout_rate. ``active`` (K,) f32
     marks real (non-padding) slots. If every active client would drop,
     slot 0 is kept (schedules place real clients first) — mirroring the
     legacy trainer's "never lose the whole round" rule.
+
+    ``arrival`` (K,) f32, when given, additionally masks clients that
+    had not reported by the round's collect close (lifecycle fault-mode
+    first-k semantics, docs/robustness.md): a non-arrived client can
+    neither contribute nor be the fallback, so the fallback becomes the
+    first *arrived* active slot. With ``arrival=None`` the computation
+    is exactly the pre-fault one.
     """
     act = active > 0
+    if arrival is None:
+        fallback = (jnp.arange(mask_u.shape[0]) == 0) & act
+    else:
+        act = act & (arrival > 0)
+        # first arrived active slot (argmax of the bool mask); when no
+        # client arrived at all, `& act` still zeroes the fallback and
+        # the round contributes nothing — the host side only dispatches
+        # quorum-met rounds, so that case never reaches the aggregate
+        fallback = (jnp.arange(mask_u.shape[0]) == jnp.argmax(act)) & act
     keep = (mask_u >= dropout_rate) & act
-    fallback = (jnp.arange(mask_u.shape[0]) == 0) & act
     keep = jnp.where(keep.any(), keep, fallback)
     return keep.astype(jnp.float32)

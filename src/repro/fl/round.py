@@ -196,7 +196,10 @@ def make_fl_rounds_scan(loss_fn: Callable, local_lr: float = 0.05,
       (S, K)`` f32 FedAvg p_k, ``active (S, K)`` f32 padding mask
       (subsets sized n±δ are padded to a static K with actives first),
       ``round_ids (S,)`` int32 global round indices (PRNG folding —
-      chunking-invariant randomness),
+      chunking-invariant randomness), plus — only under a lifecycle
+      fault plan — ``arrival (S, K)`` f32 marking clients that reported
+      by the round's collect close (late/dead clients are masked out of
+      the aggregate on device; see docs/robustness.md),
     - ``base_key`` seeds batch sampling + dropout via per-(round, slot)
       key folds (fl.device_data.sample_positions).
 
@@ -212,16 +215,25 @@ def make_fl_rounds_scan(loss_fn: Callable, local_lr: float = 0.05,
     @functools.partial(jax.jit, donate_argnums=(0,))
     def chunk_fn(params, data: device_data.DeviceDataset, schedule, base_key):
         K = schedule["rows"].shape[1]
+        # fault-mode schedules carry a per-round arrival mask (lifecycle
+        # first-k collect, docs/robustness.md); its presence is a trace-
+        # time pytree property, so the no-fault trace is unchanged
+        has_arrival = "arrival" in schedule
 
         def one_round(params, per_round):
-            rows, weights, active, rnd = per_round
+            if has_arrival:
+                rows, weights, active, rnd, arrival = per_round
+            else:
+                rows, weights, active, rnd = per_round
+                arrival = None
             # a scheduled client with an empty pool cannot return an
             # update: treat its slot as inactive (b_t = 0, weight 0)
             # rather than silently training on the index-0 fallback.
             active = active * (jnp.take(data.sizes, rows, axis=0) > 0)
             mask_u, pos_u = device_data.sample_positions(
                 base_key, rnd, K, local_steps, batch_size)
-            mask = device_data.dropout_mask(mask_u, active, dropout_rate)
+            mask = device_data.dropout_mask(mask_u, active, dropout_rate,
+                                            arrival=arrival)
             batch = device_data.gather_batches(data, rows, pos_u)
             deltas, losses = jax.vmap(client_update, in_axes=(None, 0))(
                 params, batch)
@@ -237,6 +249,8 @@ def make_fl_rounds_scan(loss_fn: Callable, local_lr: float = 0.05,
 
         xs = (schedule["rows"], schedule["weights"], schedule["active"],
               schedule["round_ids"])
+        if has_arrival:
+            xs = xs + (schedule["arrival"],)
         return jax.lax.scan(one_round, params, xs)
 
     return chunk_fn

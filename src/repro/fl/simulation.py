@@ -135,13 +135,18 @@ class FLClassificationSim(_EvalCache):
     processes a chunk sequentially (one dispatch per round, so chunking
     changes nothing but the grouping of trainer calls)."""
 
+    # lifecycle fault mode may pass per-round arrival masks (first-k
+    # collect; see core.faults / docs/robustness.md)
+    accepts_arrivals = True
+
     def __init__(self, model_cfg: cnn.CNNConfig, data: ClassificationData,
                  parts: list[np.ndarray], test: ClassificationData,
-                 sim: SimConfig = SimConfig()):
+                 sim: SimConfig = SimConfig(), fault_plan=None):
         self.cfg = model_cfg
         self.data = data
         self.parts = parts
         self.test = test
+        self.fault_plan = fault_plan
         self.base_key = jax.random.PRNGKey(sim.seed)
         self.params = cnn.init_params(model_cfg, jax.random.PRNGKey(sim.seed))
         self.round_fn = make_fl_round(
@@ -172,11 +177,14 @@ class FLClassificationSim(_EvalCache):
                 "labels": jnp.asarray(np.stack(labs))}
 
     # -- core.lifecycle.Trainer protocol -------------------------------------
-    def __call__(self, rnd: int, subset, weights) -> tuple:
+    def __call__(self, rnd: int, subset, weights, arrival=None) -> tuple:
         K = len(subset)
         mask_u, pos_u = self._round_draws(rnd, K)
+        arr = None if arrival is None \
+            else jnp.asarray(np.asarray(arrival, dtype=np.float32))
         mask_np = np.asarray(device_data.dropout_mask(
-            jnp.asarray(mask_u), jnp.ones(K), self.sim.dropout_rate))
+            jnp.asarray(mask_u), jnp.ones(K), self.sim.dropout_rate,
+            arrival=arr))
         batches = self._client_batches(subset, pos_u)
         mask = jnp.asarray(mask_np)
         self.params, info = self.round_fn(self.params, batches,
@@ -186,9 +194,12 @@ class FLClassificationSim(_EvalCache):
         return mask_np > 0, q, metrics
 
     def run_rounds(self, start_round: int, subsets: Sequence[Sequence[int]],
-                   weights: Sequence[np.ndarray]) -> list[tuple]:
+                   weights: Sequence[np.ndarray],
+                   arrivals: Sequence[np.ndarray] | None = None
+                   ) -> list[tuple]:
         """Sequential host loop over the chunk (one dispatch per round)."""
-        return [self(start_round + j, subset, np.asarray(w))
+        return [self(start_round + j, subset, np.asarray(w),
+                     arrival=None if arrivals is None else arrivals[j])
                 for j, (subset, w) in enumerate(zip(subsets, weights))]
 
     @property
@@ -225,13 +236,19 @@ class DeviceFLSim(_EvalCache):
     # the segmentation DP splits a chunk to avoid padding waste)
     DISPATCH_COST = 4.0
 
+    # lifecycle fault mode may pass per-round arrival masks, threaded
+    # into the scan as an extra schedule key (only fault-mode dispatches
+    # carry it, so the no-fault jit trace is untouched)
+    accepts_arrivals = True
+
     def __init__(self, model_cfg: cnn.CNNConfig, data: ClassificationData,
                  parts: list[np.ndarray], test: ClassificationData,
                  sim: SimConfig = SimConfig(), impl: str = "auto",
                  pad_subset_to: int | None = None,
-                 fused_quality: bool = True):
+                 fused_quality: bool = True, fault_plan=None):
         self.cfg = model_cfg
         self.pad_subset_to = pad_subset_to
+        self.fault_plan = fault_plan
         self.base_key = jax.random.PRNGKey(sim.seed)
         self.params = cnn.init_params(model_cfg, jax.random.PRNGKey(sim.seed))
         self.data = device_data.DeviceDataset.stage(data, parts)
@@ -282,7 +299,9 @@ class DeviceFLSim(_EvalCache):
     # -- async trainer protocol (core.lifecycle.AsyncTrainer) ----------------
     def dispatch_rounds(self, start_round: int,
                         subsets: Sequence[Sequence[int]],
-                        weights: Sequence[np.ndarray]) -> list[tuple]:
+                        weights: Sequence[np.ndarray],
+                        arrivals: Sequence[np.ndarray] | None = None
+                        ) -> list[tuple]:
         """Enqueue ``len(subsets)`` consecutive rounds WITHOUT blocking
         on the device: every segment's ``chunk_fn`` call (and, for
         segments ending at an eval round, its accuracy evaluation) is
@@ -301,7 +320,9 @@ class DeviceFLSim(_EvalCache):
                 for length in self._segment([len(s) for s in block]):
                     handles.append(self._enqueue_segment(
                         r, subsets[seg_start:seg_start + length],
-                        weights[seg_start:seg_start + length]))
+                        weights[seg_start:seg_start + length],
+                        None if arrivals is None
+                        else arrivals[seg_start:seg_start + length]))
                     r += length
                     seg_start += length
         return handles
@@ -325,14 +346,18 @@ class DeviceFLSim(_EvalCache):
         return out
 
     def run_rounds(self, start_round: int, subsets: Sequence[Sequence[int]],
-                   weights: Sequence[np.ndarray]) -> list[tuple]:
+                   weights: Sequence[np.ndarray],
+                   arrivals: Sequence[np.ndarray] | None = None
+                   ) -> list[tuple]:
         """Blocking chunk execution: enqueue everything, then collect."""
         return self.collect(self.dispatch_rounds(start_round, subsets,
-                                                 weights))
+                                                 weights, arrivals))
 
     def _enqueue_segment(self, start_round: int,
                          subsets: Sequence[Sequence[int]],
-                         weights: Sequence[np.ndarray]) -> tuple:
+                         weights: Sequence[np.ndarray],
+                         arrivals: Sequence[np.ndarray] | None = None
+                         ) -> tuple:
         """One device dispatch for ``len(subsets)`` consecutive rounds;
         returns ``(start_round, subsets, info, eval_acc)`` with ``info``
         (and ``eval_acc``, when the segment ends at an eval round) still
@@ -344,15 +369,23 @@ class DeviceFLSim(_EvalCache):
         rows = np.zeros((S, K), dtype=np.int32)
         w = np.zeros((S, K), dtype=np.float32)
         active = np.zeros((S, K), dtype=np.float32)
+        arr = None if arrivals is None \
+            else np.zeros((S, K), dtype=np.float32)
         for t, (subset, wt) in enumerate(zip(subsets, weights)):
             k = len(subset)
             rows[t, :k] = np.asarray(subset, dtype=np.int32)
             w[t, :k] = np.asarray(wt, dtype=np.float32)
             active[t, :k] = 1.0
+            if arr is not None:
+                arr[t, :k] = np.asarray(arrivals[t], dtype=np.float32)
         schedule = {"rows": jnp.asarray(rows), "weights": jnp.asarray(w),
                     "active": jnp.asarray(active),
                     "round_ids": jnp.asarray(
                         start_round + np.arange(S, dtype=np.int32))}
+        if arr is not None:
+            # extra pytree key => separate jit trace; the no-fault trace
+            # (and its results) are untouched
+            schedule["arrival"] = jnp.asarray(arr)
         self.params, info = self.chunk_fn(self.params, self.data, schedule,
                                           self.base_key)
         eval_acc = None
@@ -380,7 +413,10 @@ def run_fl_experiment(kind: str, noniid: str, n_clients: int = 100,
                       round_chunk: int = 8,
                       budget: float = 1e9, n_star: int | None = None,
                       selection_policy: str | None = None,
-                      scheduling_policy: str | None = None) -> dict:
+                      scheduling_policy: str | None = None,
+                      fault_plan=None, overschedule_factor: float = 1.0,
+                      quorum_frac: float = 0.0,
+                      collect_deadline: float = 0.0) -> dict:
     """One learning-curve run (paper Figs. 5/6): returns history + config.
 
     ``data_plane="host"`` uses the legacy per-round host-loop trainer;
@@ -395,6 +431,12 @@ def run_fl_experiment(kind: str, noniid: str, n_clients: int = 100,
     ``random_partition``) — an explicit name wins over the alias.
     ``n_star`` defaults to ``n_clients`` when the budget is
     unconstrained (the paper's full-pool setup) and to 1 otherwise.
+
+    ``fault_plan`` (a :class:`repro.core.faults.FaultPlan`) injects
+    deterministic stragglers/crashes/outages; ``overschedule_factor`` /
+    ``quorum_frac`` / ``collect_deadline`` are the matching
+    ``TaskRequest`` mitigation knobs (docs/robustness.md). All default
+    off — the no-fault path is bit-identical to before.
     """
     from repro.data.synthetic import make_classification_data
     from repro.fl.partition import partition_labels
@@ -411,9 +453,11 @@ def run_fl_experiment(kind: str, noniid: str, n_clients: int = 100,
     model_cfg = cnn.MNIST_CNN if kind == "mnist" else cnn.CIFAR_CNN
     if data_plane == "device":
         simul = DeviceFLSim(model_cfg, data, parts, test, sim,
-                            pad_subset_to=subset_size + subset_delta)
+                            pad_subset_to=subset_size + subset_delta,
+                            fault_plan=fault_plan)
     elif data_plane == "host":
-        simul = FLClassificationSim(model_cfg, data, parts, test, sim)
+        simul = FLClassificationSim(model_cfg, data, parts, test, sim,
+                                    fault_plan=fault_plan)
         round_chunk = 1
     else:
         raise ValueError(f"unknown data_plane {data_plane!r}")
@@ -425,7 +469,10 @@ def run_fl_experiment(kind: str, noniid: str, n_clients: int = 100,
                        scheduler=scheduler, seed=seed,
                        round_chunk=round_chunk, max_rounds=rounds,
                        selection_policy=selection_policy,
-                       scheduling_policy=scheduling_policy)
+                       scheduling_policy=scheduling_policy,
+                       overschedule_factor=overschedule_factor,
+                       quorum_frac=quorum_frac,
+                       collect_deadline=collect_deadline)
     state = lifecycle.submit(provider, task)
     state, _ = lifecycle.drain(provider, state, simul.trainer,
                                stop_fn=lambda m: m["round"] + 1 >= rounds)

@@ -1,0 +1,569 @@
+"""ISSUE-7 fault-tolerant round execution: deterministic FaultPlan
+draws, over-schedule + first-k collect in the lifecycle, quorum
+retry/backoff -> DEGRADED, reputation/pool timing-failure bookkeeping,
+pinned-schedule deregister deferral, scheduler backpressure and
+wedged-tenant eviction, and the no-fault bit-identity contract."""
+import numpy as np
+import pytest
+
+from repro.core import (FaultPlan, FLServiceProvider, InFlightError,
+                        RejectedTask, ServiceScheduler, TaskPhase,
+                        TaskRequest, as_run_result, collect, dispatch,
+                        drain, load_state, random_profiles, save_state,
+                        step, submit)
+from repro.core.faults import _u01
+from repro.core.policy import selection_policy
+from repro.core.pool import ClientPoolState
+
+
+def _profiles(n=60, seed=0):
+    return random_profiles(n, 10, np.random.default_rng(seed))
+
+
+def _round_result(rnd, subset, fail_mod=7):
+    subset = np.asarray(subset)
+    returned = (subset + rnd) % fail_mod != 0
+    q = np.where(returned, 0.5 + 0.4 * np.cos(subset + rnd), 0.0)
+    return returned, q, {"round": rnd, "loss": 1.0 / (rnd + 1)}
+
+
+class FaultyChunkStub:
+    """Deterministic sync Trainer carrying a fault plan. Arrival-aware:
+    the lifecycle hands it per-round arrival masks in fault mode (it
+    ignores them — host-side masking in _settle_chunk is under test)."""
+
+    accepts_arrivals = True
+
+    def __init__(self, fault_plan=None):
+        self.fault_plan = fault_plan
+
+    def run_rounds(self, start_round, subsets, weights, arrivals=None):
+        return [_round_result(start_round + j, s)
+                for j, s in enumerate(subsets)]
+
+    def __call__(self, rnd, subset, weights):
+        return self.run_rounds(rnd, [subset], [weights])[0]
+
+
+class AsyncStub:
+    """Async trainer whose dispatch just parks the chunk (lazy)."""
+
+    def dispatch_rounds(self, start_round, subsets, weights):
+        return (start_round, [list(s) for s in subsets])
+
+    def collect(self, handle):
+        start_round, subsets = handle
+        return [_round_result(start_round + j, s)
+                for j, s in enumerate(subsets)]
+
+    def run_rounds(self, start_round, subsets, weights):
+        return self.collect(self.dispatch_rounds(start_round, subsets,
+                                                 weights))
+
+
+class WedgedStub(AsyncStub):
+    """Async trainer whose in-flight chunk never becomes ready."""
+
+    def poll(self, handle):
+        return False
+
+    def collect(self, handle):                      # pragma: no cover
+        raise AssertionError("a wedged handle must never be collected")
+
+
+def _task(**kw):
+    base = dict(budget=400.0, n_star=10, subset_size=5, subset_delta=2,
+                max_periods=3, seed=3)
+    base.update(kw)
+    return TaskRequest(**base)
+
+
+def _events_digest(events):
+    return [(e.period, e.round_index, tuple(e.subset),
+             tuple(np.asarray(e.weights).tolist())) for e in events]
+
+
+# ---------------------------------------------------------------------------
+# FaultPlan: deterministic counter-based draws
+# ---------------------------------------------------------------------------
+
+class TestFaultPlan:
+    def test_u01_deterministic_and_order_free(self):
+        ids = np.arange(50)
+        a = _u01(7, 2, ids, extra=3)
+        b = _u01(7, 2, ids, extra=3)
+        np.testing.assert_array_equal(a, b)
+        # per-id evaluation == batch evaluation (counter-based)
+        solo = np.array([_u01(7, 2, [i], extra=3)[0] for i in ids])
+        np.testing.assert_array_equal(a, solo)
+        assert ((a >= 0) & (a < 1)).all()
+        # different stream/extra/seed decorrelate
+        assert not np.array_equal(a, _u01(7, 3, ids, extra=3))
+        assert not np.array_equal(a, _u01(7, 2, ids, extra=4))
+        assert not np.array_equal(a, _u01(8, 2, ids, extra=3))
+
+    def test_inactive_plan(self):
+        assert not FaultPlan().active
+        assert FaultPlan(straggler_frac=0.2).active
+        assert FaultPlan(crash_prob=0.1).active
+        assert FaultPlan(outage_prob=0.1).active
+
+    def test_straggler_trait_is_fixed(self):
+        plan = FaultPlan(seed=5, straggler_frac=0.3)
+        ids = np.arange(500)
+        trait = plan.is_straggler(ids)
+        np.testing.assert_array_equal(trait, plan.is_straggler(ids))
+        assert 0.2 < trait.mean() < 0.4            # ~30%
+        lat = plan.latency(ids, 4)
+        # stragglers are straggler_slowdown x slower (up to jitter)
+        assert lat[trait].min() > lat[~trait].max()
+
+    def test_death_is_permanent(self):
+        plan = FaultPlan(seed=1, crash_prob=0.2, permanent_frac=0.5)
+        ids = np.arange(200)
+        death = plan.death_round(ids)
+        assert (death >= 0).all()
+        dead_by_10 = death <= 10
+        assert dead_by_10.any()
+        for rnd in range(11, 15):       # once dead, dead forever
+            assert not plan.alive(ids[dead_by_10], rnd).any()
+
+    def test_round_outcome_first_k(self):
+        plan = FaultPlan(seed=2, straggler_frac=0.5,
+                         straggler_slowdown=10.0, latency_jitter=0.0)
+        ids = np.arange(10)
+        strag = plan.is_straggler(ids)
+        out = plan.round_outcome(ids, 0, deadline=0.0,
+                                 target_k=int((~strag).sum()), quorum_k=1)
+        # closes at the k-th (= last healthy) arrival: all healthy in,
+        # all stragglers (10x latency) out
+        np.testing.assert_array_equal(out.arrival, ~strag)
+        assert out.close_time == pytest.approx(1.0)
+        assert out.quorum_met
+
+    def test_round_outcome_deadline_cut(self):
+        plan = FaultPlan(seed=2, straggler_frac=0.5,
+                         straggler_slowdown=10.0, latency_jitter=0.0)
+        ids = np.arange(10)
+        out = plan.round_outcome(ids, 0, deadline=2.0, target_k=10,
+                                 quorum_k=8)
+        assert out.close_time == pytest.approx(2.0)   # cut by deadline
+        np.testing.assert_array_equal(out.arrival, ~plan.is_straggler(ids))
+        assert not out.quorum_met                     # ~5 < 8
+
+    def test_round_outcome_never_hangs(self):
+        # everyone crashed: no arrivals, close at the deadline (or 0)
+        plan = FaultPlan(seed=0, crash_prob=1.0)
+        out = plan.round_outcome(np.arange(8), 0, deadline=3.0,
+                                 target_k=8, quorum_k=1)
+        assert out.n_arrived == 0 and not out.quorum_met
+        assert out.close_time == pytest.approx(3.0)
+        out = plan.round_outcome(np.arange(8), 0, deadline=0.0,
+                                 target_k=8, quorum_k=1)
+        assert out.close_time == 0.0
+
+
+# ---------------------------------------------------------------------------
+# Lifecycle fault mode
+# ---------------------------------------------------------------------------
+
+_PLAN = FaultPlan(seed=11, straggler_frac=0.2, straggler_slowdown=8.0,
+                  crash_prob=0.05, permanent_frac=0.2, outage_prob=0.1,
+                  outage_len=5)
+
+
+def _mitigated_task(**kw):
+    return _task(overschedule_factor=1.5, quorum_frac=0.6,
+                 collect_deadline=2.0, **kw)
+
+
+class TestFaultLifecycle:
+    def test_no_fault_bit_identity(self):
+        """A trainer with an inactive FaultPlan takes the exact no-plan
+        code path: identical events, schedules and reputation."""
+        runs = []
+        for plan in (None, FaultPlan()):
+            sp = FLServiceProvider(_profiles())
+            state = submit(sp, _task())
+            state, _ = drain(sp, state, FaultyChunkStub(fault_plan=plan))
+            runs.append((as_run_result(state), state))
+        a, b = runs[0][0], runs[1][0]
+        assert _events_digest(a.rounds) == _events_digest(b.rounds)
+        assert a.reputation == b.reputation
+        assert [s.subsets for s in a.schedules] == \
+               [s.subsets for s in b.schedules]
+        for ea, eb in zip(a.rounds, b.rounds):
+            assert ea.metrics == eb.metrics
+            assert "round_latency" not in ea.metrics
+
+    def test_mitigated_rounds_close_at_quorum(self):
+        sp = FLServiceProvider(_profiles())
+        task = _mitigated_task()
+        state = submit(sp, task)
+        state, events = drain(sp, state, FaultyChunkStub(fault_plan=_PLAN))
+        assert state.phase == TaskPhase.DONE
+        assert events
+        for ev in events:
+            assert ev.metrics["n_scheduled"] == len(ev.subset)
+            # every committed round met its quorum (quorum_k is over the
+            # BASE subset size; members = ceil(base * 1.5), so base =
+            # floor(members / 1.5))
+            base_n = int(np.floor(ev.metrics["n_scheduled"] / 1.5))
+            quorum_k = max(1, int(np.ceil(task.quorum_frac * base_n)))
+            assert ev.metrics["n_arrived"] >= quorum_k
+            # the deadline bounds every close (retry penalty rides on
+            # top of the committed round that follows the misses)
+            lat = ev.metrics["round_latency"]
+            assert lat <= task.collect_deadline + \
+                ev.metrics.get("retry_penalty", 0.0) + 1e-9
+        big = [ev for ev in events
+               if ev.metrics["n_scheduled"] > task.subset_size]
+        assert big, "no round was over-scheduled"
+
+    def test_timing_failures_recorded(self):
+        sp = FLServiceProvider(_profiles())
+        state = submit(sp, _mitigated_task())
+        state, _ = drain(sp, state, FaultyChunkStub(fault_plan=_PLAN))
+        tf = state.tracker.timeout_counts()
+        assert sum(tf.values()) > 0
+        assert sp.pool_state.dispatch_counts.sum() > 0
+        assert sp.pool_state.timeout_counts.sum() > 0
+        rate = sp.pool_state.timeout_rate()
+        assert ((rate >= 0) & (rate <= 1)).all()
+        # arrival-masked reputation: non-arrived clients got b_t = 0
+        assert any(v > 0 for v in tf.values())
+
+    def test_all_pins_released(self):
+        sp = FLServiceProvider(_profiles())
+        state = submit(sp, _mitigated_task())
+        state, _ = drain(sp, state, FaultyChunkStub(fault_plan=_PLAN))
+        assert sp.pool_state._pins == {}
+        assert sp.pool_state._deferred_dereg == set()
+
+    def test_quorum_starvation_degrades(self):
+        """Universal crashes: no round can meet quorum, the task retries
+        with backoff then lands in terminal DEGRADED (never hangs)."""
+        sp = FLServiceProvider(_profiles())
+        task = _task(quorum_frac=0.5, collect_deadline=2.0,
+                     max_retries=2, retry_backoff=1.0)
+        plan = FaultPlan(seed=0, crash_prob=1.0)
+        state = submit(sp, task)
+        state, events = drain(sp, state, FaultyChunkStub(fault_plan=plan))
+        assert state.phase == TaskPhase.DEGRADED
+        assert state.phase.terminal
+        assert events == []
+        assert state.retry_count == task.max_retries + 1
+        # exponential backoff accumulated: deadline + 1, +2, +4
+        assert state.retry_latency == pytest.approx(
+            3 * task.collect_deadline + 1.0 + 2.0 + 4.0)
+        # stepping a DEGRADED state is a no-op
+        state2, ev = step(sp, state, FaultyChunkStub(fault_plan=plan))
+        assert state2.phase == TaskPhase.DEGRADED and ev == []
+
+
+# ---------------------------------------------------------------------------
+# Checkpoint/restore of retry/backoff and DEGRADED states
+# ---------------------------------------------------------------------------
+
+class TestFaultCheckpoint:
+    def _drive_to_retry(self, sp, state, trainer, max_steps=500):
+        """Step until the first quorum miss leaves retry state behind."""
+        for _ in range(max_steps):
+            if state.phase.terminal:
+                return state, False
+            state, _ = step(sp, state, trainer)
+            if state.retry_count > 0:
+                return state, True
+        return state, False
+
+    def test_resume_mid_backoff_identical(self, tmp_path):
+        # a plan harsh enough to miss quorum sometimes, mild enough to
+        # commit rounds after a retry
+        plan = FaultPlan(seed=4, straggler_frac=0.5,
+                         straggler_slowdown=8.0, crash_prob=0.3)
+        task = _task(overschedule_factor=1.1, quorum_frac=0.8,
+                     collect_deadline=1.5, max_retries=10,
+                     retry_backoff=0.5)
+        sp = FLServiceProvider(_profiles())
+        state = submit(sp, task)
+        trainer = FaultyChunkStub(fault_plan=plan)
+        state, hit = self._drive_to_retry(sp, state, trainer)
+        assert hit, "plan never missed quorum; pick harsher knobs"
+        assert state.pending is None           # mid-backoff: serializable
+        path = str(tmp_path / "mid_backoff.ckpt")
+        save_state(path, state)
+        restored = load_state(path)
+        assert restored.retry_count == state.retry_count
+        assert restored.retry_latency == state.retry_latency
+        # both continuations replay identically (fresh-draw retries come
+        # from the checkpointed rng)
+        sp2 = FLServiceProvider(_profiles())
+        state, ev_a = drain(sp, state, trainer)
+        restored, ev_b = drain(sp2, restored,
+                               FaultyChunkStub(fault_plan=plan))
+        assert state.phase == restored.phase
+        assert _events_digest(ev_a) == _events_digest(ev_b)
+        for ea, eb in zip(ev_a, ev_b):
+            assert ea.metrics == eb.metrics
+
+    def test_degraded_roundtrip(self, tmp_path):
+        sp = FLServiceProvider(_profiles())
+        task = _task(quorum_frac=0.5, collect_deadline=2.0, max_retries=1)
+        plan = FaultPlan(seed=0, crash_prob=1.0)
+        state = submit(sp, task)
+        state, _ = drain(sp, state, FaultyChunkStub(fault_plan=plan))
+        assert state.phase == TaskPhase.DEGRADED
+        path = str(tmp_path / "degraded.ckpt")
+        save_state(path, state)
+        restored = load_state(path)
+        assert restored.phase == TaskPhase.DEGRADED
+        assert restored.phase.terminal
+        assert restored.retry_count == state.retry_count
+        assert restored.task_id == state.task_id
+        restored, ev = step(sp, restored,
+                            FaultyChunkStub(fault_plan=plan))
+        assert restored.phase == TaskPhase.DEGRADED and ev == []
+
+    def test_fault_knobs_roundtrip(self, tmp_path):
+        sp = FLServiceProvider(_profiles())
+        task = _mitigated_task(max_retries=5, retry_backoff=0.25)
+        state = submit(sp, task)
+        path = str(tmp_path / "knobs.ckpt")
+        save_state(path, state)
+        t = load_state(path).task
+        assert t.overschedule_factor == task.overschedule_factor
+        assert t.quorum_frac == task.quorum_frac
+        assert t.collect_deadline == task.collect_deadline
+        assert t.max_retries == 5 and t.retry_backoff == 0.25
+
+
+# ---------------------------------------------------------------------------
+# Satellite: InFlightError names the task + pending rounds
+# ---------------------------------------------------------------------------
+
+class TestInFlightContext:
+    def test_to_arrays_error_names_task_and_rounds(self):
+        sp = FLServiceProvider(_profiles())
+        state = submit(sp, _task(round_chunk=3))
+        state.task_id = 42
+        while state.phase != TaskPhase.SCHEDULED:
+            state, _ = step(sp, state, AsyncStub())
+        dispatch(sp, state, AsyncStub())
+        assert state.pending is not None
+        with pytest.raises(InFlightError, match=r"task id 42"):
+            state.to_arrays()
+        with pytest.raises(InFlightError,
+                           match=r"pending rounds 0\.\.2"):
+            state.to_arrays()
+        with pytest.raises(InFlightError, match=r"task id 42"):
+            dispatch(sp, state, AsyncStub())
+        collect(state)                              # leave it clean
+
+    def test_save_state_error_names_task(self, tmp_path):
+        sp = FLServiceProvider(_profiles())
+        state = submit(sp, _task())
+        while state.phase != TaskPhase.SCHEDULED:
+            state, _ = step(sp, state, AsyncStub())
+        dispatch(sp, state, AsyncStub())
+        with pytest.raises(InFlightError, match=r"task id unassigned"):
+            save_state(str(tmp_path / "x.ckpt"), state)
+        collect(state)
+
+
+# ---------------------------------------------------------------------------
+# Satellite: deregister vs in-flight PendingChunk schedules
+# ---------------------------------------------------------------------------
+
+class TestDeregisterPinGuard:
+    def test_deregister_deferred_while_pinned(self):
+        sp = FLServiceProvider(_profiles())
+        state = submit(sp, _task())
+        while state.phase != TaskPhase.SCHEDULED:
+            state, _ = step(sp, state, AsyncStub())
+        dispatch(sp, state, AsyncStub())
+        cid = int(state.pending.chunk[0][0])
+        assert sp.pool_state.is_pinned(cid)
+        sp.pool_state.deregister([cid])
+        # still registered: the in-flight schedule references the row
+        assert sp.pool_state.is_registered([cid]).all()
+        assert cid in sp.pool_state._deferred_dereg
+        collect(state)                       # unpin -> deferred applied
+        assert not sp.pool_state.is_registered([cid]).any()
+        assert not sp.pool_state.is_pinned(cid)
+
+    def test_rejoin_after_deferred_deregister(self):
+        """A deferred-deregistered client is still registered (so it
+        cannot double-register); once the pin releases and the removal
+        lands, a normal rejoin reactivates the row and resets its
+        timing stats."""
+        sp = FLServiceProvider(_profiles())
+        state = submit(sp, _task())
+        while state.phase != TaskPhase.SCHEDULED:
+            state, _ = step(sp, state, AsyncStub())
+        dispatch(sp, state, AsyncStub())
+        cid = int(state.pending.chunk[0][0])
+        sp.pool_state.deregister([cid])
+        row = int(sp.pool_state.positions(
+            [cid], include_deregistered=True)[0])
+        # still registered while pinned: a re-register is rejected
+        with pytest.raises(ValueError, match="already registered"):
+            sp.pool_state.register_arrays(
+                [cid], sp.pool_state.scores[row:row + 1],
+                sp.pool_state.histograms[row:row + 1],
+                sp.pool_state.costs[row:row + 1])
+        sp.pool_state.timeout_counts[row] = 5
+        sp.pool_state.dispatch_counts[row] = 5
+        collect(state)                 # unpin -> deferred dereg applied
+        assert not sp.pool_state.is_registered([cid]).any()
+        sp.pool_state.register_arrays(
+            [cid], sp.pool_state.scores[row:row + 1],
+            sp.pool_state.histograms[row:row + 1],
+            sp.pool_state.costs[row:row + 1])
+        assert sp.pool_state.is_registered([cid]).all()
+        assert cid not in sp.pool_state._deferred_dereg
+        # a rejoin is a new device: timing stats reset
+        assert sp.pool_state.timeout_counts[row] == 0
+        assert sp.pool_state.dispatch_counts[row] == 0
+
+    def test_unpinned_deregister_still_immediate(self):
+        sp = FLServiceProvider(_profiles())
+        cid = int(sp.pool_state.client_ids[0])
+        sp.pool_state.deregister([cid])
+        assert not sp.pool_state.is_registered([cid]).any()
+
+
+# ---------------------------------------------------------------------------
+# ServiceScheduler: backpressure + wedged-tenant eviction
+# ---------------------------------------------------------------------------
+
+class TestSchedulerRobustness:
+    def test_submit_backpressure(self):
+        sp = FLServiceProvider(_profiles())
+        sched = ServiceScheduler(sp, max_queue=2)
+        t0 = sched.submit(_task(seed=0), AsyncStub())
+        t1 = sched.submit(_task(seed=1), AsyncStub())
+        assert isinstance(t0, int) and isinstance(t1, int)
+        rej = sched.submit(_task(seed=2), AsyncStub())
+        assert isinstance(rej, RejectedTask)
+        assert rej.queued == 2 and "intake queue full" in rej.reason
+        assert rej.task.seed == 2
+        sched.sweep()                    # drains the intake backlog
+        t2 = sched.submit(rej.task, AsyncStub())
+        assert isinstance(t2, int)
+        res = sched.run()
+        assert set(res) == {t0, t1, t2}
+        assert all(r.rounds for r in res.values())
+
+    def test_wedged_tenant_cannot_starve_the_window(self):
+        sp = FLServiceProvider(_profiles(n=80))
+        sched = ServiceScheduler(sp, max_inflight=2, inflight_deadline=2)
+        healthy = [sched.submit(_task(seed=s), AsyncStub())
+                   for s in (0, 1)]
+        wedged = sched.submit(_task(seed=2), WedgedStub())
+        res = sched.run()
+        for tid in healthy:
+            assert sched.state(tid).phase == TaskPhase.DONE
+            assert res[tid].rounds
+        assert sched.state(wedged).phase == TaskPhase.DEGRADED
+        assert sched.state(wedged).pending is None
+        assert sp.pool_state._pins == {}      # eviction unpinned
+
+    def test_without_deadline_wedged_raises_max_sweeps(self):
+        sp = FLServiceProvider(_profiles(n=80))
+        sched = ServiceScheduler(sp, max_inflight=2)
+        sched.submit(_task(seed=0), AsyncStub())
+        wedged = sched.submit(_task(seed=2), WedgedStub())
+        with pytest.raises(RuntimeError, match="still active"):
+            sched.run(max_sweeps=25)
+        assert sched.state(wedged).phase == TaskPhase.TRAINING
+
+    def test_task_id_assigned(self):
+        sp = FLServiceProvider(_profiles())
+        sched = ServiceScheduler(sp)
+        tid = sched.submit(_task(), AsyncStub())
+        assert sched.state(tid).task_id == tid
+
+
+# ---------------------------------------------------------------------------
+# straggler_aware selection policy
+# ---------------------------------------------------------------------------
+
+class TestStragglerAwareSelection:
+    def _pool(self, n=30, seed=0):
+        return ClientPoolState.from_profiles(_profiles(n=n, seed=seed))
+
+    def test_matches_greedy_without_history(self):
+        pool = self._pool()
+        task = _task(selection_policy="straggler_aware")
+        rng = np.random.default_rng(0)
+        ours = selection_policy("straggler_aware").select(pool, task, rng)
+        ref = selection_policy("paper_greedy").select(pool, task, rng)
+        assert sorted(ours.selected) == sorted(ref.selected)
+        assert ours.total_cost == pytest.approx(ref.total_cost)
+
+    def test_chronic_stragglers_priced_out(self):
+        pool = self._pool()
+        task = _task(budget=60.0, n_star=1,
+                     selection_policy="straggler_aware")
+        rng = np.random.default_rng(0)
+        baseline = selection_policy("straggler_aware").select(
+            pool, task, rng)
+        victim = int(baseline.selected[0])
+        row = pool.positions([victim])[0]
+        pool.note_timing(np.repeat(row, 10), np.repeat(row, 10))
+        assert pool.timeout_rate()[row] == 1.0
+        after = selection_policy("straggler_aware").select(pool, task, rng)
+        assert victim not in after.selected
+        # the reference greedy still picks it (no timing awareness)
+        ref = selection_policy("paper_greedy").select(pool, task, rng)
+        assert victim in ref.selected
+
+
+# ---------------------------------------------------------------------------
+# Device/host arrival masking
+# ---------------------------------------------------------------------------
+
+class TestArrivalMask:
+    def test_dropout_mask_default_path_unchanged(self):
+        import jax.numpy as jnp
+        from repro.fl import device_data
+        mask_u = jnp.asarray(np.linspace(0.0, 1.0, 8))
+        active = jnp.ones(8)
+        a = device_data.dropout_mask(mask_u, active, 0.3)
+        b = device_data.dropout_mask(mask_u, active, 0.3, arrival=None)
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_dropout_mask_arrival_masks_and_falls_back(self):
+        import jax.numpy as jnp
+        from repro.fl import device_data
+        mask_u = jnp.asarray(np.full(6, 0.9))
+        active = jnp.ones(6)
+        arrival = jnp.asarray([0.0, 0.0, 1.0, 1.0, 0.0, 1.0])
+        out = np.asarray(device_data.dropout_mask(
+            mask_u, active, 0.0, arrival=arrival))
+        np.testing.assert_array_equal(out, np.asarray(arrival))
+        # all-drop: fallback is the first ARRIVED slot, not slot 0
+        out = np.asarray(device_data.dropout_mask(
+            jnp.zeros(6), active, 0.5, arrival=arrival))
+        np.testing.assert_array_equal(out,
+                                      [0.0, 0.0, 1.0, 0.0, 0.0, 0.0])
+
+    def test_fault_mode_masks_q_and_returned(self):
+        """Host-side settle masks non-arrived clients out of reputation:
+        their b_t is 0 even when the stub says they returned."""
+        sp = FLServiceProvider(_profiles())
+        task = _mitigated_task(max_periods=1)
+        plan = FaultPlan(seed=11, straggler_frac=0.5,
+                         straggler_slowdown=50.0, latency_jitter=0.0)
+        state = submit(sp, task)
+        state, events = drain(sp, state, FaultyChunkStub(fault_plan=plan))
+        stragglers = {int(c) for c in np.arange(60)[
+            plan.is_straggler(np.arange(60))]}
+        missed = 0
+        for ev in events:
+            for cid in ev.subset:
+                if cid in stragglers:
+                    rec = state.tracker.records[cid]
+                    assert not rec.b_rounds.any()
+                    missed += 1
+        assert missed > 0

@@ -349,6 +349,73 @@ class TestCheckpointResume:
         assert back.policy_state == {}
 
 
+class TestFaultResume:
+    """ISSUE-7 extension of the resume matrix: tasks checkpointed in the
+    fault-mode retry/backoff and DEGRADED states restore with identical
+    remaining-round results (the fresh-draw retry subsets come from the
+    checkpointed rng)."""
+
+    class FaultyStub(ChunkStub):
+        accepts_arrivals = True
+
+        def __init__(self, fault_plan=None):
+            self.fault_plan = fault_plan
+
+        def run_rounds(self, start_round, subsets, weights,
+                       arrivals=None):
+            return super().run_rounds(start_round, subsets, weights)
+
+    # harsh-but-survivable and unsurvivable fault loads; stop_phase is
+    # where the checkpoint is taken
+    # arrivals are a fixed per-(client, round) property, so retries of
+    # one round resample a finite pool — the recoverable case needs a
+    # quorum the pool can actually supply plus enough retry headroom
+    @pytest.mark.parametrize("crash,quorum,expect_terminal", [
+        (0.3, 0.3, TaskPhase.DONE),        # retries, then recovers
+        (1.0, 0.5, TaskPhase.DEGRADED),    # quorum never met
+    ])
+    def test_resume_fault_states(self, tmp_path, crash, quorum,
+                                 expect_terminal):
+        from repro.core import FaultPlan
+        plan = FaultPlan(seed=4, straggler_frac=0.5,
+                         straggler_slowdown=8.0, crash_prob=crash)
+        task = TaskRequest(budget=400.0, n_star=10, subset_size=5,
+                           subset_delta=2, max_periods=3, seed=3,
+                           overschedule_factor=1.5, quorum_frac=quorum,
+                           collect_deadline=1.5, max_retries=10,
+                           retry_backoff=0.5)
+        profiles = _profiles()
+        sp = FLServiceProvider(profiles)
+        state = submit(sp, task)
+        trainer = self.FaultyStub(fault_plan=plan)
+        pre = []
+        # step until mid-backoff (first quorum miss) or terminal
+        for _ in range(500):
+            if state.phase.terminal or state.retry_count > 0:
+                break
+            state, ev = step(sp, state, trainer)
+            pre.extend(ev)
+        assert state.retry_count > 0 or state.phase.terminal
+        path = os.path.join(tmp_path, "fault.ckpt")
+        save_state(path, state)
+        restored = load_state(path)
+        assert restored.retry_count == state.retry_count
+        assert restored.retry_latency == state.retry_latency
+        assert restored.phase == state.phase
+        sp2 = FLServiceProvider(profiles)
+        state, post_a = drain(sp, state, trainer)
+        restored, post_b = drain(sp2, restored,
+                                 self.FaultyStub(fault_plan=plan))
+        assert state.phase == expect_terminal
+        assert restored.phase == expect_terminal
+        assert [(e.period, e.round_index, e.subset) for e in post_a] == \
+            [(e.period, e.round_index, e.subset) for e in post_b]
+        for a, b in zip(post_a, post_b):
+            assert a.metrics == b.metrics
+        assert as_run_result(state).reputation == \
+            as_run_result(restored).reputation
+
+
 # ---------------------------------------------------------------------------
 # ISSUE-4: the dispatch/collect split of the TRAINING transition
 # ---------------------------------------------------------------------------
