@@ -1,5 +1,5 @@
 """ISSUE-5 policy-comparison study: the pluggable selection/scheduling
-registry A/B'd on a non-iid partition.
+registry A/B'd across non-iid partitions.
 
 Five policy bundles run the *same* federated MNIST-like task (type2
 non-iid partition, binding budget ≈ 45% of the pool's total cost) end
@@ -21,6 +21,13 @@ rounds), stage-1 **selection latency** (µs, median), pool size/cost and
 executed rounds — written into ``BENCH_selection.json`` under the
 ``"policies"`` key (merged; the stage-1 scaling study owns the other
 keys).
+
+Since ISSUE-8 the study also tracks the accuracy-vs-fairness frontier
+across **partition kinds** (the PR 5 follow-up): the paper / random /
+fair_ema bundles additionally run on the paper's **type1** (single
+dominant class per client) and **type3** (two-class mixtures)
+partitions, recorded under ``"policies"."partitions"`` alongside the
+type2 ``"bundles"`` rows.
 
 Set ``REPRO_BENCH_SMOKE=1`` for the CI configuration: tiny data/rounds,
 but still **all** bundles (every registered policy must at least run).
@@ -80,14 +87,20 @@ def _select_latency_us(pool, task, reps=5) -> float:
     return float(np.median(ts)) * 1e6
 
 
-def run(report):
-    smoke = bool(int(os.environ.get("REPRO_BENCH_SMOKE", "0")))
+# the reduced bundle set for the cross-partition frontier rows (the
+# interesting corners: the paper's scheme, the random baseline pair,
+# and the fairness-first scheduler)
+_PARTITION_KINDS = ("type1", "type3")
+_PARTITION_BUNDLES = ("paper", "random", "fair_ema")
+
+
+def _study(noniid, bundle_names, smoke, seed, report, prefix=""):
+    """Run one partition kind's bundle A/B; returns (rows, budget)."""
     n_clients = 20 if smoke else 30
     rounds = 3 if smoke else 16
     n_train = 600 if smoke else 2400
     n_test = 200 if smoke else 600
     subset_size, subset_delta = 6, 3
-    noniid, seed = "type2", 0
     sim = SimConfig(batch_size=16, local_steps=2, local_lr=0.15,
                     eval_every=rounds, dropout_rate=0.05, seed=seed)
 
@@ -100,10 +113,10 @@ def run(report):
     pool = pool_from_partition(data.labels, parts, data.num_classes,
                                seed=seed)
     budget = float(np.round(0.45 * pool.costs.sum()))
-    report("budget", budget, f"45% of total pool cost, n={n_clients}")
 
     rows = {}
-    for bundle, (sel, sch) in BUNDLES.items():
+    for bundle in bundle_names:
+        sel, sch = BUNDLES[bundle]
         out = run_fl_experiment(
             "mnist", noniid, n_clients=n_clients, rounds=rounds,
             n_train=n_train, n_test=n_test, subset_size=subset_size,
@@ -127,31 +140,58 @@ def run(report):
             "pool_cost": float(svc.pool.total_cost),
             "rounds": svc.num_rounds,
         }
-        report(f"{bundle}_accuracy", round(rows[bundle]["accuracy"], 4),
-               f"{sel}+{sch}")
-        report(f"{bundle}_jain", round(jain, 4),
+        report(f"{prefix}{bundle}_accuracy",
+               round(rows[bundle]["accuracy"], 4), f"{sel}+{sch}")
+        report(f"{prefix}{bundle}_jain", round(jain, 4),
                "participation fairness over executed rounds")
-        report(f"{bundle}_select_us", round(lat_us, 1), "stage-1 latency")
-        report(f"{bundle}_pool", len(svc.pool.selected),
-               f"cost {svc.pool.total_cost:.0f}/{budget:.0f}")
+        if not prefix:
+            report(f"{bundle}_select_us", round(lat_us, 1),
+                   "stage-1 latency")
+            report(f"{bundle}_pool", len(svc.pool.selected),
+                   f"cost {svc.pool.total_cost:.0f}/{budget:.0f}")
 
-    record = {"smoke": smoke, "noniid": noniid, "n_clients": n_clients,
+    # every bundle must have actually trained: jain_index returns 1.0
+    # on empty counts, so guard on rounds, not Jain
+    assert all(r["rounds"] > 0 and r["pool_size"] > 0
+               for r in rows.values())
+    return rows, budget
+
+
+def run(report):
+    smoke = bool(int(os.environ.get("REPRO_BENCH_SMOKE", "0")))
+    seed = 0
+    n_clients = 20 if smoke else 30
+    rounds = 3 if smoke else 16
+
+    rows, budget = _study("type2", list(BUNDLES), smoke, seed, report)
+    report("budget", budget, f"45% of total pool cost, n={n_clients}")
+
+    # cross-partition frontier (PR 5 follow-up): the same A/B on the
+    # paper's other partition kinds, reduced bundle set
+    partitions = {}
+    for kind in _PARTITION_KINDS:
+        p_rows, p_budget = _study(kind, _PARTITION_BUNDLES, smoke, seed,
+                                  report, prefix=f"{kind}_")
+        partitions[kind] = {"budget": p_budget, "bundles": p_rows}
+
+    record = {"smoke": smoke, "noniid": "type2", "n_clients": n_clients,
               "rounds": rounds, "budget": budget,
-              "subset_size": subset_size, "subset_delta": subset_delta,
-              "bundles": rows}
+              "subset_size": 6, "subset_delta": 3,
+              "bundles": rows, "partitions": partitions}
     _merge_json(_JSON_PATH, "policies", record)
     report("json_written", 1, os.path.abspath(_JSON_PATH))
 
     # sanity assertions the study is meant to demonstrate (skip the
     # accuracy ordering in smoke mode — 3 rounds prove plumbing, not
-    # learning). Every bundle must have actually trained: jain_index
-    # returns 1.0 on empty counts, so guard on rounds, not Jain.
-    assert all(r["rounds"] > 0 and r["pool_size"] > 0
-               for r in rows.values())
+    # learning)
     if not smoke:
         assert rows["fair_ema"]["jain_fairness"] >= \
             rows["random"]["jain_fairness"] - 0.05, \
             "fairness-EMA scheduling should not be less fair than random"
+        for kind, p in partitions.items():
+            b = p["bundles"]
+            assert b["fair_ema"]["jain_fairness"] >= \
+                b["random"]["jain_fairness"] - 0.05, kind
 
 
 if __name__ == "__main__":

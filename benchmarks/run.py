@@ -18,6 +18,7 @@ BENCHES = [
     "bench_round_time",       # ISSUE-2 device-resident round data plane
     "bench_service_multitask",  # ISSUE-3 multi-tenant service lifecycle
     "bench_faults",           # ISSUE-7 fault injection + mitigation
+    "bench_workload",         # ISSUE-8 online workload harness (SLA)
     "bench_roofline",         # §Roofline (from dry-run artifacts)
 ]
 

@@ -21,11 +21,16 @@ Demonstrates the redesigned service API end to end:
 6. policy A/B (docs/policies.md): the paper's selection/scheduling
    pair vs the ``--selection-policy`` / ``--scheduling-policy``
    challenger (default: the random baselines) on the same pool with
-   the same seed — pool quality, accuracy proxy, Jain fairness.
+   the same seed — pool quality, accuracy proxy, Jain fairness;
+7. (with ``--workload``) the online harness (docs/workloads.md): a
+   seeded trace replayed through the virtual-clock ``OnlineDriver``
+   against a fresh scheduler, closing with the SLA telemetry table
+   (p50/p99 round latency, queue wait, completion, Jain fairness).
 
 Run:  PYTHONPATH=src python examples/fl_service_demo.py
       PYTHONPATH=src python examples/fl_service_demo.py \\
           --selection-policy score_prop --scheduling-policy fair_ema
+      PYTHONPATH=src python examples/fl_service_demo.py --workload bursty
 """
 import argparse
 import os
@@ -33,12 +38,13 @@ import tempfile
 
 import numpy as np
 
-from repro.core import (FLServiceProvider, ServiceScheduler, TaskPhase,
-                        TaskRequest, as_run_result,
+from repro.core import (FLServiceProvider, OnlineDriver, ServiceScheduler,
+                        TaskPhase, TaskRequest, as_run_result,
                         available_scheduling_policies,
                         available_selection_policies, budget_floor, drain,
-                        jain_index, load_state, random_profiles, save_state,
-                        step, submit, threshold_filter)
+                        jain_index, load_state, make_workload,
+                        random_profiles, save_state, step, submit,
+                        threshold_filter)
 from repro.core.pool import ClientPoolState
 
 parser = argparse.ArgumentParser(
@@ -51,6 +57,11 @@ parser.add_argument("--scheduling-policy", default="random_partition",
                     choices=available_scheduling_policies(),
                     help="stage-2 challenger for the A/B vs the paper's "
                          "Algorithm 1 (default: random_partition)")
+parser.add_argument("--workload", default=None,
+                    choices=("steady", "bursty", "diurnal"),
+                    help="also replay this workload regime through the "
+                         "online driver and print the SLA summary "
+                         "(docs/workloads.md)")
 args = parser.parse_args()
 
 rng = np.random.default_rng(7)
@@ -193,3 +204,57 @@ for arm, (sel, sch) in arms.items():
           f"{res.pool.total_cost:5.0f}), {res.num_rounds:2d} rounds, "
           f"Jain fairness {jain:.3f}, mean reputation "
           f"{np.mean(list(res.reputation.values())):.2f}")
+
+# -- 7: online workload replay (--workload) ----------------------------------
+# a seeded trace (docs/workloads.md) replayed through the virtual-clock
+# OnlineDriver against a fresh scheduler: arrivals submitted at their
+# trace times, RejectedTask backpressure requeued with backoff, the
+# availability wave (diurnal) tick'd into period checkpoints, and the
+# SLA telemetry table printed at the end
+if args.workload is not None:
+    class ChunkStub:
+        """Deterministic sync chunk trainer for the workload replay;
+        the trace's fault plan is attached by the driver."""
+
+        accepts_arrivals = True
+
+        def __init__(self):
+            self.fault_plan = None
+
+        def run_rounds(self, start_round, subsets, weights, arrivals=None):
+            out = []
+            for j, s in enumerate(subsets):
+                s = np.asarray(s)
+                returned = (s + start_round + j) % 7 != 0
+                q = np.where(returned,
+                             0.5 + 0.4 * np.cos(s + start_round + j), 0.0)
+                out.append((returned, q, {"round": start_round + j}))
+            return out
+
+    wp = FLServiceProvider(random_profiles(60, n_classes=10,
+                                           rng=np.random.default_rng(11)))
+    w_budget = float(np.round(0.5 * wp.pool_state.costs.sum()))
+
+    def w_template(i, t):
+        return TaskRequest(budget=w_budget, n_star=8, subset_size=8,
+                           subset_delta=2, max_periods=2, max_rounds=4,
+                           round_chunk=2, seed=i,
+                           **({} if args.workload == "steady" else
+                              dict(scheduling_policy="deadline_aware",
+                                   overschedule_factor=1.5, quorum_frac=0.5,
+                                   collect_deadline=3.0)))
+
+    trace = make_workload(args.workload, seed=5, template=w_template,
+                          horizon=32.0)
+    driver = OnlineDriver(ServiceScheduler(wp, max_inflight=4, max_queue=3),
+                          trace, ChunkStub, backoff=1.0)
+    # the steady regime has no trace arrivals — everything lands at t=0
+    initial = ([w_template(i, 0.0) for i in range(4)]
+               if args.workload == "steady" else None)
+    driver.run(initial_tasks=initial)
+    summary = driver.telemetry.summary()
+    print(f"\n--workload {args.workload}: {summary['tasks_submitted']} tasks "
+          f"over {summary['makespan']:.1f} sim time units, "
+          f"{summary['rejects']} backpressure rejects, terminal phases "
+          f"{sorted(set(driver.phases.values()))}")
+    print(driver.telemetry.format_summary())

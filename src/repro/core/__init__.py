@@ -31,6 +31,11 @@ Data flow (post array-native refactor):
   a multi-tenant ``ServiceScheduler`` overlapping many tasks' device
   dispatches over one shared pool. ``FLServiceProvider.run_task`` is a
   deprecated shim over it.
+- ``workload`` / ``driver`` / ``telemetry`` are the online harness
+  (docs/workloads.md): seeded counter-based arrival / availability /
+  device-speed traces, a virtual-clock ``OnlineDriver`` replaying them
+  against a live ``ServiceScheduler``, and SLA telemetry (p50/p99
+  latency, queue wait, completion time, DEGRADED rate, Jain fairness).
 - The pre-refactor loop implementations survive as
   ``select_greedy_legacy``, ``generate_subsets_legacy`` and
   ``FLServiceProvider.run_task_legacy`` — reference paths for
@@ -73,6 +78,10 @@ from .selection import (SelectionResult, budget_floor, select_dp,
                         select_score_prop, select_score_prop_batch,
                         threshold_filter)
 from .service import FLServiceProvider, RoundLog, ServiceRunResult, TaskRequest
+from .workload import (ArrivalTrace, DeviceSpeedProfile, DiurnalAvailability,
+                       HeterogeneousFaultPlan, WorkloadTrace, make_workload)
+from .driver import OnlineDriver
+from .telemetry import TelemetryEvent, TelemetryLog
 
 __all__ = [
     "CRITERIA", "NUM_CRITERIA", "ClientPoolState", "ClientProfile",
@@ -104,4 +113,8 @@ __all__ = [
     "save_state", "single_round_adapter", "step", "submit",
     # fault injection (robustness plane, docs/robustness.md)
     "FaultPlan", "RoundOutcome",
+    # online workload harness (docs/workloads.md)
+    "ArrivalTrace", "DeviceSpeedProfile", "DiurnalAvailability",
+    "HeterogeneousFaultPlan", "OnlineDriver", "TelemetryEvent",
+    "TelemetryLog", "WorkloadTrace", "make_workload",
 ]

@@ -85,6 +85,10 @@ from .scheduling import ScheduleResult
 from .selection import SelectionResult
 from .reputation import ReputationTracker
 
+# rounds of fault-mode round_latency retained in the policy_state
+# "obs/latency" window (read by the deadline_aware scheduling policy)
+_OBS_LATENCY_WINDOW = 128
+
 _STATE_FORMAT = 3          # to_arrays layout version (3: + fault/
 _STATE_FORMATS = (1, 2, 3)  # mitigation TaskRequest fields, retry/
 # backoff cursors, DEGRADED phase, task id; 2 added policy names and
@@ -813,6 +817,15 @@ def _schedule_next_period(provider, state: TaskState) -> TaskState:
                 and state.global_round >= task.max_rounds)):
         state.phase = TaskPhase.DONE
         return state
+    # publish the task's timing observability columns before drawing the
+    # schedule: the reputation tracker's aligned timing arrays plus the
+    # rolling round-latency window maintained by _settle_chunk. They live
+    # in policy_state (string keys -> numpy arrays) so deadline/straggler
+    # -aware scheduling policies can react mid-task and the columns ride
+    # checkpoints; policies that don't read them are unaffected.
+    state.policy_state["obs/ids"] = state.tracker.client_ids.copy()
+    state.policy_state["obs/timeouts"] = state.tracker.timeout_failures
+    state.policy_state["obs/rounds"] = state.tracker.round_counts
     state.schedule = provider.schedule_period(sorted(state.pool), task,
                                               state.rng,
                                               policy_state=state.policy_state)
@@ -1013,6 +1026,13 @@ def _settle_chunk(state: TaskState, p: PendingChunk, results
             metrics["round_latency"] = p.close_times[j] + penalty
             metrics["n_scheduled"] = len(subset)
             metrics["n_arrived"] = int(arr.sum())
+            # rolling latency window for deadline-aware scheduling
+            # (policy_state -> checkpointed; absent on the no-fault path)
+            lat = np.append(
+                state.policy_state.get("obs/latency",
+                                       np.zeros(0, dtype=np.float64)),
+                metrics["round_latency"])
+            state.policy_state["obs/latency"] = lat[-_OBS_LATENCY_WINDOW:]
             if penalty:
                 metrics["retry_penalty"] = penalty
             penalty = 0.0
@@ -1118,9 +1138,15 @@ def _apply_churn(provider, state: TaskState) -> None:
 @dataclasses.dataclass(frozen=True)
 class RejectedTask:
     """Returned by :meth:`ServiceScheduler.submit` instead of a task id
-    when the intake queue is full (``max_queue``). The caller keeps the
-    request and may resubmit after draining a sweep; nothing was
-    enqueued."""
+    when the intake queue is full (``max_queue``). Nothing was enqueued,
+    and the rejection carries everything needed to resubmit without any
+    caller-side bookkeeping: ``task`` is the *same* :class:`TaskRequest`
+    object echoed back (resubmitting it later is exactly equivalent to
+    the original submit), and ``queued`` is the INTAKE backlog depth at
+    rejection time — a congestion signal for sizing the retry backoff.
+    The online driver (:class:`repro.core.driver.OnlineDriver`) requeues
+    rejected tasks from this echo alone; tests/test_workload.py asserts
+    the echo identity and that no rejected task is ever dropped."""
 
     task: TaskRequest
     reason: str

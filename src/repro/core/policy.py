@@ -609,3 +609,113 @@ class FairEMAScheduling:
         hit = prev_ids[pos_c] == ids
         ema[hit] = prev_ema[pos_c[hit]]
         return ema
+
+
+@register_scheduling_policy
+class DeadlineAwareScheduling:
+    """Timing-reactive scheduling: demote chronic stragglers, tighten
+    over-scheduling as observed latency approaches the collect deadline.
+
+    The lifecycle publishes per-task timing observability columns into
+    ``policy_state`` every period (docs/workloads.md): ``obs/ids`` /
+    ``obs/timeouts`` / ``obs/rounds`` — the reputation tracker's timing
+    arrays — plus a rolling ``obs/latency`` window of fault-mode
+    simulated round latencies. This policy is the first consumer,
+    reacting *mid-task* where ``straggler_aware`` only filters at
+    stage 1:
+
+    1. **Demotion.** Pooled clients are ordered by ascending observed
+       timeout rate (``timeouts / (rounds + timeouts)``, 0 for clients
+       with no history; ties by ascending id) and partitioned into
+       consecutive size-``n`` subsets. Chronic-slow members land in the
+       period's *last* subsets: under first-k/deadline collect the
+       healthy-only subsets close fast, and when ``max_rounds`` or a
+       ``stop_fn`` truncates the period it is the straggler subsets
+       that go untrained. Every client appears exactly once, so each
+       period is a partition — coverage and the ``x_star`` bound hold
+       trivially and per-period participation is maximally fair
+       (Jain = 1 over scheduled slots).
+    2. **Deadline control.** With a ``collect_deadline`` set and
+       latency observations present, the policy compares the window's
+       p99 against the deadline: at >= ``pressure`` x deadline it
+       multiplicatively raises ``task.overschedule_factor`` (capped at
+       ``os_cap``) so rounds close at first-k before the deadline
+       forces a short count; at < ``relax`` x deadline it decays the
+       factor back toward the submitted value (stored in
+       ``deadline_aware/base_os`` on first sight). The mutation lives
+       on the task's own ``TaskRequest`` — serialized with the task, so
+       checkpoint/resume keeps the adapted factor.
+
+    Deterministic given (pool, observability columns) — the rng is
+    never drawn — so checkpoint/resume replays schedules exactly.
+    """
+
+    name = "deadline_aware"
+    pressure = 0.8      # p99 >= pressure * deadline -> tighten
+    relax = 0.5         # p99 <  relax * deadline    -> decay toward base
+    os_step = 1.25      # multiplicative tighten step
+    os_cap = 3.0        # overschedule_factor ceiling
+
+    def schedule(self, ids, histograms, task, rng, policy_state):
+        ids = np.asarray(ids, dtype=np.int64)
+        H = np.asarray(histograms, dtype=np.float64)
+        order0 = np.argsort(ids, kind="stable")   # canonical ascending ids
+        ids, H = ids[order0], H[order0]
+        P = ids.size
+        if P == 0:
+            return ScheduleResult([], [], {}, np.zeros(0))
+        n = max(1, int(task.subset_size))
+
+        self._adapt_overschedule(task, policy_state)
+
+        rate = self._timeout_rate(policy_state, ids)
+        order = np.argsort(rate, kind="stable")   # healthy first; rate
+        # ties (incl. the no-history cold start) fall back to ascending
+        # id via the stable sort over already-sorted ids
+        subsets_rows = [order[i: i + n] for i in range(0, P, n)]
+        subsets = [np.sort(ids[s]).tolist() for s in subsets_rows]
+        nids = [float(nid(H[s].sum(axis=0))) for s in subsets_rows]
+        count_map = {int(c): 1 for c in ids}
+        return ScheduleResult(subsets, nids, count_map, np.zeros(0))
+
+    def _timeout_rate(self, policy_state, ids: np.ndarray) -> np.ndarray:
+        """Observed timeout rate per pooled client (0 = no history)."""
+        obs_ids = policy_state.get("obs/ids")
+        if obs_ids is None or np.asarray(obs_ids).size == 0:
+            return np.zeros(ids.size, dtype=np.float64)
+        obs_ids = np.asarray(obs_ids, dtype=np.int64)
+        tf = np.asarray(policy_state.get("obs/timeouts",
+                                         np.zeros(obs_ids.size)),
+                        dtype=np.float64)
+        nr = np.asarray(policy_state.get("obs/rounds",
+                                         np.zeros(obs_ids.size)),
+                        dtype=np.float64)
+        obs_rate = tf / np.maximum(tf + nr, 1.0)
+        # tracker ids are insertion-ordered, not sorted: sort for the join
+        o = np.argsort(obs_ids, kind="stable")
+        obs_ids, obs_rate = obs_ids[o], obs_rate[o]
+        rate = np.zeros(ids.size, dtype=np.float64)
+        pos = np.searchsorted(obs_ids, ids)
+        pos_c = np.minimum(pos, obs_ids.size - 1)
+        hit = obs_ids[pos_c] == ids
+        rate[hit] = obs_rate[pos_c[hit]]
+        return rate
+
+    def _adapt_overschedule(self, task, policy_state) -> None:
+        if task.collect_deadline <= 0.0:
+            return
+        base = policy_state.get("deadline_aware/base_os")
+        if base is None:
+            base = np.array([max(1.0, float(task.overschedule_factor))])
+            policy_state["deadline_aware/base_os"] = base
+        lat = policy_state.get("obs/latency")
+        if lat is None or np.asarray(lat).size == 0:
+            return
+        p99 = float(np.percentile(np.asarray(lat, dtype=np.float64), 99))
+        factor = max(1.0, float(task.overschedule_factor))
+        if p99 >= self.pressure * task.collect_deadline:
+            task.overschedule_factor = min(self.os_cap,
+                                           factor * self.os_step)
+        elif p99 < self.relax * task.collect_deadline:
+            task.overschedule_factor = max(float(base[0]),
+                                           factor / self.os_step)

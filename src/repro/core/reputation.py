@@ -219,6 +219,21 @@ class ReputationTracker:
         return {int(cid): int(self._tf[i])
                 for i, cid in enumerate(self._ids)}
 
+    @property
+    def timeout_failures(self) -> np.ndarray:
+        """(P,) int64 — timing failures per tracked client, aligned with
+        :attr:`client_ids`. Copy; mutating it does not touch the
+        tracker. The lifecycle publishes this as the ``obs/timeouts``
+        policy-state column every period (docs/workloads.md)."""
+        return self._tf.copy()
+
+    @property
+    def round_counts(self) -> np.ndarray:
+        """(P,) int64 — committed rounds recorded per tracked client,
+        aligned with :attr:`client_ids` (copy; the ``obs/rounds``
+        column)."""
+        return self._n.copy()
+
     # -- steps 3-4: period rollover -----------------------------------------
     def update_pool(self, pool: set[int],
                     availability: Mapping[int, bool] | None = None) -> set[int]:

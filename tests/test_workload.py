@@ -1,0 +1,429 @@
+"""ISSUE-8 online workload harness: trace determinism, the driver's
+no-silent-drop and no-trace-identity properties, SLA telemetry, and the
+deadline_aware scheduling policy's observability plumbing.
+
+(The §VII fairness property checks for deadline_aware run via the
+registry parametrization in tests/test_fairness.py.)
+"""
+import numpy as np
+import pytest
+
+from repro.core import (FaultPlan, FLServiceProvider, RejectedTask,
+                        ServiceScheduler, TaskPhase, TaskRequest, drain,
+                        submit)
+from repro.core import policy as P
+from repro.core.criteria import random_histograms
+from repro.core.driver import OnlineDriver
+from repro.core.lifecycle import TaskState
+from repro.core.pool import ClientPoolState
+from repro.core.workload import (ArrivalTrace, DeviceSpeedProfile,
+                                 DiurnalAvailability, HeterogeneousFaultPlan,
+                                 WorkloadTrace, make_workload)
+
+
+def _round_result(rnd, subset):
+    subset = np.asarray(subset)
+    returned = (subset + rnd) % 7 != 0
+    q = np.where(returned, 0.5 + 0.4 * np.cos(subset + rnd), 0.0)
+    return returned, q, {"round": rnd}
+
+
+class ChunkStub:
+    accepts_arrivals = True
+
+    def __init__(self, fault_plan=None):
+        self.fault_plan = fault_plan
+
+    def run_rounds(self, start_round, subsets, weights, arrivals=None):
+        return [_round_result(start_round + j, s)
+                for j, s in enumerate(subsets)]
+
+
+def _pool(n=40, seed=0):
+    return ClientPoolState.random(n, 10, np.random.default_rng(seed))
+
+
+def _budget(pool, frac=0.5):
+    return float(np.round(frac * pool.costs.sum()))
+
+
+# ---------------------------------------------------------------------------
+# trace determinism: replay-exact, order/chunking-independent
+# ---------------------------------------------------------------------------
+
+def test_arrivals_chunking_and_order_independent():
+    tr = ArrivalTrace(seed=3, rate=0.7, window=8.0,
+                      burst_rate=4.0, burst_prob=0.3)
+    full = tr.arrivals(96.0)
+    # per-window queries, in reverse order, concatenated back
+    parts = {w: tr.window_arrivals(w) for w in reversed(range(12))}
+    rebuilt = np.concatenate([parts[w] for w in range(12)])
+    assert np.array_equal(full, rebuilt[rebuilt < 96.0])
+    # counts batched vs one by one
+    ws = np.arange(12)
+    assert np.array_equal(tr.counts(ws),
+                          np.array([int(tr.counts(w)[0]) for w in ws]))
+    # a longer horizon only appends, never rewrites history
+    longer = tr.arrivals(192.0)
+    assert np.array_equal(full, longer[longer < 96.0])
+    # replay-exact across instances
+    assert np.array_equal(full, ArrivalTrace(seed=3, rate=0.7, window=8.0,
+                                             burst_rate=4.0,
+                                             burst_prob=0.3).arrivals(96.0))
+
+
+def test_arrivals_seed_sensitivity_and_sorted():
+    a = ArrivalTrace(seed=1, rate=1.0).arrivals(64.0)
+    b = ArrivalTrace(seed=2, rate=1.0).arrivals(64.0)
+    assert not np.array_equal(a, b)
+    assert np.all(np.diff(a) >= 0), "arrivals must be ascending"
+
+
+def test_arrival_rate_within_tolerance():
+    tr = ArrivalTrace(seed=5, rate=0.5, window=4.0)
+    n = tr.arrivals(4000.0).size
+    # Poisson(0.5 * 4000): sd ~ 45, allow 4 sigma
+    assert abs(n - 2000) < 180, n
+
+
+def test_mmpp_burst_overdispersion():
+    quiet = ArrivalTrace(seed=7, rate=0.25, window=8.0)
+    burst = ArrivalTrace(seed=7, rate=0.25, window=8.0,
+                         burst_rate=4.0, burst_prob=0.25)
+    cq = quiet.counts(np.arange(200)).astype(float)
+    cb = burst.counts(np.arange(200)).astype(float)
+    assert cb.mean() > cq.mean()           # bursts add mass
+    # index of dispersion: Poisson ~1, MMPP >> 1
+    assert cb.var() / cb.mean() > 2.0 * (cq.var() / cq.mean())
+
+
+def test_availability_cellwise_independent_and_tolerance():
+    av = DiurnalAvailability(seed=9, base=0.7, amp_min=0.1, amp_max=0.3,
+                             day=96.0, tick=4.0)
+    ids = np.arange(64)
+    batch = av.available(ids, 30.0)
+    single = np.array([bool(av.available([c], 30.0)[0]) for c in ids])
+    assert np.array_equal(batch, single)
+    # duty averaged over a full day ~ base (the sinusoid cancels)
+    days = np.linspace(0.0, 96.0, 97)
+    duty = np.mean([av.duty(np.arange(256), t).mean() for t in days])
+    assert abs(duty - 0.7) < 0.03, duty
+    # realized availability over a day tracks the duty
+    frac = np.mean([av.available(np.arange(256), t).mean()
+                    for t in np.arange(0.0, 96.0, 4.0)])
+    assert abs(frac - 0.7) < 0.05, frac
+    # constant within a tick window
+    assert np.array_equal(av.available(ids, 8.0), av.available(ids, 11.9))
+
+
+def test_speed_profile_stats_and_independence():
+    sp = DeviceSpeedProfile(seed=11, class_mults=(1.0, 2.0, 4.0),
+                            class_weights=(0.5, 0.35, 0.15), sigma=0.2)
+    ids = np.arange(4000)
+    cls = sp.speed_class(ids)
+    freqs = np.bincount(cls, minlength=3) / ids.size
+    assert np.allclose(freqs, [0.5, 0.35, 0.15], atol=0.03), freqs
+    m = sp.multiplier(ids)
+    assert np.all(m > 0)
+    # query order / chunking independence
+    perm = np.random.default_rng(0).permutation(ids.size)
+    assert np.array_equal(m[perm], sp.multiplier(ids[perm]))
+    # lognormal jitter: class-1 medians sit near the class multiplier
+    med = np.median(m[cls == 1])
+    assert abs(med - 2.0) < 0.2, med
+
+
+def test_heterogeneous_plan_scales_latency():
+    sp = DeviceSpeedProfile(seed=2, class_mults=(1.0, 3.0),
+                            class_weights=(0.5, 0.5), sigma=0.0)
+    base = FaultPlan(seed=4)                 # inactive: no failure rates
+    het = HeterogeneousFaultPlan(seed=4, speed=sp)
+    ids = np.arange(32)
+    assert not base.active
+    assert het.active, "a speed profile must activate the fault path"
+    ratio = het.latency(ids, 0) / base.latency(ids, 0)
+    assert np.allclose(ratio, sp.multiplier(ids))
+    # without a profile the subclass degrades to the parent exactly
+    plain = HeterogeneousFaultPlan(seed=4, straggler_frac=0.2)
+    ref = FaultPlan(seed=4, straggler_frac=0.2)
+    assert plain.active
+    assert np.array_equal(plain.latency(ids, 3), ref.latency(ids, 3))
+
+
+def test_make_workload_regimes():
+    for regime in ("light", "saturating", "bursty", "steady", "diurnal"):
+        w = make_workload(regime, seed=1)
+        assert w.horizon > 0
+    assert make_workload("steady").arrivals.arrivals(8.0).size == 0
+    assert make_workload("diurnal").availability is not None
+    with pytest.raises(ValueError):
+        make_workload("nope")
+
+
+# ---------------------------------------------------------------------------
+# RejectedTask: the echo carries everything needed to resubmit
+# ---------------------------------------------------------------------------
+
+def test_rejected_task_echo_and_queue_depth():
+    pool = _pool()
+    provider = FLServiceProvider(
+        ClientPoolState.from_profiles(pool.to_profiles()))
+    sched = ServiceScheduler(provider, max_queue=2)
+    b = _budget(pool)
+    t0 = TaskRequest(budget=b, seed=0)
+    t1 = TaskRequest(budget=b, seed=1)
+    spill = TaskRequest(budget=b, seed=2)
+    assert isinstance(sched.submit(t0, ChunkStub()), int)
+    assert isinstance(sched.submit(t1, ChunkStub()), int)
+    r = sched.submit(spill, ChunkStub())
+    assert isinstance(r, RejectedTask)
+    assert r.task is spill, "rejection must echo the submitted request"
+    assert r.queued == 2, "queued must report the INTAKE backlog depth"
+    # the echo alone suffices to resubmit: drain one sweep, resubmit it
+    sched.sweep()
+    assert isinstance(sched.submit(r.task, ChunkStub()), int)
+
+
+def test_driver_requeues_every_rejected_task_to_terminal():
+    """Property: under heavy backpressure no task is silently dropped —
+    every arrival (including multiply-rejected ones) reaches a terminal
+    phase, exactly once."""
+    pool = _pool()
+    b = _budget(pool)
+
+    def template(i, t):
+        return TaskRequest(budget=b, n_star=8, subset_size=8,
+                           subset_delta=2, max_periods=2, max_rounds=4,
+                           round_chunk=2, seed=i)
+
+    trace = make_workload("saturating", seed=1, template=template,
+                          horizon=16.0)
+    provider = FLServiceProvider(
+        ClientPoolState.from_profiles(pool.to_profiles()))
+    sched = ServiceScheduler(provider, max_inflight=2, max_queue=1)
+    drv = OnlineDriver(sched, trace, ChunkStub, backoff=0.5)
+    log = drv.run()
+    s = log.summary()
+    assert s["rejects"] > 0, "the property needs backpressure to fire"
+    assert s["tasks_finished"] == s["tasks_submitted"]
+    n = s["tasks_submitted"]
+    assert sorted(drv.phases) == list(range(n))
+    assert all(p in ("DONE", "DEGRADED", "INFEASIBLE")
+               for p in drv.phases.values()), drv.phases
+    # rejected task indexes are a subset of terminal ones
+    rejected = {e.task for e in log.of_kind("reject")}
+    assert rejected <= set(drv.phases)
+    # monotone virtual clock
+    times = [e.time for e in log.events]
+    assert all(b >= a for a, b in zip(times, times[1:]))
+
+
+# ---------------------------------------------------------------------------
+# driver: no-trace bit-identity with the offline scheduler
+# ---------------------------------------------------------------------------
+
+def test_driver_notrace_identity():
+    pool = _pool()
+    b = _budget(pool)
+    tasks = [TaskRequest(budget=b, n_star=8, subset_size=8, subset_delta=2,
+                         max_periods=2, max_rounds=4, round_chunk=2, seed=i)
+             for i in range(3)]
+    digest = lambda evs: [(e.period, e.round_index, tuple(e.subset),
+                           tuple(np.asarray(e.weights).tolist()), e.metrics)
+                          for e in evs]
+
+    provider = FLServiceProvider(
+        ClientPoolState.from_profiles(pool.to_profiles()))
+    sched = ServiceScheduler(provider, max_inflight=4)
+    tids = [sched.submit(TaskRequest(**vars(t)), ChunkStub())
+            for t in tasks]
+    offline = {tid: [] for tid in tids}
+    while sched.active:
+        for tid, evs in sched.sweep().items():
+            offline[tid].extend(evs)
+
+    provider2 = FLServiceProvider(
+        ClientPoolState.from_profiles(pool.to_profiles()))
+    sched2 = ServiceScheduler(provider2, max_inflight=4)
+    trace = WorkloadTrace(ArrivalTrace(rate=0.0), template=None,
+                          horizon=0.0)
+    drv = OnlineDriver(sched2, trace, ChunkStub)
+    drv.run(initial_tasks=[TaskRequest(**vars(t)) for t in tasks])
+    for i, tid in enumerate(tids):
+        assert digest(offline[tid]) == digest(drv.results[i]), i
+    assert all(drv.phases[i] == "DONE" for i in range(len(tasks)))
+
+
+def test_driver_diurnal_and_fault_trace_completes():
+    pool = _pool()
+    b = _budget(pool)
+
+    def template(i, t):
+        return TaskRequest(budget=b, n_star=8, subset_size=8,
+                           subset_delta=2, max_periods=2, max_rounds=4,
+                           round_chunk=2, seed=i,
+                           overschedule_factor=1.5, quorum_frac=0.25,
+                           collect_deadline=4.0, max_retries=5)
+
+    trace = make_workload("diurnal", seed=3, template=template,
+                          horizon=32.0)
+    provider = FLServiceProvider(
+        ClientPoolState.from_profiles(pool.to_profiles()))
+    sched = ServiceScheduler(provider, max_inflight=4, max_queue=4)
+    drv = OnlineDriver(sched, trace, ChunkStub)
+    s = drv.run().summary()
+    assert s["tasks_finished"] == s["tasks_submitted"] > 0
+    assert s["round_latency_p99"] is not None   # fault path engaged
+
+
+# ---------------------------------------------------------------------------
+# observability columns + the deadline_aware policy
+# ---------------------------------------------------------------------------
+
+def _drain_faulty(pool, plan, **task_kw):
+    base = dict(budget=_budget(pool), n_star=8, subset_size=8,
+                subset_delta=2, max_periods=3, max_rounds=6,
+                round_chunk=2, seed=3)
+    base.update(task_kw)
+    provider = FLServiceProvider(
+        ClientPoolState.from_profiles(pool.to_profiles()))
+    state = submit(provider, TaskRequest(**base))
+    state, events = drain(provider, state, ChunkStub(fault_plan=plan))
+    return state, events
+
+
+def test_lifecycle_publishes_obs_columns():
+    pool = _pool()
+    plan = FaultPlan(seed=7, straggler_frac=0.3, straggler_slowdown=8.0)
+    state, events = _drain_faulty(pool, plan)
+    ps = state.policy_state
+    for key in ("obs/ids", "obs/timeouts", "obs/rounds", "obs/latency"):
+        assert key in ps, key
+    assert ps["obs/ids"].size == ps["obs/timeouts"].size \
+        == ps["obs/rounds"].size
+    assert ps["obs/latency"].size == len(
+        [e for e in events if "round_latency" in e.metrics])
+    # the window content is the tail of the per-event latencies
+    lats = np.array([e.metrics["round_latency"] for e in events])
+    assert np.array_equal(ps["obs/latency"], lats[-128:])
+    # no-fault runs publish the reputation columns but never latency
+    state0, _ = _drain_faulty(pool, None)
+    assert "obs/ids" in state0.policy_state
+    assert "obs/latency" not in state0.policy_state
+
+
+def test_obs_columns_survive_checkpoint_roundtrip():
+    pool = _pool()
+    plan = FaultPlan(seed=7, straggler_frac=0.3, straggler_slowdown=8.0)
+    state, _ = _drain_faulty(pool, plan)
+    arrays = state.to_arrays()
+    restored = TaskState.from_arrays(arrays)
+    for key in ("obs/ids", "obs/timeouts", "obs/rounds", "obs/latency"):
+        assert np.array_equal(restored.policy_state[key],
+                              state.policy_state[key]), key
+
+
+def test_deadline_aware_demotes_chronic_stragglers():
+    rng = np.random.default_rng(0)
+    ids = np.arange(12)
+    H = np.stack(random_histograms(12, 5, rng))
+    task = TaskRequest(budget=0.0, subset_size=4, subset_delta=1, x_star=3)
+    slow = np.zeros(12, dtype=np.int64)
+    slow[[2, 5, 9]] = 20                     # chronic timeouts
+    state = {"obs/ids": ids.copy(), "obs/timeouts": slow,
+             "obs/rounds": np.full(12, 10, dtype=np.int64)}
+    res = P.scheduling_policy("deadline_aware").schedule(
+        ids, H, task, rng, state)
+    assert len(res.subsets) == 3
+    assert sorted(res.subsets[-1]) == [2, 5, 9] + [res.subsets[-1][-1]] \
+        or set([2, 5, 9]) <= set(res.subsets[-1]), res.subsets
+    # each client exactly once (partition)
+    assert sorted(c for s in res.subsets for c in s) == list(range(12))
+    assert all(v == 1 for v in res.counts.values())
+
+
+def test_deadline_aware_cold_start_orders_by_id():
+    rng = np.random.default_rng(0)
+    ids = np.arange(9)
+    H = np.stack(random_histograms(9, 4, rng))
+    task = TaskRequest(budget=0.0, subset_size=3, subset_delta=1, x_star=2)
+    res = P.scheduling_policy("deadline_aware").schedule(
+        ids, H, task, rng, {})
+    assert res.subsets == [[0, 1, 2], [3, 4, 5], [6, 7, 8]]
+
+
+def test_deadline_aware_tightens_and_relaxes_overschedule():
+    rng = np.random.default_rng(0)
+    ids = np.arange(8)
+    H = np.stack(random_histograms(8, 4, rng))
+    pol = P.scheduling_policy("deadline_aware")
+    task = TaskRequest(budget=0.0, subset_size=4, collect_deadline=2.0,
+                       overschedule_factor=1.5)
+    state = {"obs/latency": np.full(16, 1.9)}   # p99 >= 0.8 * deadline
+    pol.schedule(ids, H, task, rng, state)
+    assert task.overschedule_factor == pytest.approx(1.5 * 1.25)
+    assert float(state["deadline_aware/base_os"][0]) == 1.5
+    # repeated pressure saturates at the cap
+    for _ in range(8):
+        pol.schedule(ids, H, task, rng, state)
+    assert task.overschedule_factor == pytest.approx(3.0)
+    # calm latencies decay the factor back toward the submitted base
+    state["obs/latency"] = np.full(16, 0.4)     # p99 < 0.5 * deadline
+    for _ in range(8):
+        pol.schedule(ids, H, task, rng, state)
+    assert task.overschedule_factor == pytest.approx(1.5)
+    # no deadline -> the adaptation is inert
+    task2 = TaskRequest(budget=0.0, subset_size=4, overschedule_factor=1.0)
+    pol.schedule(ids, H, task2, rng,
+                 {"obs/latency": np.full(16, 100.0)})
+    assert task2.overschedule_factor == 1.0
+
+
+def test_deadline_aware_end_to_end_beats_default_p99():
+    """The acceptance direction at test scale: mitigated deadline_aware
+    completes tasks with a better p99 round latency than the default
+    policy under the same straggler-heavy plan."""
+    pool = _pool()
+    plan = HeterogeneousFaultPlan(
+        seed=7, straggler_frac=0.25, straggler_slowdown=8.0,
+        speed=DeviceSpeedProfile(seed=8))
+    _, base_events = _drain_faulty(pool, plan)
+    _, mit_events = _drain_faulty(
+        pool, plan, scheduling_policy="deadline_aware",
+        overschedule_factor=1.5, quorum_frac=0.5, collect_deadline=3.0,
+        max_retries=5, retry_backoff=0.5)
+    p99 = lambda evs: float(np.percentile(
+        [e.metrics["round_latency"] for e in evs], 99))
+    assert p99(mit_events) < p99(base_events)
+
+
+# ---------------------------------------------------------------------------
+# telemetry
+# ---------------------------------------------------------------------------
+
+def test_telemetry_summary_and_format():
+    from repro.core.telemetry import TelemetryLog
+    log = TelemetryLog()
+    log.record("submit", 0.0, 0, arrival=0.0)
+    log.record("reject", 0.0, 0, queued=2, reason="full", attempt=0,
+               retry_at=1.0)
+    log.record("accept", 1.0, 0, tid=0, attempt=1)
+
+    class _Ev:
+        period, round_index, subset = 0, 0, [1, 2]
+        metrics = {"round_latency": 2.5}
+    log.record_round(3.5, 0, _Ev())
+    log.record("done", 3.5, 0, tid=0, phase="DONE", periods=1)
+    s = log.summary()
+    assert s["tasks_submitted"] == s["tasks_finished"] == 1
+    assert s["rejects"] == 1 and s["rounds"] == 1
+    assert s["queue_wait_p50"] == 1.0
+    assert s["completion_p50"] == 3.5
+    assert s["round_latency_p99"] == 2.5
+    assert s["degraded_rate"] == 0.0
+    assert s["jain_fairness"] == 1.0      # both clients participated once
+    assert "p99" in log.format_summary() or "p50" in log.format_summary()
+    # empty log: percentiles are None, nothing crashes
+    empty = TelemetryLog().summary()
+    assert empty["round_latency_p50"] is None
+    assert empty["jain_fairness"] == 1.0
