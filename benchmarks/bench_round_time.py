@@ -191,6 +191,16 @@ def run(report):
                 - record["paths"]["device_chunkN"]["last_loss"])
     report("final_loss_abs_drift", round(drift, 4),
            "legacy vs device, same seeds")
+    # merge-write: other benches own sibling keys in the same artifact
+    # (e.g. bench_compression's "compression" section) — preserve them
+    merged = {}
+    if os.path.exists(_JSON_PATH):
+        try:
+            with open(_JSON_PATH) as f:
+                merged = json.load(f)
+        except (OSError, ValueError):
+            merged = {}
+    merged.update(record)
     with open(_JSON_PATH, "w") as f:
-        json.dump(record, f, indent=2)
+        json.dump(merged, f, indent=2)
     report("json_written", 1.0, _JSON_PATH)

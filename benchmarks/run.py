@@ -19,6 +19,7 @@ BENCHES = [
     "bench_service_multitask",  # ISSUE-3 multi-tenant service lifecycle
     "bench_faults",           # ISSUE-7 fault injection + mitigation
     "bench_workload",         # ISSUE-8 online workload harness (SLA)
+    "bench_compression",      # ISSUE-9 compressed update plane (bytes/acc)
     "bench_roofline",         # §Roofline (from dry-run artifacts)
 ]
 

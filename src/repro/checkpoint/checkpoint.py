@@ -109,6 +109,20 @@ def restore_dict(path: str) -> dict:
             for k, rec in zip(payload["keys"], payload["leaves"])}
 
 
+# key sets already warned about this process: a long-running service
+# restoring the same state layout every period would otherwise emit the
+# identical narrowing warning once per restore call (it used to fire
+# per call; with per-leaf formatting that read as once per leaf).
+# Distinct layouts (different narrowed-key sets) still warn once each.
+_NARROWED_WARNED: set[frozenset] = set()
+
+
+def reset_narrowing_warnings() -> None:
+    """Forget which narrowed-key sets were already warned about (the
+    once-per-run dedup in :func:`restore`). Test hook."""
+    _NARROWED_WARNED.clear()
+
+
 def restore(path: str, like):
     """Restore into the structure of ``like`` (keys must match).
 
@@ -119,7 +133,8 @@ def restore(path: str, like):
     — when it happens a ``UserWarning`` names the narrowed keys and
     points at :func:`restore_dict`, the structure-free entry point that
     preserves dtypes exactly, so the two entry points cannot disagree
-    silently.
+    silently. The warning fires once per run per narrowed-key set
+    (:func:`reset_narrowing_warnings` clears the dedup).
     """
     payload = _read_payload(path)
     keys, like_leaves, treedef = _paths(like)
@@ -131,7 +146,8 @@ def restore(path: str, like):
     narrowed = [k for k, rec, leaf in
                 ((k, stored[k], leaf) for k, leaf in zip(keys, leaves))
                 if str(leaf.dtype) != rec["dtype"]]
-    if narrowed:
+    if narrowed and frozenset(narrowed) not in _NARROWED_WARNED:
+        _NARROWED_WARNED.add(frozenset(narrowed))
         warnings.warn(
             f"checkpoint.restore narrowed the stored dtype of "
             f"{len(narrowed)} leaves (e.g. "
@@ -143,6 +159,34 @@ def restore(path: str, like):
         if tuple(new.shape) != tuple(np.shape(old)):
             raise ValueError(f"shape mismatch at {k}: "
                              f"{new.shape} vs {np.shape(old)}")
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+def tree_to_arrays(tree, prefix: str = "") -> dict:
+    """Flatten a pytree to ``{"/"-joined path: numpy array}``.
+
+    The flat form trainers use to export server state (params +
+    optimizer moments) into ``TaskState.trainer_state`` for format-4
+    lifecycle checkpoints; invert with :func:`tree_from_arrays`.
+    """
+    keys, leaves, _ = _paths(tree)
+    pre = prefix + "/" if prefix else ""
+    return {pre + k: np.asarray(leaf) for k, leaf in zip(keys, leaves)}
+
+
+def tree_from_arrays(like, arrays: dict, prefix: str = ""):
+    """Rebuild a pytree structured like ``like`` from a
+    :func:`tree_to_arrays` mapping (missing keys raise KeyError).
+    Leaves come back as jnp arrays cast to the ``like`` leaf dtypes."""
+    keys, like_leaves, treedef = _paths(like)
+    pre = prefix + "/" if prefix else ""
+    leaves = []
+    for k, old in zip(keys, like_leaves):
+        arr = arrays[pre + k]
+        if tuple(arr.shape) != tuple(np.shape(old)):
+            raise ValueError(f"shape mismatch at {k}: "
+                             f"{arr.shape} vs {np.shape(old)}")
+        leaves.append(jnp.asarray(arr).astype(np.asarray(old).dtype))
     return jax.tree_util.tree_unflatten(treedef, leaves)
 
 

@@ -89,10 +89,11 @@ from .reputation import ReputationTracker
 # "obs/latency" window (read by the deadline_aware scheduling policy)
 _OBS_LATENCY_WINDOW = 128
 
-_STATE_FORMAT = 3          # to_arrays layout version (3: + fault/
-_STATE_FORMATS = (1, 2, 3)  # mitigation TaskRequest fields, retry/
-# backoff cursors, DEGRADED phase, task id; 2 added policy names and
-# policy_state arrays; older formats still restore, with defaults)
+_STATE_FORMAT = 4             # to_arrays layout version (4: +
+_STATE_FORMATS = (1, 2, 3, 4)  # TaskRequest.compression and
+# trainer_state arrays; 3 added fault/mitigation TaskRequest fields,
+# retry/backoff cursors, DEGRADED phase, task id; 2 added policy names
+# and policy_state arrays; older formats still restore, with defaults)
 
 
 # ---------------------------------------------------------------------------
@@ -147,6 +148,10 @@ class TaskRequest:
     # degrades to the terminal DEGRADED phase
     retry_backoff: float = 1.0            # initial backoff penalty (in
     # latency units) charged per retry, doubling each consecutive miss
+    compression: str | None = None        # client-update codec spec
+    # (repro.fl.compression grammar: "int8" | "topk:F" | "topk:F+int8",
+    # optional "@chunk=N"); None / "none" = uncompressed. Forwarded to
+    # compression-aware trainers; recorded in format-4 checkpoints
 
 
 @dataclasses.dataclass
@@ -366,6 +371,12 @@ class TaskState:
     # backoff penalty, charged to the next committed round's latency
     task_id: int | None = None                 # scheduler-assigned tenant
     # id (ServiceScheduler.submit/adopt); used in error messages
+    trainer_state: dict = dataclasses.field(default_factory=dict)
+    # flat {path: numpy array} export of the trainer's server state
+    # (params + optimizer moments — checkpoint.tree_to_arrays form),
+    # attached by attach_trainer_state / save_state(trainer=...) and
+    # serialized with the task (format 4) so a restored run resumes the
+    # model exactly; empty when the trainer has no export_state()
 
     def __post_init__(self):
         if self.rng is None:
@@ -436,6 +447,10 @@ class TaskState:
         # registered policy can have an empty name
         a["task/selection_policy"] = _encode_str(t.selection_policy or "")
         a["task/scheduling_policy"] = _encode_str(t.scheduling_policy or "")
+        # likewise: None (no codec) encodes as the empty string
+        a["task/compression"] = _encode_str(t.compression or "")
+        for k, v in self.trainer_state.items():
+            a[f"trn/{k}"] = np.asarray(v)
         a["task/thresholds"] = (np.zeros(0) if t.thresholds is None
                                 else np.asarray(t.thresholds, np.float64))
         a["task/has_thresholds"] = np.array(
@@ -492,8 +507,13 @@ class TaskState:
             task.collect_deadline = float(tf[5])
             task.retry_backoff = float(tf[6])
             task.max_retries = int(ti[11])
+        if fmt >= 4:
+            task.compression = _decode_str(a["task/compression"]) or None
         state = cls(task=task, phase=TaskPhase(int(meta[0])),
                     rng=_decode_rng(a["rng"]))
+        if fmt >= 4:
+            state.trainer_state = {k[len("trn/"):]: v for k, v in a.items()
+                                   if k.startswith("trn/")}
         if fmt >= 3:
             retry = a["retry"].astype(np.float64)
             state.retry_count = int(retry[0])
@@ -597,8 +617,36 @@ def _decode_schedule(a: Mapping[str, np.ndarray]) -> ScheduleResult:
                           np.asarray(a["capacities"], dtype=np.float64))
 
 
-def save_state(path: str, state: TaskState,
-               flush: bool = False) -> list[RoundEvent]:
+def attach_trainer_state(state: TaskState, trainer) -> TaskState:
+    """Snapshot the trainer's server state into
+    ``state.trainer_state`` (format-4 checkpoints carry it).
+
+    Uses the trainer's ``export_state()`` — a flat
+    ``{path: numpy array}`` mapping (``checkpoint.tree_to_arrays``
+    form) covering params and any server-optimizer moments. Trainers
+    without the hook leave ``trainer_state`` untouched (control-plane
+    state still checkpoints; the caller owns the model). Returns
+    ``state`` for chaining.
+    """
+    export = getattr(trainer, "export_state", None)
+    if export is not None:
+        state.trainer_state = dict(export())
+    return state
+
+
+def restore_trainer_state(state: TaskState, trainer) -> bool:
+    """Load ``state.trainer_state`` back into a fresh trainer via its
+    ``import_state(arrays)`` hook. Returns ``True`` if arrays were
+    applied, ``False`` when the checkpoint carried none (pre-format-4
+    payloads, or a trainer that never exported)."""
+    if not state.trainer_state:
+        return False
+    trainer.import_state(state.trainer_state)
+    return True
+
+
+def save_state(path: str, state: TaskState, flush: bool = False,
+               trainer=None) -> list[RoundEvent]:
     """Serialize ``state`` through the repo checkpoint path (msgpack,
     zstd when available).
 
@@ -610,11 +658,18 @@ def save_state(path: str, state: TaskState,
     appended to ``state.rounds``, so a caller that streams events should
     take them from the return value exactly once. Returns ``[]`` when
     nothing was in flight.
+
+    ``trainer``: optionally attach the trainer's exported server state
+    (:func:`attach_trainer_state`) before serializing, so the single
+    checkpoint file carries control plane *and* model; restore with
+    :func:`load_state` + :func:`restore_trainer_state`.
     """
     from repro import checkpoint
     events: list[RoundEvent] = []
     if state.pending is not None and flush:
         _, events = collect(state)
+    if trainer is not None:
+        attach_trainer_state(state, trainer)
     checkpoint.save(path, state.to_arrays())
     return events
 

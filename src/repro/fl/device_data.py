@@ -98,6 +98,43 @@ def gather_batches(data: DeviceDataset, rows, pos_u):
     return {"images": imgs, "labels": labs}
 
 
+class DeviceLMDataset(NamedTuple):
+    """Token-sequence twin of :class:`DeviceDataset` for the federated
+    LM plane (fl.transformer_task): ``seqs`` holds packed next-token
+    sequences of length S+1 (input = ``[:, :-1]``, target = ``[:, 1:]``)
+    as produced by ``data.synthetic.make_lm_data``. Pool/size semantics
+    are identical, so :func:`sample_positions` /
+    :func:`positions_to_indices` are shared with the image plane and
+    ``fl.round`` only sees the ``.sizes`` attribute either way."""
+    seqs: jax.Array          # (N, S+1) int32 packed token sequences
+    labels: jax.Array        # (N,) latent class (partitioning only)
+    pools: jax.Array         # (n_clients, cap) int32 sample-index pools
+    sizes: jax.Array         # (n_clients,) int32 true pool sizes
+
+    @classmethod
+    def stage(cls, data, parts, cap: int | None = None) -> "DeviceLMDataset":
+        """Stage ``data.synthetic.LMData`` (``.tokens``/``.labels``)."""
+        pools, sizes = dense_index_pools(parts, cap=cap)
+        return cls(jnp.asarray(data.tokens), jnp.asarray(data.labels),
+                   jnp.asarray(pools), jnp.asarray(sizes))
+
+    @property
+    def n_clients(self) -> int:
+        return self.pools.shape[0]
+
+
+def gather_lm_batches(data: DeviceLMDataset, rows, pos_u):
+    """LM batch assembly hook for ``make_fl_rounds_scan(gather_fn=...)``:
+    ``{"tokens": (K,E,b,S), "targets": (K,E,b,S)}`` int32 (the
+    models.transformer.loss_fn batch contract, next-token shifted)."""
+    idx = positions_to_indices(data.pools, data.sizes, rows, pos_u)
+    flat = idx.reshape(-1)
+    K, E, b = idx.shape
+    seqs = jnp.take(data.seqs, flat, axis=0).reshape(
+        K, E, b, data.seqs.shape[1])
+    return {"tokens": seqs[..., :-1], "targets": seqs[..., 1:]}
+
+
 def dropout_mask(mask_u, active, dropout_rate: float, arrival=None):
     """Per-round client dropout mask (K,) f32.
 

@@ -183,7 +183,9 @@ def make_fl_rounds_scan(loss_fn: Callable, local_lr: float = 0.05,
                         local_steps: int = 1, batch_size: int = 16,
                         server_lr: float = 1.0, dropout_rate: float = 0.0,
                         fused_quality: bool = True,
-                        use_agg_kernel: bool = False):
+                        use_agg_kernel: bool = False,
+                        compression=None, server_opt=None,
+                        gather_fn: Callable | None = None):
     """Chunked multi-round driver: S rounds in ONE device dispatch.
 
     Returns ``chunk_fn(params, data, schedule, base_key)`` (jit'd, params
@@ -209,18 +211,47 @@ def make_fl_rounds_scan(loss_fn: Callable, local_lr: float = 0.05,
     chunk: ``(params', {"masks": (S,K), "q_values": (S,K),
     "client_losses": (S,K), "mean_loss": (S,)})``. The host only sees
     params/metrics at chunk boundaries (core.service round_chunk knob).
+
+    Compressed update plane (docs/compression.md):
+
+    - ``compression`` — a spec string / :class:`CompressionSpec`
+      (``TaskRequest.compression``). When active, each round's stacked
+      deltas are encoded per the spec, the server aggregates *from the
+      compressed payloads* (fused int8 kernel, or densified top-k) and
+      quality cosines are computed on the decoded updates; the per-round
+      metrics gain a ``"bytes"`` column (arrived clients × per-client
+      wire bytes). ``None``/"none" leaves the trace **bit-identical** to
+      the uncompressed plane (asserted in tests/test_compression.py).
+    - ``server_opt`` — a ``repro.optim`` Optimizer applied server-side
+      to the pseudo-gradient Δ_t (FedAdam/FedYogi). The carry becomes
+      ``(params, opt_state)``: ``chunk_fn((params, opt_state), ...)``
+      returns ``((params', opt_state'), infos)``. ``server_lr`` is
+      ignored in this mode (fold it into the optimizer's lr). ``None``
+      keeps the plain SGD server step and the 1-ary carry.
+    - ``gather_fn(data, rows, pos_u) -> batch tree`` — batch assembly
+      hook; defaults to the image gather
+      (:func:`repro.fl.device_data.gather_batches`). The LM plane passes
+      :func:`repro.fl.device_data.gather_lm_batches`.
     """
+    from repro.fl.compression import (CompressionSpec, aggregate_compressed,
+                                      bytes_per_client)
     client_update = _make_client_update(loss_fn, local_lr)
+    spec = CompressionSpec.parse(compression)
+    gather = device_data.gather_batches if gather_fn is None else gather_fn
 
     @functools.partial(jax.jit, donate_argnums=(0,))
-    def chunk_fn(params, data: device_data.DeviceDataset, schedule, base_key):
+    def chunk_fn(carry, data, schedule, base_key):
         K = schedule["rows"].shape[1]
         # fault-mode schedules carry a per-round arrival mask (lifecycle
         # first-k collect, docs/robustness.md); its presence is a trace-
         # time pytree property, so the no-fault trace is unchanged
         has_arrival = "arrival" in schedule
 
-        def one_round(params, per_round):
+        def one_round(carry, per_round):
+            if server_opt is None:
+                params, opt_state = carry, None
+            else:
+                params, opt_state = carry
             if has_arrival:
                 rows, weights, active, rnd, arrival = per_round
             else:
@@ -234,24 +265,43 @@ def make_fl_rounds_scan(loss_fn: Callable, local_lr: float = 0.05,
                 base_key, rnd, K, local_steps, batch_size)
             mask = device_data.dropout_mask(mask_u, active, dropout_rate,
                                             arrival=arrival)
-            batch = device_data.gather_batches(data, rows, pos_u)
+            batch = gather(data, rows, pos_u)
             deltas, losses = jax.vmap(client_update, in_axes=(None, 0))(
                 params, batch)
             w = weights * mask
             w = w / jnp.maximum(w.sum(), 1e-9)
-            agg, q = _aggregate_and_quality(deltas, w, use_agg_kernel,
-                                            fused_quality)
-            params = jax.tree_util.tree_map(
-                lambda p, d: (p - server_lr * d).astype(p.dtype), params, agg)
-            return params, {"masks": mask, "q_values": q * mask,
-                            "client_losses": losses,
-                            "mean_loss": jnp.sum(losses * w)}
+            if spec.active:
+                flat, unflatten = flatten_stacked(deltas)
+                agg_flat, dots, sq, asq = aggregate_compressed(flat, w, spec)
+                q = dots / jnp.maximum(jnp.sqrt(sq) * jnp.sqrt(asq), 1e-12)
+                agg = unflatten(agg_flat)
+                per_client = bytes_per_client(spec, flat.shape[1],
+                                              flat.dtype.itemsize)
+            else:
+                agg, q = _aggregate_and_quality(deltas, w, use_agg_kernel,
+                                                fused_quality)
+            if server_opt is None:
+                params = jax.tree_util.tree_map(
+                    lambda p, d: (p - server_lr * d).astype(p.dtype),
+                    params, agg)
+            else:
+                # Δ_t is the server pseudo-gradient (FedOpt): the
+                # adaptive optimizer's update replaces −server_lr·Δ_t
+                upd, opt_state = server_opt.update(agg, opt_state, params)
+                params = apply_updates(params, upd)
+            info = {"masks": mask, "q_values": q * mask,
+                    "client_losses": losses,
+                    "mean_loss": jnp.sum(losses * w)}
+            if spec.active:
+                info["bytes"] = mask.sum() * jnp.float32(per_client)
+            carry = params if server_opt is None else (params, opt_state)
+            return carry, info
 
         xs = (schedule["rows"], schedule["weights"], schedule["active"],
               schedule["round_ids"])
         if has_arrival:
             xs = xs + (schedule["arrival"],)
-        return jax.lax.scan(one_round, params, xs)
+        return jax.lax.scan(one_round, carry, xs)
 
     return chunk_fn
 

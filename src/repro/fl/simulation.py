@@ -245,18 +245,31 @@ class DeviceFLSim(_EvalCache):
                  parts: list[np.ndarray], test: ClassificationData,
                  sim: SimConfig = SimConfig(), impl: str = "auto",
                  pad_subset_to: int | None = None,
-                 fused_quality: bool = True, fault_plan=None):
+                 fused_quality: bool = True, fault_plan=None,
+                 compression: str | None = None,
+                 server_opt: str | None = None):
+        from repro import optim
         self.cfg = model_cfg
         self.pad_subset_to = pad_subset_to
         self.fault_plan = fault_plan
         self.base_key = jax.random.PRNGKey(sim.seed)
         self.params = cnn.init_params(model_cfg, jax.random.PRNGKey(sim.seed))
         self.data = device_data.DeviceDataset.stage(data, parts)
+        # compressed update plane (docs/compression.md): `compression`
+        # is the TaskRequest spec string; `server_opt` names a
+        # repro.optim server optimizer (fedadam/fedyogi) applied to the
+        # pseudo-gradient with lr = sim.server_lr. Both default off and
+        # the default trace is bit-identical to the uncompressed plane.
+        self._server_opt = None if server_opt is None \
+            else optim.make(server_opt, sim.server_lr)
+        self.opt_state = None if self._server_opt is None \
+            else self._server_opt.init(self.params)
         self.chunk_fn = make_fl_rounds_scan(
             lambda p, b: cnn.loss_fn(model_cfg, p, b, impl=impl),
             local_lr=sim.local_lr, local_steps=sim.local_steps,
             batch_size=sim.batch_size, server_lr=sim.server_lr,
-            dropout_rate=sim.dropout_rate, fused_quality=fused_quality)
+            dropout_rate=sim.dropout_rate, fused_quality=fused_quality,
+            compression=compression, server_opt=self._server_opt)
         self._init_eval(model_cfg, test, sim, impl=impl)
 
     def _k_pad(self, k: int) -> int:
@@ -336,12 +349,15 @@ class DeviceFLSim(_EvalCache):
             masks = np.asarray(info["masks"])
             qs = np.asarray(info["q_values"])
             losses = np.asarray(info["mean_loss"])
+            wire = np.asarray(info["bytes"]) if "bytes" in info else None
             for t, subset in enumerate(subsets):
                 k = len(subset)
                 # only a segment's final round can be an eval round (the
                 # split above guarantees it), so eval_acc is unambiguous
                 metrics = self._record(start_round + t, losses[t],
                                        accuracy=eval_acc)
+                if wire is not None:
+                    metrics["bytes"] = float(wire[t])
                 out.append((masks[t, :k] > 0, qs[t, :k], metrics))
         return out
 
@@ -386,12 +402,38 @@ class DeviceFLSim(_EvalCache):
             # extra pytree key => separate jit trace; the no-fault trace
             # (and its results) are untouched
             schedule["arrival"] = jnp.asarray(arr)
-        self.params, info = self.chunk_fn(self.params, self.data, schedule,
-                                          self.base_key)
+        if self._server_opt is None:
+            self.params, info = self.chunk_fn(self.params, self.data,
+                                              schedule, self.base_key)
+        else:
+            (self.params, self.opt_state), info = self.chunk_fn(
+                (self.params, self.opt_state), self.data, schedule,
+                self.base_key)
         eval_acc = None
         if (start_round + S - 1) % self.sim.eval_every == 0:
             eval_acc = self._enqueue_eval(self.params)
         return start_round, list(subsets), info, eval_acc
+
+    # -- server-state checkpointing (lifecycle format 4) ---------------------
+    def export_state(self) -> dict:
+        """Flat ``{path: numpy}`` snapshot of the server state (model
+        params + optimizer moments when a server optimizer is active);
+        rides ``TaskState.trainer_state`` in format-4 checkpoints
+        (``lifecycle.save_state(..., trainer=...)``)."""
+        from repro import checkpoint
+        out = checkpoint.tree_to_arrays(self.params, "params")
+        if self.opt_state is not None:
+            out.update(checkpoint.tree_to_arrays(self.opt_state, "opt"))
+        return out
+
+    def import_state(self, arrays: dict) -> None:
+        """Inverse of :meth:`export_state` (lifecycle resume path)."""
+        from repro import checkpoint
+        self.params = checkpoint.tree_from_arrays(self.params, arrays,
+                                                  "params")
+        if self.opt_state is not None:
+            self.opt_state = checkpoint.tree_from_arrays(self.opt_state,
+                                                         arrays, "opt")
 
     # -- per-round TrainerFn protocol (round_chunk == 1) ---------------------
     def __call__(self, rnd: int, subset, weights) -> tuple:
@@ -416,7 +458,9 @@ def run_fl_experiment(kind: str, noniid: str, n_clients: int = 100,
                       scheduling_policy: str | None = None,
                       fault_plan=None, overschedule_factor: float = 1.0,
                       quorum_frac: float = 0.0,
-                      collect_deadline: float = 0.0) -> dict:
+                      collect_deadline: float = 0.0,
+                      compression: str | None = None,
+                      server_opt: str | None = None) -> dict:
     """One learning-curve run (paper Figs. 5/6): returns history + config.
 
     ``data_plane="host"`` uses the legacy per-round host-loop trainer;
@@ -454,8 +498,12 @@ def run_fl_experiment(kind: str, noniid: str, n_clients: int = 100,
     if data_plane == "device":
         simul = DeviceFLSim(model_cfg, data, parts, test, sim,
                             pad_subset_to=subset_size + subset_delta,
-                            fault_plan=fault_plan)
+                            fault_plan=fault_plan, compression=compression,
+                            server_opt=server_opt)
     elif data_plane == "host":
+        if compression or server_opt:
+            raise ValueError("compression/server_opt need the device "
+                             "data plane (data_plane='device')")
         simul = FLClassificationSim(model_cfg, data, parts, test, sim,
                                     fault_plan=fault_plan)
         round_chunk = 1
@@ -472,7 +520,8 @@ def run_fl_experiment(kind: str, noniid: str, n_clients: int = 100,
                        scheduling_policy=scheduling_policy,
                        overschedule_factor=overschedule_factor,
                        quorum_frac=quorum_frac,
-                       collect_deadline=collect_deadline)
+                       collect_deadline=collect_deadline,
+                       compression=compression)
     state = lifecycle.submit(provider, task)
     state, _ = lifecycle.drain(provider, state, simul.trainer,
                                stop_fn=lambda m: m["round"] + 1 >= rounds)

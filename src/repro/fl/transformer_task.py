@@ -1,0 +1,217 @@
+"""Federated transformer fine-tuning with LoRA adapter deltas.
+
+The FL path trained only the MNIST CNN; this module opens the LM
+workload the ROADMAP calls for: clients fine-tune a small transformer
+from the config zoo (``configs.smollm_360m`` reduced) on class-
+conditional bigram streams (``data.synthetic.make_lm_data``), but the
+*server state that crosses the wire is only a LoRA adapter tree* — the
+frozen backbone stays on every device and client deltas are adapter
+deltas, which is what makes the compressed update plane
+(fl.compression, ``TaskRequest.compression``) representative: payloads
+are small to begin with and top-k/int8 codecs act on exactly what a
+production cross-device system would ship.
+
+LoRA here is the functional formulation: an adapter for target leaf W
+(stacked over layers, shape ``(L, din, ...)``) is a pair
+``a (L, din, r)``, ``b (L, r, dout)`` and the effective weight is
+``W + (alpha/r)·a@b`` reshaped back — ``b`` starts at zero so the
+merged model equals the backbone at round 0. Targets are leaves whose
+*first* trailing dim is the input dim (wq/wv/w_up by default), so one
+einsum covers attention and MLP uniformly.
+
+:class:`TransformerFLSim` subclasses the device data-plane trainer
+(fl.simulation.DeviceFLSim): same segmentation DP, async
+dispatch/collect split, arrival masks and export/import checkpoint
+seam — only the model plumbing (adapter params, LM gather, merged
+next-token eval) differs. :func:`make_transformer_fl` builds the whole
+bundle (trainer + pool + partitions) for tests and benchmarks.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import smollm_360m
+from repro.data.synthetic import LMData, make_lm_data
+from repro.fl import device_data
+from repro.fl.partition import partition_labels
+from repro.fl.round import make_fl_rounds_scan
+from repro.fl.simulation import DeviceFLSim, SimConfig, pool_from_partition
+from repro.models import transformer
+from repro.models.common import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class LoraConfig:
+    """Adapter shape: rank-r factors on ``targets`` (paths into one
+    stacked layer dict, ``<block>/<leaf>``). Every default target has
+    its input dim first (wq/wv: (d, heads, hd); w_up: (d, d_ff)), the
+    layout :func:`merge_adapters` assumes."""
+    rank: int = 4
+    alpha: float = 8.0
+    targets: tuple = ("attn/wq", "attn/wv", "mlp/w_up")
+
+
+def _get_leaf(layers, path: str):
+    node = layers
+    for part in path.split("/"):
+        node = node[part]
+    return node
+
+
+def init_adapters(layers, lora: LoraConfig, key):
+    """Adapter tree for stacked layer params: ``{path: {"a", "b"}}``.
+
+    ``a`` ~ N(0, 0.02), ``b`` = 0 (standard LoRA init: the merged model
+    starts exactly at the backbone). f32 regardless of backbone dtype —
+    adapters are the optimizer-visible state.
+    """
+    out = {}
+    for i, path in enumerate(lora.targets):
+        leaf = _get_leaf(layers, path)
+        L, din = leaf.shape[0], leaf.shape[1]
+        dout = int(np.prod(leaf.shape[2:]))
+        ka = jax.random.fold_in(key, i)
+        out[path] = {
+            "a": 0.02 * jax.random.normal(ka, (L, din, lora.rank),
+                                          jnp.float32),
+            "b": jnp.zeros((L, lora.rank, dout), jnp.float32),
+        }
+    return out
+
+
+def merge_adapters(params, adapters, lora: LoraConfig):
+    """Backbone params with each target leaf replaced by
+    ``W + (alpha/rank)·a@b`` (reshaped, cast back to W.dtype). Pure
+    function of (params, adapters), so it vmaps/grads through — client
+    training differentiates the merged forward wrt the adapters only.
+    """
+    scale = lora.alpha / lora.rank
+    layers = {k: (dict(v) if isinstance(v, dict) else v)
+              for k, v in params["layers"].items()}
+    for path, ab in adapters.items():
+        block, leaf_name = path.split("/")
+        base = layers[block][leaf_name]
+        delta = jnp.einsum("lir,lro->lio", ab["a"], ab["b"]) * scale
+        layers[block][leaf_name] = (base + delta.reshape(base.shape)
+                                    .astype(base.dtype))
+    return {**params, "layers": layers}
+
+
+def reduced_lm_config(vocab_size: int = 64,
+                      num_layers: int = 2) -> ModelConfig:
+    """The federated LM backbone: SmolLM-360M's architecture reduced to
+    CPU-smoke size (2 heads x 64 head dim, f32)."""
+    return smollm_360m.config().reduced(num_layers=num_layers,
+                                        d_model=128, vocab=vocab_size)
+
+
+class TransformerFLSim(DeviceFLSim):
+    """Device-resident federated LoRA fine-tuning trainer.
+
+    ``self.params`` is the *adapter* tree (the server state: what client
+    deltas perturb, what FedAdam/FedYogi steps, what format-4
+    checkpoints carry); the frozen backbone is closed over by the loss.
+    Everything else — chunk segmentation, async dispatch/collect,
+    fault-mode arrival masks, export/import — is inherited from
+    :class:`~repro.fl.simulation.DeviceFLSim`.
+    """
+
+    def __init__(self, model_cfg: ModelConfig, data: LMData, parts,
+                 test: LMData, sim: SimConfig = SimConfig(),
+                 lora: LoraConfig = LoraConfig(),
+                 pad_subset_to: int | None = None, fault_plan=None,
+                 compression: str | None = None,
+                 server_opt: str | None = None):
+        from repro import optim
+        self.cfg = model_cfg
+        self.lora = lora
+        self.pad_subset_to = pad_subset_to
+        self.fault_plan = fault_plan
+        self.base_key = jax.random.PRNGKey(sim.seed)
+        kb, ka = jax.random.split(jax.random.PRNGKey(sim.seed))
+        self.base_params = transformer.init_params(model_cfg, kb)
+        self.params = init_adapters(self.base_params["layers"], lora, ka)
+        self._server_opt = None if server_opt is None \
+            else optim.make(server_opt, sim.server_lr)
+        self.opt_state = None if self._server_opt is None \
+            else self._server_opt.init(self.params)
+        self.data = device_data.DeviceLMDataset.stage(data, parts)
+
+        base = self.base_params
+
+        def loss(adapters, batch):
+            merged = merge_adapters(base, adapters, lora)
+            return transformer.loss_fn(model_cfg, merged, batch)
+
+        self.chunk_fn = make_fl_rounds_scan(
+            loss, local_lr=sim.local_lr, local_steps=sim.local_steps,
+            batch_size=sim.batch_size, server_lr=sim.server_lr,
+            dropout_rate=sim.dropout_rate, compression=compression,
+            server_opt=self._server_opt,
+            gather_fn=device_data.gather_lm_batches)
+
+        # deterministic eval: next-token accuracy of the merged model
+        # over the full held-out set (no sampling rng — resume-exact)
+        self.sim = sim
+        self.history = []
+        self._test_seqs = jnp.asarray(test.tokens)
+
+        def eval_fn(adapters, seqs):
+            merged = merge_adapters(base, adapters, lora)
+            logits, _ = transformer.forward(model_cfg, merged, seqs[:, :-1])
+            return (logits.argmax(-1) == seqs[:, 1:]).mean()
+
+        self._eval_fn = jax.jit(eval_fn)
+
+    def _enqueue_eval(self, params, n: int = 1024):
+        """Next-token accuracy on the full cached test set
+        (unmaterialized device scalar; deterministic, no rng draw)."""
+        return self._eval_fn(params, self._test_seqs)
+
+    def evaluate(self, n: int = 1024) -> float:
+        return float(self._enqueue_eval(self.params))
+
+
+def make_transformer_fl(n_clients: int = 20, n_train: int = 400,
+                        n_test: int = 120, seq_len: int = 16,
+                        vocab_size: int = 64, noniid: str = "type2",
+                        num_layers: int = 2, seed: int = 0,
+                        sim: SimConfig | None = None,
+                        lora: LoraConfig = LoraConfig(),
+                        pad_subset_to: int | None = None,
+                        compression: str | None = None,
+                        server_opt: str | None = None,
+                        fault_plan=None) -> dict:
+    """Build the full federated LM bundle: reduced SmolLM backbone,
+    bigram LM data split train/test, a paper-style non-iid partition
+    with its client pool (latent bigram classes are the scheduler's
+    labels), and a ready :class:`TransformerFLSim`.
+
+    Returns ``{"trainer", "pool", "parts", "cfg", "data", "test"}`` —
+    enough to drive ``core.lifecycle`` directly (tests, benchmarks).
+    """
+    if sim is None:
+        sim = SimConfig(batch_size=4, local_steps=2, local_lr=5.0,
+                        server_lr=1.0, dropout_rate=0.0, eval_every=10_000,
+                        seed=seed)
+    cfg = reduced_lm_config(vocab_size, num_layers)
+    full = make_lm_data(n_train + n_test, seq_len, vocab_size, seed=seed)
+    data = LMData(full.tokens[:n_train], full.labels[:n_train],
+                  full.num_classes, vocab_size)
+    test = LMData(full.tokens[n_train:], full.labels[n_train:],
+                  full.num_classes, vocab_size)
+    parts = partition_labels(data.labels, n_clients, noniid,
+                             data.num_classes, seed=seed)
+    pool = pool_from_partition(data.labels, parts, data.num_classes,
+                               seed=seed)
+    trainer = TransformerFLSim(cfg, data, parts, test, sim, lora,
+                               pad_subset_to=pad_subset_to,
+                               fault_plan=fault_plan,
+                               compression=compression,
+                               server_opt=server_opt)
+    return {"trainer": trainer, "pool": pool, "parts": parts, "cfg": cfg,
+            "data": data, "test": test}

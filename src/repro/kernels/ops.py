@@ -10,6 +10,10 @@ import jax
 import jax.numpy as jnp
 
 from . import ref
+from .compression import dequantize_i8 as _dequantize_i8_pallas
+from .compression import fedavg_agg_quality_i8 as _agg_quality_i8_pallas
+from .compression import quantize_i8 as _quantize_i8_pallas
+from .compression import topk_sparsify as _topk_sparsify_pallas
 from .fedavg_agg import fedavg_agg as _fedavg_pallas
 from .fedavg_agg import fedavg_agg_quality as _fedavg_quality_pallas
 from .fedavg_agg import fedavg_agg_tree
@@ -101,6 +105,55 @@ def segmented_topk(x, k, *, interpret=None):
     return ref.segmented_topk_ref(x, int(k))
 
 
+def topk_sparsify(x, k, *, interpret=None):
+    """Magnitude top-k packing of flattened client deltas
+    (fl.compression codec "topk").
+
+    x: (K, P). Returns ``(values (K, k) f32, indices (K, k) int32)`` —
+    each row's k largest-|x| entries (signed values), descending by
+    magnitude, ties to the lowest index (== ``lax.top_k(|x|, k)``).
+    """
+    use_pallas = _on_tpu() if interpret is None else True
+    if use_pallas:
+        return _topk_sparsify_pallas(x, int(k), interpret=bool(interpret))
+    return ref.topk_sparsify_ref(x, int(k))
+
+
+def quantize_i8(x, *, chunk=256, interpret=None):
+    """Per-chunk symmetric int8 quantization (fl.compression codec
+    "int8"): x (K, P) -> ``(values (K, P) int8,
+    scales (K, ceil(P/chunk)) f32)`` with scale = amax/127 per chunk.
+    """
+    use_pallas = _on_tpu() if interpret is None else True
+    if use_pallas:
+        return _quantize_i8_pallas(x, chunk=int(chunk),
+                                   interpret=bool(interpret))
+    return ref.quantize_i8_ref(x, int(chunk))
+
+
+def dequantize_i8(values, scales, *, chunk=256, interpret=None):
+    """Inverse of :func:`quantize_i8`: rescale int8 chunks back to f32."""
+    use_pallas = _on_tpu() if interpret is None else True
+    if use_pallas:
+        return _dequantize_i8_pallas(values, scales, chunk=int(chunk),
+                                     interpret=bool(interpret))
+    return ref.dequantize_i8_ref(values, scales, int(chunk))
+
+
+def fedavg_agg_quality_i8(values, scales, weights, *, chunk=256,
+                          interpret=None):
+    """Compressed sibling of :func:`fedavg_agg_quality`: the weighted
+    aggregate Δ_t and per-client quality Gram terms computed directly
+    from int8 payloads (dequantized in-kernel). Returns
+    (agg (P,) f32, dots (K,), sq (K,), asq ())."""
+    use_pallas = _on_tpu() if interpret is None else True
+    if use_pallas:
+        return _agg_quality_i8_pallas(values, scales, weights,
+                                      chunk=int(chunk),
+                                      interpret=bool(interpret))
+    return ref.fedavg_agg_quality_i8_ref(values, scales, weights, int(chunk))
+
+
 def mlstm_scan(q, k, v, log_f, log_i=None, *, chunk=64, normalize=True,
                interpret=None):
     use_pallas = _on_tpu() if interpret is None else True
@@ -111,6 +164,7 @@ def mlstm_scan(q, k, v, log_f, log_i=None, *, chunk=64, normalize=True,
                               normalize=normalize)
 
 
-__all__ = ["flash_attention", "flash_attention_bshd", "rmsnorm", "swiglu",
-           "fedavg_agg", "fedavg_agg_quality", "fedavg_agg_tree",
-           "mkp_utility", "mlstm_scan", "segmented_topk"]
+__all__ = ["dequantize_i8", "flash_attention", "flash_attention_bshd",
+           "fedavg_agg", "fedavg_agg_quality", "fedavg_agg_quality_i8",
+           "fedavg_agg_tree", "mkp_utility", "mlstm_scan", "quantize_i8",
+           "rmsnorm", "segmented_topk", "swiglu", "topk_sparsify"]

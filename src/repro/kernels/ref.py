@@ -106,6 +106,55 @@ def segmented_topk_ref(x, k: int):
     return vals, idx.astype(jnp.int32)
 
 
+def topk_sparsify_ref(x, k: int):
+    """Magnitude top-k oracle: x (K, P) -> ``(values (K, k) f32,
+    indices (K, k) int32)``. Selection is ``lax.top_k(|x|, k)`` (stable
+    — ties to the lowest index); values are the *signed* originals at
+    the selected indices, ordered by descending magnitude."""
+    k = int(min(k, x.shape[-1]))
+    xf = x.astype(jnp.float32)
+    _, idx = jax.lax.top_k(jnp.abs(xf), k)
+    vals = jnp.take_along_axis(xf, idx, axis=1)
+    return vals, idx.astype(jnp.int32)
+
+
+def _chunked(x, chunk: int):
+    """(K, P) f32 -> (K, nc, chunk) with a zero-padded ragged tail."""
+    K, P = x.shape
+    nc = -(-P // chunk)
+    xp = jnp.pad(x, ((0, 0), (0, nc * chunk - P)))
+    return xp.reshape(K, nc, chunk), nc
+
+
+def quantize_i8_ref(x, chunk: int = 256):
+    """Per-chunk symmetric int8 oracle: x (K, P) ->
+    ``(values (K, P) int8, scales (K, ceil(P/chunk)) f32)`` with
+    scale = amax(|chunk|)/127 (0 for an all-zero chunk) and
+    values = round(x/scale) clipped to ±127."""
+    K, P = x.shape
+    xc, nc = _chunked(x.astype(jnp.float32), chunk)
+    scales = jnp.max(jnp.abs(xc), axis=2) / 127.0              # (K, nc)
+    safe = jnp.where(scales > 0.0, scales, 1.0)[:, :, None]
+    q = jnp.where(scales[:, :, None] > 0.0, jnp.round(xc / safe), 0.0)
+    vals = jnp.clip(q, -127.0, 127.0).astype(jnp.int8)
+    return vals.reshape(K, -1)[:, :P], scales
+
+
+def dequantize_i8_ref(values, scales, chunk: int = 256):
+    """Inverse oracle: (K, P) int8 + (K, nc) f32 -> (K, P) f32."""
+    K, P = values.shape
+    vc, nc = _chunked(values.astype(jnp.float32), chunk)
+    return (vc * scales[:, :, None]).reshape(K, -1)[:, :P]
+
+
+def fedavg_agg_quality_i8_ref(values, scales, weights, chunk: int = 256):
+    """Compressed fused aggregation oracle: dequantize, then the exact
+    ``fedavg_agg_quality_ref`` pass (f32 throughout)."""
+    u = dequantize_i8_ref(values, scales, chunk)
+    agg, dots, sq, asq = fedavg_agg_quality_ref(u, weights)
+    return agg.astype(jnp.float32), dots, sq, asq
+
+
 def mkp_utility_ref(values, weights, residual, selectable, eps: float = 1e-12):
     """Toyoda pseudo-utility oracle: values (n,), weights (n, m),
     residual (m,), selectable (n,) -> (n,) f32, −inf where infeasible."""

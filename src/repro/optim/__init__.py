@@ -1,3 +1,3 @@
-from .optimizers import (Optimizer, adam, adamw, apply_updates, global_norm,
-                         make, sgd)
+from .optimizers import (Optimizer, adam, adamw, apply_updates, fedadam,
+                         fedyogi, global_norm, make, sgd)
 from .schedules import constant, inverse_sqrt, warmup_cosine

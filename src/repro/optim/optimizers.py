@@ -1,4 +1,5 @@
-"""Optimizers in pure JAX (no optax offline): SGD, momentum, Adam, AdamW.
+"""Optimizers in pure JAX (no optax offline): SGD, momentum, Adam, AdamW,
+and the server-side federated pair FedAdam/FedYogi.
 
 Interface mirrors optax: ``init(params) -> state``,
 ``update(grads, state, params) -> (updates, state)``; apply with
@@ -99,13 +100,64 @@ def adamw(lr, b1=0.9, b2=0.95, eps=1e-8, weight_decay=0.1, grad_clip=1.0):
     return adam(lr, b1, b2, eps, weight_decay, grad_clip)
 
 
+def _fedopt(lr, b1: float, b2: float, eps: float, yogi: bool) -> Optimizer:
+    """Shared FedAdam/FedYogi core (Reddi et al., *Adaptive Federated
+    Optimization*, 2021). The "gradient" fed in is the server
+    pseudo-gradient Δ_t = Σ_k p_k (w_t − w_t^(k)); no bias correction,
+    per the paper's server-side variant. FedYogi's second moment moves
+    additively toward g² (``v − (1−b2)·sign(v − g²)·g²``) instead of the
+    exponential average, which keeps v from inflating under the sparse,
+    bursty pseudo-gradients that compressed client updates produce.
+    """
+
+    def init(params):
+        zeros = lambda p: jnp.zeros_like(p, jnp.float32)
+        return {"count": jnp.zeros((), jnp.int32),
+                "m": jax.tree_util.tree_map(zeros, params),
+                "v": jax.tree_util.tree_map(zeros, params)}
+
+    def update(grads, state, params=None):
+        count = state["count"] + 1
+        step = _scalar_lr(lr, count)
+        m = jax.tree_util.tree_map(
+            lambda m_, g: b1 * m_ + (1 - b1) * g.astype(jnp.float32),
+            state["m"], grads)
+        if yogi:
+            def vupd(v_, g):
+                g2 = jnp.square(g.astype(jnp.float32))
+                return v_ - (1 - b2) * jnp.sign(v_ - g2) * g2
+        else:
+            def vupd(v_, g):
+                g2 = jnp.square(g.astype(jnp.float32))
+                return b2 * v_ + (1 - b2) * g2
+        v = jax.tree_util.tree_map(vupd, state["v"], grads)
+        updates = jax.tree_util.tree_map(
+            lambda m_, v_: -step * m_ / (jnp.sqrt(v_) + eps), m, v)
+        return updates, {"count": count, "m": m, "v": v}
+
+    return Optimizer(init, update)
+
+
+def fedadam(lr, b1: float = 0.9, b2: float = 0.99,
+            eps: float = 1e-3) -> Optimizer:
+    """Server-side Adam over the FedAvg pseudo-gradient Δ_t."""
+    return _fedopt(lr, b1, b2, eps, yogi=False)
+
+
+def fedyogi(lr, b1: float = 0.9, b2: float = 0.99,
+            eps: float = 1e-3) -> Optimizer:
+    """Server-side Yogi over the FedAvg pseudo-gradient Δ_t."""
+    return _fedopt(lr, b1, b2, eps, yogi=True)
+
+
 def global_norm(tree) -> jnp.ndarray:
     leaves = jax.tree_util.tree_leaves(tree)
     return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
                         for x in leaves))
 
 
-GETTERS = {"sgd": sgd, "adam": adam, "adamw": adamw}
+GETTERS = {"sgd": sgd, "adam": adam, "adamw": adamw,
+           "fedadam": fedadam, "fedyogi": fedyogi}
 
 
 def make(name: str, lr, **kw) -> Optimizer:

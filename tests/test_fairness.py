@@ -144,6 +144,29 @@ def test_registered_policies_randomized_pools(name):
         check_guarantees(res, hists, n, delta, x_star)
 
 
+# ---------------------------------------------------------------------------
+# ISSUE-9: the §VII guarantees hold over the federated-LM bundle — the
+# transformer task's real partition histograms (latent bigram classes),
+# not just the paper's synthetic pool types
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def lm_hists():
+    from repro.fl.partition import client_histograms
+    from repro.fl.transformer_task import make_transformer_fl
+    b = make_transformer_fl(n_clients=24, n_train=300, n_test=60, seq_len=8)
+    return client_histograms(b["data"].labels, b["parts"],
+                             b["data"].num_classes)
+
+
+@pytest.mark.parametrize("name", P.available_scheduling_policies())
+@pytest.mark.parametrize("n,delta,x_star", [(6, 2, 3), (10, 3, 2)])
+def test_registered_policies_transformer_bundle(name, lm_hists, n, delta,
+                                                x_star):
+    res = policy_schedule(name, lm_hists, n=n, delta=delta, x_star=x_star)
+    check_guarantees(res, lm_hists, n=n, delta=delta, x_star=x_star)
+
+
 def test_fair_ema_guarantees_hold_with_carried_state():
     # the stateful policy must uphold the guarantee in *every* period,
     # not only from a cold start — drive 5 periods with the EMA state

@@ -207,7 +207,8 @@ class TestCheckpoint:
         # silently under x64=off; it must now say so and point at the
         # exact-dtype restore_dict, so the two entry points can't
         # disagree without a trace
-        from repro.checkpoint import restore_dict
+        from repro.checkpoint import reset_narrowing_warnings, restore_dict
+        reset_narrowing_warnings()   # the warning dedups per run (ISSUE-9)
         p = str(tmp_path / "f64.ckpt")
         save(p, {"x": np.arange(3, dtype=np.float64),
                  "y": jnp.zeros(2, jnp.float32)})
@@ -217,6 +218,30 @@ class TestCheckpoint:
         with warnings.catch_warnings():            # exact path: silent
             warnings.simplefilter("error")
             assert restore_dict(p)["x"].dtype == np.float64
+
+    def test_narrowing_warns_once_per_run(self, tmp_path):
+        # ISSUE-9 satellite: a service restoring the same state layout
+        # every period used to re-emit the identical warning on every
+        # restore; it now fires once per run per narrowed-key set
+        from repro.checkpoint import reset_narrowing_warnings
+        reset_narrowing_warnings()
+        p = str(tmp_path / "f64.ckpt")
+        save(p, {"x": np.arange(3, dtype=np.float64)})
+        like = {"x": jnp.zeros(3)}
+        with pytest.warns(UserWarning, match="restore_dict"):
+            restore(p, like)
+        with warnings.catch_warnings():            # same layout: silent
+            warnings.simplefilter("error")
+            restore(p, like)
+        # a *different* narrowed-key set still warns once
+        p2 = str(tmp_path / "i64.ckpt")
+        save(p2, {"n": np.arange(4, dtype=np.int64)})
+        with pytest.warns(UserWarning, match="restore_dict"):
+            restore(p2, {"n": jnp.zeros(4, jnp.int32)})
+        # and the reset hook re-arms the first layout
+        reset_narrowing_warnings()
+        with pytest.warns(UserWarning, match="restore_dict"):
+            restore(p, like)
 
     def test_restore_silent_when_dtypes_match(self, tmp_path):
         p = str(tmp_path / "f32.ckpt")

@@ -347,6 +347,71 @@ class TestCheckpointResume:
         assert resolve_selection_policy(back.task).name == "paper_greedy"
         assert resolve_scheduling_policy(back.task).name == "iid_subsets"
         assert back.policy_state == {}
+        # pre-format-4 payloads also default the ISSUE-9 fields
+        assert back.task.compression is None
+        assert back.trainer_state == {}
+
+    def test_format3_payload_still_restores(self):
+        # a pre-ISSUE-9 checkpoint (format 3: no compression /
+        # trainer_state keys) restores with those fields defaulted
+        state = TaskState(task=TaskRequest(budget=100.0, seed=5,
+                                           compression="int8"))
+        state.trainer_state = {"params/w": np.ones(3, np.float32)}
+        arrays = state.to_arrays()
+        arrays["format"] = np.array([3], dtype=np.int64)
+        del arrays["task/compression"]
+        arrays = {k: v for k, v in arrays.items()
+                  if not k.startswith("trn/")}
+        back = TaskState.from_arrays(arrays)
+        assert back.task.compression is None
+        assert back.trainer_state == {}
+        # fmt-3 fields still round-tripped
+        assert back.task.seed == 5
+
+    def test_format4_roundtrip_with_trainer_state(self):
+        # format 4 carries the codec spec and the trainer's exported
+        # server-state arrays exactly (dtypes and values)
+        task = TaskRequest(budget=100.0, seed=9,
+                           compression="topk:0.05+int8@chunk=128")
+        state = TaskState(task=task)
+        state.trainer_state = {
+            "params/layers/attn/wq/a": np.arange(6, dtype=np.float32),
+            "opt/m/count": np.array(3, dtype=np.int32),
+            "opt/v/x": np.linspace(0, 1, 4).astype(np.float64),
+        }
+        arrays = state.to_arrays()
+        assert int(arrays["format"][0]) == 4
+        back = TaskState.from_arrays(arrays)
+        assert back.task.compression == task.compression
+        assert set(back.trainer_state) == set(state.trainer_state)
+        for k, v in state.trainer_state.items():
+            assert back.trainer_state[k].dtype == v.dtype, k
+            np.testing.assert_array_equal(back.trainer_state[k], v)
+
+    def test_attach_and_restore_trainer_state_hooks(self):
+        from repro.core.lifecycle import (attach_trainer_state,
+                                          restore_trainer_state)
+
+        class Exporter:
+            def export_state(self):
+                return {"params/w": np.full(2, 7.0, np.float32)}
+
+            def import_state(self, arrays):
+                self.got = arrays
+
+        state = TaskState(task=TaskRequest(budget=1.0))
+        attach_trainer_state(state, Exporter())
+        assert "params/w" in state.trainer_state
+        back = TaskState.from_arrays(state.to_arrays())
+        sink = Exporter()
+        assert restore_trainer_state(back, sink)
+        np.testing.assert_array_equal(sink.got["params/w"],
+                                      np.full(2, 7.0, np.float32))
+        # hook-less trainers are a no-op on attach, empty on restore
+        empty = TaskState(task=TaskRequest(budget=1.0))
+        attach_trainer_state(empty, object())
+        assert empty.trainer_state == {}
+        assert not restore_trainer_state(empty, sink)
 
 
 class TestFaultResume:
