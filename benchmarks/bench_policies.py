@@ -29,6 +29,15 @@ dominant class per client) and **type3** (two-class mixtures)
 partitions, recorded under ``"policies"."partitions"`` alongside the
 type2 ``"bundles"`` rows.
 
+Since ISSUE-10 the study also records an **accuracy-vs-bytes
+compression frontier** (``"policies"."compression_frontier"``): the
+paper bundle re-run through the device data plane under the ISSUE-9
+update codecs ``{none, int8, topk:0.1, topk:0.05+int8}``, with mean
+wire bytes per round (from the round metrics' ``bytes`` column; the
+raw plane's figure is ``param_count x 4 x mean arrivals``) against
+final accuracy — the service-side counterpart of the transformer study
+in ``benchmarks/bench_compression.py``.
+
 Set ``REPRO_BENCH_SMOKE=1`` for the CI configuration: tiny data/rounds,
 but still **all** bundles (every registered policy must at least run).
 """
@@ -157,6 +166,66 @@ def _study(noniid, bundle_names, smoke, seed, report, prefix=""):
     return rows, budget
 
 
+# the ISSUE-9 codecs spanning the bytes/accuracy frontier corners: raw,
+# quantize-only, sparsify-only, composed
+_FRONTIER_VARIANTS = ("none", "int8", "topk:0.1", "topk:0.05+int8")
+
+
+def _compression_frontier(smoke, seed, report):
+    """Accuracy-vs-bytes rows: the paper bundle through the device data
+    plane under each update codec. Dropout is off so every variant's
+    arrival count equals its subset size and the raw plane's bytes are
+    exact, not estimated."""
+    import jax
+    from repro.fl.compression import CompressionSpec, bytes_per_client
+    from repro.models import cnn
+    n_clients = 20 if smoke else 30
+    rounds = 3 if smoke else 16
+    n_train = 600 if smoke else 2400
+    n_test = 200 if smoke else 600
+    sim = SimConfig(batch_size=16, local_steps=2, local_lr=0.15,
+                    eval_every=rounds, dropout_rate=0.0, seed=seed)
+    params = cnn.init_params(cnn.MNIST_CNN, jax.random.PRNGKey(0))
+    p = sum(int(np.prod(np.shape(x)))
+            for x in jax.tree_util.tree_leaves(params))
+    raw_per_client = bytes_per_client(CompressionSpec.parse(None), p)
+
+    rows = {}
+    for name in _FRONTIER_VARIANTS:
+        out = run_fl_experiment(
+            "mnist", "type2", n_clients=n_clients, rounds=rounds,
+            n_train=n_train, n_test=n_test, subset_size=6, subset_delta=3,
+            sim=sim, seed=seed, data_plane="device", round_chunk=4,
+            compression=name)
+        spec = CompressionSpec.parse(name)
+        hist_bytes = [h.get("bytes") for h in out["history"]]
+        if spec.active:
+            per_round = float(np.mean([b for b in hist_bytes
+                                       if b is not None]))
+        else:
+            arrived = float(np.mean([len(r.subset)
+                                     for r in out["service"].rounds]))
+            per_round = arrived * raw_per_client
+        per_client = bytes_per_client(spec, p)
+        rows[name] = {
+            "bytes_per_client": per_client,
+            "bytes_per_round": round(per_round, 1),
+            "compression_ratio": round(raw_per_client / per_client, 2),
+            "accuracy": round(float(out["final_accuracy"]), 4),
+            "rounds": out["service"].num_rounds,
+        }
+        report(f"frontier_{name}_bytes_per_round", round(per_round, 1),
+               f"{rows[name]['compression_ratio']:.1f}x vs raw f32")
+        report(f"frontier_{name}_accuracy", rows[name]["accuracy"],
+               "device plane, paper bundle")
+    assert all(r["rounds"] == rounds for r in rows.values())
+    # the frontier must actually be a frontier: monotone bytes ordering
+    assert rows["topk:0.05+int8"]["bytes_per_round"] < \
+        rows["topk:0.1"]["bytes_per_round"] < \
+        rows["int8"]["bytes_per_round"] < rows["none"]["bytes_per_round"]
+    return {"flat_update_size": p, "variants": rows}
+
+
 def run(report):
     smoke = bool(int(os.environ.get("REPRO_BENCH_SMOKE", "0")))
     seed = 0
@@ -177,7 +246,9 @@ def run(report):
     record = {"smoke": smoke, "noniid": "type2", "n_clients": n_clients,
               "rounds": rounds, "budget": budget,
               "subset_size": 6, "subset_delta": 3,
-              "bundles": rows, "partitions": partitions}
+              "bundles": rows, "partitions": partitions,
+              "compression_frontier": _compression_frontier(smoke, seed,
+                                                            report)}
     _merge_json(_JSON_PATH, "policies", record)
     report("json_written", 1, os.path.abspath(_JSON_PATH))
 

@@ -20,6 +20,7 @@ BENCHES = [
     "bench_faults",           # ISSUE-7 fault injection + mitigation
     "bench_workload",         # ISSUE-8 online workload harness (SLA)
     "bench_compression",      # ISSUE-9 compressed update plane (bytes/acc)
+    "bench_placement",        # ISSUE-10 multi-device tenant placement
     "bench_roofline",         # §Roofline (from dry-run artifacts)
 ]
 

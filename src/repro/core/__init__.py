@@ -31,6 +31,12 @@ Data flow (post array-native refactor):
   a multi-tenant ``ServiceScheduler`` overlapping many tasks' device
   dispatches over one shared pool. ``FLServiceProvider.run_task`` is a
   deprecated shim over it.
+- ``placement`` spreads tenants across a device mesh
+  (docs/placement.md): a ``PlacementPolicy`` registry (``bin_pack``
+  by estimated per-round cost, ``round_robin``) behind
+  ``ServiceScheduler(n_devices=..., placement=...)``, which keeps one
+  in-flight window per device and migrates boundary-parked tenants on
+  load imbalance over the checkpoint path.
 - ``workload`` / ``driver`` / ``telemetry`` are the online harness
   (docs/workloads.md): seeded counter-based arrival / availability /
   device-speed traces, a virtual-clock ``OnlineDriver`` replaying them
@@ -59,6 +65,9 @@ from .lifecycle import (AsyncTrainer, InFlightError, PendingChunk,
                         dispatch, drain, load_state, resolve_trainer,
                         save_state, single_round_adapter, step, submit)
 from .mkp import MKPResult, solve_mkp, solve_mkp_bnb, solve_mkp_greedy
+from .placement import (PlacementPolicy, available_placement_policies,
+                        placement_policy, register_placement_policy,
+                        resolve_placement_policy)
 from .policy import (SchedulingPolicy, SelectionPolicy,
                      available_scheduling_policies,
                      available_selection_policies,
@@ -100,6 +109,9 @@ __all__ = [
     "FLServiceProvider", "RoundLog", "ServiceRunResult", "TaskRequest",
     # fleet-scale selection plane (sharded device mirror)
     "DevicePoolState",
+    # placement registry (multi-device tenant fabric, docs/placement.md)
+    "PlacementPolicy", "available_placement_policies", "placement_policy",
+    "register_placement_policy", "resolve_placement_policy",
     # policy registry (pluggable selection/scheduling strategies)
     "SchedulingPolicy", "SelectionPolicy", "available_scheduling_policies",
     "available_selection_policies", "register_scheduling_policy",

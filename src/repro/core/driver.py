@@ -107,8 +107,12 @@ class OnlineDriver:
             heapq.heappush(retries,
                            (self.now + delay, index, attempt + 1, out.task))
         else:
+            # device_of: placement fabric seam (core/placement.py) — which
+            # mesh device the tenant's chunks dispatch on. 0 until the
+            # scheduler's next sweep places the tenant.
             self.telemetry.record("accept", self.now, index, tid=int(out),
-                                  attempt=attempt)
+                                  attempt=attempt,
+                                  device=self.scheduler.device_of(int(out)))
             self._live[index] = (int(out), arrival)
 
     def _sweep_duration(self, swept: dict) -> float:
@@ -206,6 +210,7 @@ class OnlineDriver:
                 self.phases[index] = st.phase.name
                 self.telemetry.record("done", self.now, index,
                                       tid=tid, phase=st.phase.name,
-                                      periods=st.period)
+                                      periods=st.period,
+                                      device=self.scheduler.device_of(tid))
                 self.scheduler.retire(tid)
                 del self._live[index]

@@ -81,6 +81,7 @@ from typing import (Any, Callable, Mapping, Protocol, Sequence,
 
 import numpy as np
 
+from . import placement as placement_mod
 from .scheduling import ScheduleResult
 from .selection import SelectionResult
 from .reputation import ReputationTracker
@@ -1254,6 +1255,26 @@ class ServiceScheduler:
     sweep early, so shared-pool churn between sweeps lands one chunk
     later than under round-robin stepping.
 
+    **Multi-device placement** (``n_devices > 1``): tenants are spread
+    over device indices ``0..n_devices-1`` by a
+    :class:`~repro.core.placement.PlacementPolicy` (``placement=``, by
+    registry name — ``bin_pack`` packs on estimated per-round cost from
+    the ``obs/latency`` telemetry window, ``round_robin`` deals
+    cyclically), and the scheduler keeps one ready queue and one
+    ``max_inflight``-bounded window *per device*, pumped independently
+    — so a straggling chunk on one device never stalls another
+    device's tenants. Trainers opt into physical placement via a
+    ``place_on(device_index)`` hook (resolve ``jax.devices()[i]``
+    there; the scheduler itself never touches jax). With
+    ``rebalance_threshold`` set, a sweep whose estimated per-device
+    load imbalance (max/mean) exceeds the threshold re-places tenants
+    sitting at a period boundary (``POOL_SELECTED`` /
+    ``PERIOD_CHECKPOINT``, nothing in flight) — migration is flush →
+    re-place → resume over the ``TaskState.to_arrays`` checkpoint
+    path, so per-task results are bit-identical whether or not a
+    tenant ever moved. ``n_devices=1`` (the default) reduces exactly
+    to the single-window pump above. See ``docs/placement.md``.
+
     A continuously serving provider should :meth:`retire` finished
     tasks; completed tenants are otherwise retained (with their full
     round histories) so ``results()`` stays available.
@@ -1261,12 +1282,22 @@ class ServiceScheduler:
 
     def __init__(self, provider, max_inflight: int = 8,
                  overlap: bool = True, max_queue: int | None = None,
-                 inflight_deadline: int | None = None):
+                 inflight_deadline: int | None = None,
+                 n_devices: int = 1,
+                 placement: "str | placement_mod.PlacementPolicy | None"
+                 = None,
+                 rebalance_threshold: float | None = None):
         if max_inflight < 1:
             raise ValueError(f"max_inflight must be >= 1, got "
                              f"{max_inflight}")
+        if n_devices < 1:
+            raise ValueError(f"n_devices must be >= 1, got {n_devices}")
+        if rebalance_threshold is not None and rebalance_threshold <= 1.0:
+            raise ValueError(f"rebalance_threshold is a max/mean load "
+                             f"ratio and must be > 1.0, got "
+                             f"{rebalance_threshold}")
         self.provider = provider
-        self.max_inflight = max_inflight
+        self.max_inflight = max_inflight   # per-device window bound
         self.overlap = overlap
         # backpressure: submit() returns RejectedTask once this many
         # tasks sit un-swept in INTAKE (None = unbounded, pre-ISSUE-7)
@@ -1276,11 +1307,19 @@ class ServiceScheduler:
         # window slot (None = wait forever, pre-ISSUE-7). Only trainers
         # exposing poll(handle) participate; others collect eagerly.
         self.inflight_deadline = inflight_deadline
+        self.n_devices = n_devices
+        self.placement_policy = placement_mod.resolve_placement_policy(
+            placement)
+        self.rebalance_threshold = rebalance_threshold
+        self.migrations = 0          # total tenants moved by rebalance()
         self._tenants: dict[int, _Tenant] = {}
         self._next_id = 0
-        self._inflight: list[int] = []   # FIFO: tids with a chunk in flight
-        self._ready: list[int] = []      # FIFO: dispatchable, waiting for
-        # a window slot (only populated when tenants outnumber the window)
+        self._placement: dict[int, int] = {}   # tid -> device index
+        # per-device FIFOs: [d] holds that device's tids
+        self._inflight: list[list[int]] = [[] for _ in range(n_devices)]
+        self._ready: list[list[int]] = [[] for _ in range(n_devices)]
+        # _inflight[d]: tids with a chunk in flight on device d;
+        # _ready[d]: dispatchable, waiting for a slot in d's window
 
     # -- intake --------------------------------------------------------------
     def submit(self, task: TaskRequest, trainer,
@@ -1357,6 +1396,11 @@ class ServiceScheduler:
         identical to ``overlap=False``; only wall-clock differs.
         """
         self._intake()
+        self._place_new()
+        if self.rebalance_threshold is not None and self.n_devices > 1:
+            if placement_mod.imbalance(self._device_loads()) \
+                    > self.rebalance_threshold:
+                self.rebalance()
         out: dict[int, list[RoundEvent]] = {}
         if not self.overlap:                       # ISSUE-3 round-robin
             for tid, t in self._tenants.items():
@@ -1369,50 +1413,169 @@ class ServiceScheduler:
                     out[tid] = ev
             return out
 
-        # refresh the ready queue with newly runnable tenants (fresh
-        # intakes, adoptions, tasks bumped while the window was full)
-        queued = set(self._inflight) | set(self._ready)
-        self._ready.extend(tid for tid, t in self._tenants.items()
-                           if not t.state.phase.terminal
-                           and tid not in queued)
-        # phase 1: fill the in-flight window (cold start / new tenants;
-        # in steady state the window was already refilled by phase 2 of
-        # the previous sweep, so every chunk computed between sweeps)
-        while self._ready and len(self._inflight) < self.max_inflight:
-            self._pump_into_flight(self._ready.pop(0))
-        # phase 2: collect this sweep's window in completion order (one
-        # device ⇒ FIFO execution ⇒ dispatch order). After each collect
-        # the task goes to the back of the ready queue and the freed
-        # slot is refilled at once — the refill runs the task's
-        # host-only transitions (PERIOD_CHECKPOINT reputation/churn
-        # sync, POOL_SELECTED scheduling) and enqueues its next chunk
-        # while the rest of the window is still computing, which is
-        # where the overlap comes from.
-        # The fixed-count loop polls each in-flight chunk at most once
-        # per sweep: a not-ready (wedged) tenant is re-appended and aged,
-        # never re-polled this sweep, so it cannot stall the others —
-        # and past ``inflight_deadline`` consecutive not-ready sweeps it
-        # is evicted to DEGRADED, freeing its window slot.
-        for _ in range(len(self._inflight)):
-            tid = self._inflight.pop(0)
-            t = self._tenants[tid]
-            if not self._handle_ready(t):
-                t.inflight_age += 1
-                if (self.inflight_deadline is not None
-                        and t.inflight_age >= self.inflight_deadline):
-                    self._evict(tid)
-                else:
-                    self._inflight.append(tid)
-                continue
-            t.inflight_age = 0
-            t.state, ev = collect(t.state)
-            if ev:
-                out.setdefault(tid, []).extend(ev)
-            if not t.state.phase.terminal:
-                self._ready.append(tid)
-            while self._ready and len(self._inflight) < self.max_inflight:
-                self._pump_into_flight(self._ready.pop(0))
+        # refresh the ready queues with newly runnable tenants (fresh
+        # intakes, adoptions, tasks bumped while the window was full);
+        # each tenant joins its placed device's queue
+        queued = set()
+        for d in range(self.n_devices):
+            queued.update(self._inflight[d], self._ready[d])
+        for tid, t in self._tenants.items():
+            if not t.state.phase.terminal and tid not in queued:
+                self._ready[self._placement[tid]].append(tid)
+        # phase 1: fill every device's in-flight window (cold start /
+        # new tenants; in steady state the windows were already refilled
+        # by phase 2 of the previous sweep, so every chunk computed
+        # between sweeps)
+        for d in range(self.n_devices):
+            while (self._ready[d]
+                   and len(self._inflight[d]) < self.max_inflight):
+                self._pump_into_flight(self._ready[d].pop(0))
+        # phase 2: collect each device's window in completion order (per
+        # device the FIFO execution stream makes dispatch order
+        # completion order). After each collect the task goes to the
+        # back of its device's ready queue and the freed slot is
+        # refilled at once — the refill runs the task's host-only
+        # transitions (PERIOD_CHECKPOINT reputation/churn sync,
+        # POOL_SELECTED scheduling) and enqueues its next chunk while
+        # the rest of the windows are still computing, which is where
+        # the overlap comes from.
+        # The fixed-count loops poll each in-flight chunk at most once
+        # per sweep: a not-ready (wedged) tenant is re-appended and
+        # aged, never re-polled this sweep, so it cannot stall the
+        # others — neither its own device's window (skipped, window
+        # refilled around it) nor, since every window and queue is
+        # per-device, any other device's tenants — and past
+        # ``inflight_deadline`` consecutive not-ready sweeps it is
+        # evicted to DEGRADED, freeing its window slot.
+        for d in range(self.n_devices):
+            for _ in range(len(self._inflight[d])):
+                tid = self._inflight[d].pop(0)
+                t = self._tenants[tid]
+                if not self._handle_ready(t):
+                    t.inflight_age += 1
+                    if (self.inflight_deadline is not None
+                            and t.inflight_age >= self.inflight_deadline):
+                        self._evict(tid)
+                    else:
+                        self._inflight[d].append(tid)
+                    continue
+                t.inflight_age = 0
+                t.state, ev = collect(t.state)
+                if ev:
+                    out.setdefault(tid, []).extend(ev)
+                if not t.state.phase.terminal:
+                    self._ready[d].append(tid)
+                while (self._ready[d]
+                       and len(self._inflight[d]) < self.max_inflight):
+                    self._pump_into_flight(self._ready[d].pop(0))
         return out
+
+    # -- placement -----------------------------------------------------------
+    def device_of(self, tid: int) -> int:
+        """The device index ``tid`` is placed on (0 for everything
+        until the first sweep places it)."""
+        return self._placement.get(tid, 0)
+
+    def placements(self) -> dict[int, int]:
+        """Snapshot of the current ``{tid: device_index}`` map."""
+        return dict(self._placement)
+
+    def _active_costs(self) -> dict[int, float]:
+        return placement_mod.estimate_costs(
+            {tid: t.state for tid, t in self._tenants.items()
+             if not t.state.phase.terminal})
+
+    def _device_loads(self) -> np.ndarray:
+        costs = self._active_costs()
+        live = {tid: d for tid, d in self._placement.items()
+                if tid in costs}
+        return placement_mod.device_loads(live, costs, self.n_devices)
+
+    def _place_new(self) -> None:
+        """Assign every not-yet-placed live tenant to a device and fire
+        its trainer's ``place_on`` hook. Runs at the top of each sweep,
+        right after intake, so placement sees post-stage-1 states."""
+        fresh = [tid for tid, t in self._tenants.items()
+                 if tid not in self._placement
+                 and not t.state.phase.terminal]
+        if not fresh:
+            return
+        costs = self._active_costs()
+        live = {tid: d for tid, d in self._placement.items()
+                if tid in costs}
+        assignment = self.placement_policy.place(
+            fresh, self.n_devices, costs,
+            placement_mod.device_loads(live, costs, self.n_devices),
+            placement_mod.device_counts(live, self.n_devices))
+        for tid in fresh:
+            dev = int(assignment[tid])
+            if not 0 <= dev < self.n_devices:
+                raise ValueError(
+                    f"placement policy {self.placement_policy.name!r} "
+                    f"put task {tid} on device {dev} "
+                    f"(n_devices={self.n_devices})")
+            self._placement[tid] = dev
+            hook = getattr(self._tenants[tid].trainer, "place_on", None)
+            if hook is not None:
+                hook(dev)
+
+    def rebalance(self) -> int:
+        """Re-place every migratable tenant through the placement
+        policy now; returns how many tenants actually moved.
+
+        Migratable = live, nothing in flight, and sitting at a period
+        boundary (``POOL_SELECTED`` / ``PERIOD_CHECKPOINT``) — a task
+        mid-period keeps its device so its round stream is untouched.
+        Called automatically by :meth:`sweep` when
+        ``rebalance_threshold`` is set and the estimated max/mean
+        device load exceeds it; safe to call manually any time.
+        """
+        movable = [tid for tid, t in self._tenants.items()
+                   if not t.state.phase.terminal
+                   and tid in self._placement
+                   and t.state.pending is None
+                   and t.state.phase in (TaskPhase.POOL_SELECTED,
+                                         TaskPhase.PERIOD_CHECKPOINT)]
+        if not movable:
+            return 0
+        costs = self._active_costs()
+        pinned = {tid: d for tid, d in self._placement.items()
+                  if tid in costs and tid not in movable}
+        assignment = self.placement_policy.place(
+            movable, self.n_devices, costs,
+            placement_mod.device_loads(pinned, costs, self.n_devices),
+            placement_mod.device_counts(pinned, self.n_devices))
+        moved = 0
+        for tid in movable:
+            if self._migrate(tid, int(assignment[tid])):
+                moved += 1
+        self.migrations += moved
+        return moved
+
+    def _migrate(self, tid: int, new_dev: int) -> bool:
+        """Move one boundary-parked tenant to ``new_dev`` over the
+        checkpoint path: flush its control state through
+        ``TaskState.to_arrays`` → ``from_arrays`` (proving the task
+        would survive a cross-host move), re-home its queue entry, and
+        re-place the trainer. Round/schedule histories are carried
+        over — they live outside the serialized control state — so
+        results are bit-identical to a never-migrated run."""
+        old_dev = self._placement[tid]
+        if new_dev == old_dev:
+            return False
+        t = self._tenants[tid]
+        fresh = TaskState.from_arrays(t.state.to_arrays())
+        fresh.rounds = t.state.rounds
+        fresh.schedules = t.state.schedules
+        t.state = fresh
+        self._placement[tid] = new_dev
+        if tid in self._ready[old_dev]:
+            self._ready[old_dev].remove(tid)
+            self._ready[new_dev].append(tid)
+        hook = getattr(t.trainer, "place_on", None)
+        if hook is not None:
+            hook(new_dev)
+        return True
 
     def _handle_ready(self, t: _Tenant) -> bool:
         """Whether the tenant's pending chunk can be collected without
@@ -1446,12 +1609,13 @@ class ServiceScheduler:
         phase host-side and the loop continues — mirroring what
         :func:`drain` does, minus the blocking collect."""
         t = self._tenants[tid]
+        dev = self._placement.get(tid, 0)
         while not t.state.phase.terminal:
             if t.state.pending is not None:
                 # already in flight (e.g. a state the caller dispatched
                 # before adopt()): track it, don't re-dispatch
                 t.inflight_age = 0
-                self._inflight.append(tid)
+                self._inflight[dev].append(tid)
                 return
             if t.state.phase in (TaskPhase.SCHEDULED, TaskPhase.TRAINING):
                 # under a fault plan a dispatch may come back with
@@ -1461,7 +1625,7 @@ class ServiceScheduler:
                          stop_fn=t.stop_fn)
                 if t.state.pending is not None:
                     t.inflight_age = 0
-                    self._inflight.append(tid)
+                    self._inflight[dev].append(tid)
                     return
             else:               # POOL_SELECTED / PERIOD_CHECKPOINT
                 t.state, _ = step(self.provider, t.state, t.trainer,
@@ -1493,4 +1657,5 @@ class ServiceScheduler:
             raise ValueError(f"task {tid} still {t.state.phase.name}; "
                              f"only terminal tasks can be retired")
         del self._tenants[tid]
+        self._placement.pop(tid, None)
         return as_run_result(t.state)

@@ -58,18 +58,23 @@ def slot_key(base_key, round_index, slot):
 
 
 def sample_positions(base_key, round_index, n_slots: int, local_steps: int,
-                     batch_size: int):
+                     batch_size: int, slot_offset=0):
     """Per-slot uniforms for one round: ``(mask_u (K,), pos_u (K, E, b))``.
 
     ``mask_u`` drives the dropout draw, ``pos_u`` the batch-position
     draw. Values for slot k depend only on (base_key, round, k), never
     on ``n_slots`` — padding the subset does not perturb the stream.
+
+    ``slot_offset`` shifts the slot ids: a client-sharded round scan
+    (``fl.round.make_fl_rounds_scan_sharded``) passes each shard's
+    global base slot so every shard draws the *global* slot's stream —
+    keeping draws identical to the unsharded plane.
     """
     def one(slot):
         ku, kb = jax.random.split(slot_key(base_key, round_index, slot))
         return (jax.random.uniform(ku, ()),
                 jax.random.uniform(kb, (local_steps, batch_size)))
-    return jax.vmap(one)(jnp.arange(n_slots))
+    return jax.vmap(one)(jnp.arange(n_slots) + slot_offset)
 
 
 def positions_to_indices(pools, sizes, rows, pos_u):

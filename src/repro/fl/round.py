@@ -128,22 +128,30 @@ def _aggregate_and_quality(deltas, w, use_agg_kernel: bool,
         return unflatten(agg_flat), q
 
     agg = tree_weighted_sum(deltas, w, use_agg_kernel)
+    return agg, _quality_cosines(deltas, agg)
 
-    def dot(a, b):
-        return sum(jnp.vdot(x.astype(jnp.float32), y.astype(jnp.float32))
-                   for x, y in zip(jax.tree_util.tree_leaves(a),
-                                   jax.tree_util.tree_leaves(b)))
 
-    nb = jnp.sqrt(dot(agg, agg))       # hoisted: identical for every k
+def _tree_dot(a, b):
+    return sum(jnp.vdot(x.astype(jnp.float32), y.astype(jnp.float32))
+               for x, y in zip(jax.tree_util.tree_leaves(a),
+                               jax.tree_util.tree_leaves(b)))
+
+
+def _quality_cosines(deltas, agg):
+    """Per-client q_t = cos(Δ_t^(k), Δ_t) against a given aggregate —
+    the two-pass quality path, with the aggregate norm hoisted out of
+    the K loop. Factored out so the sharded scan can reuse it with a
+    psum'd (globally replicated) aggregate over local client shards."""
+    nb = jnp.sqrt(_tree_dot(agg, agg))  # hoisted: identical for every k
 
     def cos_one(k):
         dk = jax.tree_util.tree_map(lambda leaf: leaf[k], deltas)
-        num = dot(dk, agg)
-        na = jnp.sqrt(dot(dk, dk))
+        num = _tree_dot(dk, agg)
+        na = jnp.sqrt(_tree_dot(dk, dk))
         return num / jnp.maximum(na * nb, 1e-12)
 
     K = jax.tree_util.tree_leaves(deltas)[0].shape[0]
-    return agg, jax.vmap(cos_one)(jnp.arange(K))
+    return jax.vmap(cos_one)(jnp.arange(K))
 
 
 def make_fl_round(loss_fn: Callable, local_lr: float = 0.05,
@@ -302,6 +310,117 @@ def make_fl_rounds_scan(loss_fn: Callable, local_lr: float = 0.05,
         if has_arrival:
             xs = xs + (schedule["arrival"],)
         return jax.lax.scan(one_round, carry, xs)
+
+    return chunk_fn
+
+
+def make_fl_rounds_scan_sharded(loss_fn: Callable, local_lr: float = 0.05,
+                                local_steps: int = 1, batch_size: int = 16,
+                                server_lr: float = 1.0,
+                                gather_fn: Callable | None = None,
+                                mesh=None):
+    """Client-sharded variant of :func:`make_fl_rounds_scan` for large
+    models: the round's client axis K is split over the mesh's data
+    axes with ``shard_map``, each shard runs its K/n clients' local
+    updates, and the weighted aggregate Δ_t (plus the weight and loss
+    normalizers) is ``psum``'d across shards — the HomebrewNLP-style
+    psum aggregation the ROADMAP names, finally wiring
+    ``launch/mesh.py`` + ``sharding/specs.py`` into the FL path.
+
+    Same ``chunk_fn(params, data, schedule, base_key)`` contract and
+    the same slot-keyed randomness as the unsharded scan (each shard
+    draws its *global* slots via ``sample_positions(slot_offset=...)``),
+    so per-client batches, masks and deltas are identical; only the
+    f32 reduction order of the aggregate differs (allclose, not
+    bit-equal — asserted in tests/test_placement.py). K must divide by
+    the data-axis size (pad subsets up — ``DeviceFLSim`` rounds its
+    static K up when handed a mesh).
+
+    ``mesh=None`` builds :func:`repro.launch.mesh.make_host_mesh` (all
+    local devices on "data"; force N CPU devices with
+    ``REPRO_HOST_DEVICES=N tools/run.sh ...``). Scope: the uncompressed
+    plain-SGD-server plane only — ``compression`` / ``server_opt`` stay
+    on the unsharded scan, and client dropout is not simulated here
+    (its all-dropped fallback election is global across K; a per-shard
+    election would diverge). Fault-mode ``arrival`` masks are
+    supported — they shard with the schedule.
+    """
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    from repro.launch.mesh import make_host_mesh
+    from repro.sharding import specs as sharding_specs
+
+    if mesh is None:
+        mesh = make_host_mesh()
+    dax = sharding_specs.data_axes(mesh)
+    axis = dax if len(dax) > 1 else dax[0]
+    n_shard = sharding_specs.mesh_axis_size(mesh, dax)
+    client_update = _make_client_update(loss_fn, local_lr)
+    gather = device_data.gather_batches if gather_fn is None else gather_fn
+
+    @functools.partial(jax.jit, donate_argnums=(0,))
+    def chunk_fn(params, data, schedule, base_key):
+        K = schedule["rows"].shape[1]
+        if K % n_shard:
+            raise ValueError(
+                f"client axis K={K} must be divisible by the data-axis "
+                f"size {n_shard}; pad subsets (pad_subset_to) up")
+        K_local = K // n_shard
+        has_arrival = "arrival" in schedule
+
+        def body(params, data, schedule, base_key):
+            shard = jnp.int32(0)
+            for a in dax:
+                shard = shard * sharding_specs.mesh_axis_size(mesh, a) \
+                    + jax.lax.axis_index(a)
+            offset = shard * K_local
+
+            def one_round(params, per_round):
+                if has_arrival:
+                    rows, weights, active, rnd, arrival = per_round
+                else:
+                    rows, weights, active, rnd = per_round
+                    arrival = None
+                active = active * (jnp.take(data.sizes, rows, axis=0) > 0)
+                mask_u, pos_u = device_data.sample_positions(
+                    base_key, rnd, K_local, local_steps, batch_size,
+                    slot_offset=offset)
+                mask = device_data.dropout_mask(mask_u, active, 0.0,
+                                                arrival=arrival)
+                batch = gather(data, rows, pos_u)
+                deltas, losses = jax.vmap(client_update, in_axes=(None, 0))(
+                    params, batch)
+                w = weights * mask
+                wsum = jax.lax.psum(w.sum(), axis)
+                w = w / jnp.maximum(wsum, 1e-9)
+                agg = jax.lax.psum(tree_weighted_sum(deltas, w), axis)
+                q = _quality_cosines(deltas, agg)
+                params = jax.tree_util.tree_map(
+                    lambda p, d: (p - server_lr * d).astype(p.dtype),
+                    params, agg)
+                info = {"masks": mask, "q_values": q * mask,
+                        "client_losses": losses,
+                        "mean_loss": jax.lax.psum(jnp.sum(losses * w),
+                                                  axis)}
+                return params, info
+
+            xs = (schedule["rows"], schedule["weights"],
+                  schedule["active"], schedule["round_ids"])
+            if has_arrival:
+                xs = xs + (schedule["arrival"],)
+            return jax.lax.scan(one_round, params, xs)
+
+        sched_spec = {k: P(None, axis) for k in schedule}
+        sched_spec["round_ids"] = P()
+        shard_spec = {"masks": P(None, axis), "q_values": P(None, axis),
+                      "client_losses": P(None, axis), "mean_loss": P()}
+        mapped = shard_map(
+            body, mesh=mesh,
+            in_specs=(P(), P(), sched_spec, P()),
+            out_specs=(P(), shard_spec),
+            check_rep=False)
+        return mapped(params, data, schedule, base_key)
 
     return chunk_fn
 

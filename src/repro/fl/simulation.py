@@ -241,13 +241,19 @@ class DeviceFLSim(_EvalCache):
     # carry it, so the no-fault jit trace is untouched)
     accepts_arrivals = True
 
+    # class-level defaults so subclasses with their own __init__
+    # (TransformerFLSim) stay on the unsharded plane: no mesh, client
+    # axis padded to multiples of 2
+    _mesh = None
+    _k_quantum = 2
+
     def __init__(self, model_cfg: cnn.CNNConfig, data: ClassificationData,
                  parts: list[np.ndarray], test: ClassificationData,
                  sim: SimConfig = SimConfig(), impl: str = "auto",
                  pad_subset_to: int | None = None,
                  fused_quality: bool = True, fault_plan=None,
                  compression: str | None = None,
-                 server_opt: str | None = None):
+                 server_opt: str | None = None, mesh=None):
         from repro import optim
         self.cfg = model_cfg
         self.pad_subset_to = pad_subset_to
@@ -264,22 +270,72 @@ class DeviceFLSim(_EvalCache):
             else optim.make(server_opt, sim.server_lr)
         self.opt_state = None if self._server_opt is None \
             else self._server_opt.init(self.params)
-        self.chunk_fn = make_fl_rounds_scan(
-            lambda p, b: cnn.loss_fn(model_cfg, p, b, impl=impl),
-            local_lr=sim.local_lr, local_steps=sim.local_steps,
-            batch_size=sim.batch_size, server_lr=sim.server_lr,
-            dropout_rate=sim.dropout_rate, fused_quality=fused_quality,
-            compression=compression, server_opt=self._server_opt)
+        # `mesh` (a jax.sharding.Mesh, e.g. launch.mesh.make_host_mesh())
+        # swaps in the client-sharded scan: the round's client axis
+        # splits over the mesh's data axes, one psum'd aggregate per
+        # round (docs/placement.md). Out of the sharded variant's
+        # scope: compression, server optimizers, simulated dropout.
+        self._mesh = mesh
+        self._k_quantum = 2
+        if mesh is not None:
+            from repro.fl.round import make_fl_rounds_scan_sharded
+            from repro.sharding import specs as sharding_specs
+            if compression is not None or server_opt is not None:
+                raise ValueError("mesh-sharded DeviceFLSim supports the "
+                                 "uncompressed plain-SGD plane only")
+            if sim.dropout_rate:
+                raise ValueError("mesh-sharded DeviceFLSim does not "
+                                 "simulate client dropout (the all-"
+                                 "dropped fallback is global across K); "
+                                 "set sim.dropout_rate = 0.0")
+            n = sharding_specs.mesh_axis_size(mesh,
+                                              sharding_specs.data_axes(mesh))
+            self._k_quantum = max(2, int(n))
+            self.chunk_fn = make_fl_rounds_scan_sharded(
+                lambda p, b: cnn.loss_fn(model_cfg, p, b, impl=impl),
+                local_lr=sim.local_lr, local_steps=sim.local_steps,
+                batch_size=sim.batch_size, server_lr=sim.server_lr,
+                mesh=mesh)
+        else:
+            self.chunk_fn = make_fl_rounds_scan(
+                lambda p, b: cnn.loss_fn(model_cfg, p, b, impl=impl),
+                local_lr=sim.local_lr, local_steps=sim.local_steps,
+                batch_size=sim.batch_size, server_lr=sim.server_lr,
+                dropout_rate=sim.dropout_rate, fused_quality=fused_quality,
+                compression=compression, server_opt=self._server_opt)
         self._init_eval(model_cfg, test, sim, impl=impl)
 
     def _k_pad(self, k: int) -> int:
         """Padded client axis for a segment whose largest subset has k
         clients: next multiple of 2 (fewer distinct compile shapes),
-        capped at pad_subset_to but never below k."""
+        capped at pad_subset_to but never below k — then, in
+        mesh-sharded mode, rounded up to a multiple of the data-axis
+        size (each shard takes K/n client slots)."""
         pad = -(-k // 2) * 2
         if self.pad_subset_to is not None:
             pad = min(pad, self.pad_subset_to)
-        return max(pad, k)
+        pad = max(pad, k)
+        if self._k_quantum > 2:
+            pad = -(-pad // self._k_quantum) * self._k_quantum
+        return pad
+
+    def place_on(self, device_index: int) -> None:
+        """``ServiceScheduler`` placement hook (docs/placement.md): move
+        the server state, staged dataset and eval cache to
+        ``jax.devices()[device_index]``. Committed inputs make every
+        later ``chunk_fn`` dispatch execute on that device, so tenants
+        placed on different devices compute concurrently. No-op in
+        mesh-sharded mode — the sharded scan already spans devices."""
+        if self._mesh is not None:
+            return
+        dev = jax.devices()[device_index]
+        self.params = jax.device_put(self.params, dev)
+        if self.opt_state is not None:
+            self.opt_state = jax.device_put(self.opt_state, dev)
+        self.data = jax.device_put(self.data, dev)
+        self.base_key = jax.device_put(self.base_key, dev)
+        self._test_images = jax.device_put(self._test_images, dev)
+        self._test_labels = jax.device_put(self._test_labels, dev)
 
     def _segment(self, sizes: list[int]) -> list[int]:
         """Optimal consecutive segmentation of one chunk (DP): minimize

@@ -42,7 +42,18 @@ export JAX_DEFAULT_DTYPE_BITS="${JAX_DEFAULT_DTYPE_BITS:-32}"
 
 # One host device unless the caller is experimenting with host-device
 # sharding; step markers at the outer loop keep profiles readable.
+# REPRO_HOST_DEVICES=N forces N virtual CPU devices (the placement
+# fabric's multi-device tests/benches use 8 — docs/placement.md); it
+# wins over any device-count flag already present in XLA_FLAGS.
 export XLA_FLAGS="${XLA_FLAGS:---xla_force_host_platform_device_count=1}"
+if [[ -n "${REPRO_HOST_DEVICES:-}" ]]; then
+  _flags=""
+  for _f in $XLA_FLAGS; do
+    [[ "$_f" == --xla_force_host_platform_device_count=* ]] && continue
+    _flags="${_flags:+$_flags }$_f"
+  done
+  export XLA_FLAGS="${_flags:+$_flags }--xla_force_host_platform_device_count=${REPRO_HOST_DEVICES}"
+fi
 
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
